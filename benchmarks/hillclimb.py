@@ -1,0 +1,140 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimbing driver: re-lower chosen cells with candidate changes
+and record hypothesis -> change -> before/after roofline terms.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb [--cell N]
+
+Appends iterations to benchmarks/results/perf_iterations.json.
+"""
+import argparse
+import json
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import dryrun  # noqa: E402
+from repro.configs.base import MoEConfig  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "results",
+                   "perf_iterations.json")
+
+# (cell, variant-name, hypothesis, cfg_patch, sc_patch)
+EXPERIMENTS = [
+    # --- Cell A: mixtral decode_32k — the paper-representative two-tier
+    #     paged-KV cell; memory-bound on KV page reads.
+    ("mixtral-8x22b|decode_32k", "baseline",
+     "paper-faithful bf16 two-pool paged KV", None, None),
+    ("mixtral-8x22b|decode_32k", "int8_kv",
+     "int8-quantized KV pools halve page-read bytes => memory term ~-45%",
+     None, {"kv_dtype": "int8"}),
+    ("mixtral-8x22b|decode_32k", "int8_kv+hbm75",
+     "larger tier-1 (hbm_fraction .75) shifts reads from tier-2: same HLO "
+     "bytes on CPU sim but fewer tier-2 (host-link) reads at runtime; "
+     "measure structural delta", None,
+     {"kv_dtype": "int8", "hbm_fraction": 0.75}),
+    # --- Extension: worst decode cells (MHA KV / flagship).
+    ("stablelm-3b|decode_32k", "baseline",
+     "MHA (kv=32) KV pools dominate decode bytes", None, None),
+    ("stablelm-3b|decode_32k", "int8_kv",
+     "int8 KV halves the MHA page reads", None, {"kv_dtype": "int8"}),
+    ("stablelm-3b|decode_32k", "int8_kv+no_fsdp",
+     "5.6 GB of params fit without FSDP: kills the per-token weight "
+     "all-gathers on top of int8 KV",
+     {"fsdp": False}, {"kv_dtype": "int8"}),
+    ("llama3-405b|decode_32k", "baseline",
+     "flagship decode: KV reads + per-token FSDP gathers", None, None),
+    ("llama3-405b|decode_32k", "int8_kv",
+     "int8 KV halves 2.2 TB of global KV reads", None, {"kv_dtype": "int8"}),
+    # --- Cell B: mistral-nemo train_4k — most collective-bound cell.
+    ("mistral-nemo-12b|train_4k", "baseline",
+     "FSDP over data: per-layer weight all-gathers dominate collectives",
+     None, None),
+    ("mistral-nemo-12b|train_4k", "no_fsdp",
+     "12B fits without data-sharding (TP-sharded params ~9 GB/chip incl. "
+     "f32 adam): dropping FSDP kills fwd+bwd weight gathers => collective "
+     "term ~-60%", {"fsdp": False}, None),
+    ("mistral-nemo-12b|train_4k", "no_fsdp+bf16opt",
+     "bf16 adam moments halve optimizer HBM so no_fsdp also fits "
+     "comfortably; no effect on roofline terms (control)",
+     {"fsdp": False, "opt_state_dtype": "bfloat16"}, None),
+    ("mistral-nemo-12b|train_4k", "bf16_tp_psum",
+     "collectives are TP activation psums in f32 (refuted-FSDP finding): "
+     "bf16 wire on attention/MLP partial reductions => collective ~-50%",
+     {"tp_reduce_dtype": "bfloat16"}, None),
+    ("mistral-nemo-12b|train_4k", "bf16_tp_psum+no_fsdp",
+     "compose both: bf16 psums + no FSDP gathers",
+     {"tp_reduce_dtype": "bfloat16", "fsdp": False}, None),
+    ("grok-1-314b|train_4k", "cf1.0+bf16psum",
+     "compose: cf1.0 + bf16 TP psums (MoE combine psum is f32 and large)",
+     {"moe": MoEConfig(n_experts=8, top_k=2, capacity_factor=1.0),
+      "tp_reduce_dtype": "bfloat16"}, None),
+    # --- Cell C: grok-1 train_4k — worst useful-FLOPs MoE cell.
+    ("grok-1-314b|train_4k", "baseline",
+     "MoE capacity factor 1.25 pads expert matmuls by 25%", None, None),
+    ("grok-1-314b|train_4k", "cf1.0",
+     "capacity_factor 1.0 cuts expert GEMM flops+bytes ~20% (more drops, "
+     "acceptable with aux loss)",
+     {"moe": MoEConfig(n_experts=8, top_k=2, capacity_factor=1.0)}, None),
+    ("grok-1-314b|train_4k", "cf1.0+accum2",
+     "2 microbatches: halves activation peak; gathers x2 => collective "
+     "term up — quantify the memory/collective trade", 
+     {"moe": MoEConfig(n_experts=8, top_k=2, capacity_factor=1.0)}, None),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter")
+    args = ap.parse_args()
+
+    results = []
+    if os.path.exists(OUT):
+        results = json.load(open(OUT))
+    done = {(r["cell"], r["variant"]) for r in results}
+
+    for cell, variant, hypothesis, cfg_patch, sc_patch in EXPERIMENTS:
+        if args.only and args.only not in f"{cell}:{variant}":
+            continue
+        if (cell, variant) in done:
+            print(f"[cached] {cell} {variant}")
+            continue
+        arch, shape = cell.split("|")
+        print(f"[run] {cell} :: {variant}", flush=True)
+        kw = {}
+        if variant.endswith("accum2"):
+            # accum handled through TrainHyper — patch dryrun's default
+            from repro.training import train_step as ts_mod
+            import repro.launch.spmd as spmd_mod
+            from repro.training.train_step import TrainHyper
+            orig = spmd_mod.build_train_step
+            def patched(cfg, mesh, hyper=TrainHyper()):
+                import dataclasses as dc
+                return orig(cfg, mesh, dc.replace(hyper, accum_steps=2))
+            spmd_mod.build_train_step = patched
+            dryrun.spmd.build_train_step = patched
+        try:
+            rec = dryrun.run_cell(arch, shape, False,
+                                  cfg_patch=cfg_patch, sc_patch=sc_patch)
+        finally:
+            if variant.endswith("accum2"):
+                spmd_mod.build_train_step = orig
+                dryrun.spmd.build_train_step = orig
+        row = {"cell": cell, "variant": variant, "hypothesis": hypothesis,
+               **{k: rec.get(k) for k in (
+                   "status", "dominant", "roofline_frac", "t_compute_s",
+                   "t_memory_s", "t_collective_s", "useful_flops_frac",
+                   "hlo_flops", "hlo_bytes_accessed",
+                   "collective_wire_bytes_total", "compile_s")}}
+        if rec.get("status") == "error":
+            row["error"] = rec.get("error")
+        results.append(row)
+        json.dump(results, open(OUT, "w"), indent=1)
+        print(f"[done] {variant}: dom={row.get('dominant')} "
+              f"tc={row.get('t_compute_s')} tm={row.get('t_memory_s')} "
+              f"tcoll={row.get('t_collective_s')}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

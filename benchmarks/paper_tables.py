@@ -1,0 +1,209 @@
+"""One benchmark per paper table/figure (reproduction evidence).
+
+Each function returns a list of CSV rows ``(name, us_per_call, derived)``;
+``derived`` carries the table's headline quantity. Full outputs are also
+dumped to benchmarks/results/*.json for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core.device_models import (
+    PAPER_HDD_READ, PAPER_HDD_WRITE, PAPER_NVME_READ, PAPER_NVME_WRITE,
+    fit_hdd_model, fit_nvme_model,
+)
+from repro.core.queuing import TwoTierModel, service_time_model
+from repro.core.traffic import irm_stream, poisson_stream
+from repro.storage.tier2 import Tier1Sim, Tier2Sim
+from repro.storage.tiered_store import StoreConfig, run_stream
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _dump(name: str, obj) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(obj, f, indent=1)
+
+
+def _time_stream(cfg: StoreConfig, pages, writes) -> tuple[dict, float]:
+    fn = jax.jit(lambda p, w: run_stream(cfg, p, w))
+    st = fn(pages, writes)
+    jax.block_until_ready(st.misses)  # compile
+    t0 = time.perf_counter()
+    st = fn(pages, writes)
+    jax.block_until_ready(st.misses)
+    dt = time.perf_counter() - t0
+    return st, dt / len(pages) * 1e6  # us per request
+
+
+def tables_v_vi_online_learning() -> list[tuple]:
+    """Tables V & VI: cache misses for LRU / LFU / WS on Poisson and IRM
+    traffic (1 process, 64 lines), plus WS decision time."""
+    rows = []
+    out = {}
+    for kind, gen in (("poisson", poisson_stream), ("irm", irm_stream)):
+        table = []
+        for n in (500, 1000, 2500, 5000, 10000):
+            pages, writes = gen(n, 256, seed=1)
+            rec = {"reqs": n}
+            for pol in ("lru", "lfu", "ws"):
+                st, us = _time_stream(
+                    StoreConfig(n_lines=64, policy=pol), pages, writes)
+                rec[pol] = int(st.misses)
+                if pol == "ws":
+                    rec["ws_us_per_req"] = round(us, 3)
+                    rows.append((f"table{'V' if kind=='poisson' else 'VI'}"
+                                 f"_{kind}_n{n}", round(us, 3),
+                                 f"lru={rec['lru']};lfu={rec['lfu']};"
+                                 f"ws={rec['ws']}"))
+            table.append(rec)
+        out[kind] = table
+    _dump("tables_v_vi", out)
+    return rows
+
+
+def fig3_miss_rate_vs_cache_size() -> list[tuple]:
+    """Fig. 3: capacity-miss rate vs cache size, 1 process, random reads."""
+    pages, writes = poisson_stream(4000, 512, seed=0, decay_tau=1e9)
+    rows = []
+    curve = []
+    for n_lines in (16, 32, 64, 128, 256, 512):
+        st, us = _time_stream(StoreConfig(n_lines=n_lines, policy="lru"),
+                              pages, writes)
+        mr = float(st.miss_rate)
+        curve.append({"cache_lines": n_lines, "miss_rate": mr})
+        rows.append((f"fig3_lines{n_lines}", round(us, 3),
+                     f"miss_rate={mr:.4f}"))
+    # monotone non-increasing check (capacity misses)
+    mrs = [c["miss_rate"] for c in curve]
+    assert all(a >= b - 1e-9 for a, b in zip(mrs, mrs[1:])), mrs
+    _dump("fig3", curve)
+    return rows
+
+
+def tables_i_ii_nvme_models() -> list[tuple]:
+    """Tables I & II: NVMe write/read regression recovery."""
+    rows = []
+    out = {}
+    for read, paper in ((False, PAPER_NVME_WRITE), (True, PAPER_NVME_READ)):
+        t0 = time.perf_counter()
+        m = fit_nvme_model(read=read)
+        us = (time.perf_counter() - t0) * 1e6
+        rec = dict(zip(m.fit.term_names(), m.fit.coef))
+        errs = {k: abs(rec[k] - v) / abs(v)
+                for k, v in paper.items() if k != "(Intercept)"
+                and k in rec and abs(v) > 0}
+        key = "nvme_read" if read else "nvme_write"
+        out[key] = {
+            "r2": m.fit.r2, "aic": m.fit.aic, "cv_rmse": m.cv_rmse,
+            "dominant_term_rel_err": {
+                k: errs[k] for k in ("x1:x3:x4", "x3:x4:x5")},
+            "coef": {k: float(v) for k, v in rec.items()},
+        }
+        rows.append((f"table{'II' if read else 'I'}_{key}", round(us, 1),
+                     f"r2={m.fit.r2:.4f};x1x3x4_err="
+                     f"{errs['x1:x3:x4']:.3f};x3x4x5_err={errs['x3:x4:x5']:.3f}"))
+    _dump("tables_i_ii", out)
+    return rows
+
+
+def tables_iii_iv_hdd_models() -> list[tuple]:
+    """Tables III & IV: HDD write/read regression recovery."""
+    rows = []
+    out = {}
+    for read, paper in ((False, PAPER_HDD_WRITE), (True, PAPER_HDD_READ)):
+        t0 = time.perf_counter()
+        m = fit_hdd_model(read=read)
+        us = (time.perf_counter() - t0) * 1e6
+        rec = dict(zip(m.fit.term_names(), m.fit.coef))
+        keys = ("x3", "x3:x4", "x1:x5") if read else ("x5", "x1:x5", "x2:x5")
+        errs = {k: abs(rec[k] - paper[k]) / abs(paper[k]) for k in keys}
+        key = "hdd_read" if read else "hdd_write"
+        out[key] = {"r2": m.fit.r2, "aic": m.fit.aic, "cv_rmse": m.cv_rmse,
+                    "sig_term_rel_err": errs,
+                    "coef": {k: float(v) for k, v in rec.items()}}
+        rows.append((f"table{'IV' if read else 'III'}_{key}", round(us, 1),
+                     f"r2={m.fit.r2:.4f};" + ";".join(
+                         f"{k}_err={v:.3f}" for k, v in errs.items())))
+    _dump("tables_iii_iv", out)
+    return rows
+
+
+def section_v_worked_example() -> list[tuple]:
+    """§V worked example: the queuing model's published numbers."""
+    t0 = time.perf_counter()
+    m = TwoTierModel(lam=100, mu1=1000, mu2=33, p12=0.2, k=1)
+    s = m.analyze().summary()
+    t = m.time_for(2500)
+    us = (time.perf_counter() - t0) * 1e6
+    _dump("worked_example", {**s, **t})
+    return [("secV_worked_example", round(us, 1),
+             f"lam_eff={s['lam_eff']:.1f};rho1={s['rho1']:.4f};"
+             f"rho2={s['rho2']:.3f};T={t['arrival_window_s']:.1f}s")]
+
+
+def tables_vii_ix_strong_scaling() -> list[tuple]:
+    """Tables VII-IX: strong-scaling predictions from eqs. 1-4 + device
+    models (workload1 = low reuse/miss-bound; workload2 = high reuse)."""
+    rows = []
+    out = {}
+    t1 = Tier1Sim(n_client_threads=16, request_size=512)
+    # Misses are page-grain tier-2 fetches: ~every distinct page is fetched
+    # once (cold) + an eviction factor when the working set stresses the
+    # cache. workload1 touches 229376 pages (~112 GB), workload2 32768.
+    for wl, (n_req, n_pages, evict_factor) in {
+        "workload1": (5_000_000, 229_376, 2.0),  # low reuse, cache-stressed
+        "workload2": (8_000_000, 32_768, 1.0),   # high reuse, fits tier 1
+    }.items():
+        tab = []
+        for procs in (16, 32, 64, 128, 200):
+            t2 = Tier2Sim(n_processes=procs, stripe_count=8,
+                          stripe_size=524288, file_size=400 << 30)
+            per_proc = n_req / procs
+            n_miss = n_pages * evict_factor / procs  # stripes per process
+            mu1 = t1.mu1(read=True, n_requests=per_proc)
+            mu2 = t2.mu2(read=True, n_stripes=max(n_miss, 1.0))
+            st = service_time_model(
+                n_read=[per_proc], n_write=[0], n_miss=[n_miss],
+                mu1_read=mu1, mu1_write=mu1, mu2=mu2,
+            )
+            tab.append({"procs": procs, "t_hit_s": float(st.t_hit[0]),
+                        "t_miss_s": float(st.t_miss[0]),
+                        "response_s": float(st.t_total),
+                        "bound": "miss" if st.t_miss[0] > st.t_hit[0]
+                        else "hit"})
+        out[wl] = tab
+        # headline: does the model reproduce the paper's regimes?
+        # workload1: miss(HDD)-bound at scale; workload2: strong-scales.
+        first, last = tab[0]["response_s"], tab[-1]["response_s"]
+        rows.append((f"tableVII_IX_{wl}", 0.0,
+                     f"resp16={first:.1f}s;resp200={last:.1f}s;"
+                     f"bound={tab[-1]['bound']}"))
+    _dump("tables_vii_ix", out)
+    return rows
+
+
+def fig10_read_throughput() -> list[tuple]:
+    """Fig. 10: read throughput vs process count (tiered, model-driven)."""
+    t1 = Tier1Sim(n_client_threads=16, request_size=128)
+    rows = []
+    curve = []
+    n_pages = (20 << 30) // 524288  # 2M 128-byte reads over 20 GB of pages
+    for procs in (4, 8, 16, 32, 64, 128):
+        n_req = 2_000_000 / procs
+        mu1 = t1.mu1(read=True, n_requests=n_req)
+        t2 = Tier2Sim(n_processes=procs)
+        n_miss = n_pages / procs  # cold page fetches, split across caches
+        mu2 = t2.mu2(read=True, n_stripes=max(n_miss, 1))
+        t_total = max(n_req / mu1, n_miss / mu2)
+        thr = 2_000_000 / t_total / 1e6  # Mreq/s aggregate
+        curve.append({"procs": procs, "throughput_mreq_s": thr})
+        rows.append((f"fig10_procs{procs}", 0.0, f"thr={thr:.3f}Mreq/s"))
+    _dump("fig10", curve)
+    return rows

@@ -1,0 +1,50 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun.json."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def main(path: str = "benchmarks/results/dryrun.json") -> None:
+    d = json.load(open(path))
+    cells = sorted({k.rsplit("|", 1)[0] for k in d})
+
+    print("### Dry-run matrix (lower+compile status, 16x16 and 2x16x16)\n")
+    print("| arch | shape | pod1 | pod2 | peak GB/dev (pod1) | compile s |")
+    print("|---|---|---|---|---|---|")
+    for c in cells:
+        arch, shape = c.split("|")
+        r1 = d.get(c + "|pod1", {})
+        r2 = d.get(c + "|pod2", {})
+        mem = r1.get("memory", {})
+        peak = (mem.get("argument_size_in_bytes", 0)
+                + mem.get("temp_size_in_bytes", 0)) / 1e9
+        print(f"| {arch} | {shape} | {r1.get('status','-')} "
+              f"| {r2.get('status','-')} | {peak:.1f} "
+              f"| {r1.get('compile_s','-')} |")
+
+    print("\n### Roofline (single-pod 16x16, per device per step)\n")
+    print("| arch | shape | t_compute | t_memory | t_coll | dominant "
+          "| MODEL/HLO flops | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for c in cells:
+        r = d.get(c + "|pod1", {})
+        if r.get("status") != "ok":
+            continue
+        arch, shape = c.split("|")
+        print(f"| {arch} | {shape} | {r['t_compute_s']:.3g} "
+              f"| {r['t_memory_s']:.3g} | {r['t_collective_s']:.3g} "
+              f"| **{r['dominant']}** | {r['useful_flops_frac']:.2f} "
+              f"| {r['roofline_frac']:.3f} |")
+
+    skips = [(k, v) for k, v in sorted(d.items())
+             if v.get("status") == "skipped" and k.endswith("pod1")]
+    if skips:
+        print("\nSkipped cells (documented):")
+        for k, v in skips:
+            print(f"- `{k[:-5]}`: {v['reason']}")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,56 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows; detailed JSON lands in
+benchmarks/results/. The dry-run / roofline cells (deliverables e+g) are
+produced by ``python -m repro.launch.dryrun`` (long-running) and summarized
+here if the results file exists.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import paper_tables as pt  # noqa: E402
+
+
+def _dryrun_summary() -> list[tuple]:
+    path = os.path.join(os.path.dirname(__file__), "results", "dryrun.json")
+    if not os.path.exists(path):
+        return [("dryrun", 0.0, "not-run (python -m repro.launch.dryrun)")]
+    with open(path) as f:
+        d = json.load(f)
+    ok = sum(1 for r in d.values() if r.get("status") == "ok")
+    sk = sum(1 for r in d.values() if r.get("status") == "skipped")
+    er = sum(1 for r in d.values() if r.get("status") == "error")
+    rows = [("dryrun_cells", 0.0, f"ok={ok};skipped={sk};error={er}")]
+    for k in sorted(d):
+        r = d[k]
+        if r.get("status") == "ok" and k.endswith("pod1"):
+            rows.append((
+                f"roofline_{k[:-5]}", 0.0,
+                f"dom={r['dominant']};frac={r['roofline_frac']:.3f};"
+                f"tc={r['t_compute_s']:.3g};tm={r['t_memory_s']:.3g};"
+                f"tcoll={r['t_collective_s']:.3g}"))
+    return rows
+
+
+def main() -> None:
+    rows: list[tuple] = []
+    rows += pt.section_v_worked_example()
+    rows += pt.tables_i_ii_nvme_models()
+    rows += pt.tables_iii_iv_hdd_models()
+    rows += pt.fig3_miss_rate_vs_cache_size()
+    rows += pt.tables_v_vi_online_learning()
+    rows += pt.tables_vii_ix_strong_scaling()
+    rows += pt.fig10_read_throughput()
+    rows += _dryrun_summary()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""repro: two-tiered storage for JAX/TPU training & serving.
+
+Reproduction + TPU-native extension of "Performance Models for a Two-tiered
+Storage System" (Sasidharan et al., CS.DC 2025).
+"""
+__version__ = "0.1.0"

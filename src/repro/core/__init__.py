@@ -1,0 +1,14 @@
+"""Core contribution of the paper: OL cache replacement, traffic models,
+mapping policies, prefetchers, queuing-network and device behavioral models.
+
+``configurator`` is imported lazily (it depends on the storage layer).
+"""
+from repro.core import (  # noqa: F401
+    device_models,
+    mapping,
+    online_learning,
+    prefetch,
+    queuing,
+    roofline,
+    traffic,
+)

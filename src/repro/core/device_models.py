@@ -1,0 +1,307 @@
+"""Behavioral device models via interaction-term regression (paper §V-A/V-B).
+
+The paper models total IO time of each device class with a linear regression
+whose *interaction terms* capture load distribution, concurrency and device
+internals (R formula syntax):
+
+- NVMe  (eq. 8):  ``Y ~ X1*X3*X4 + X5*X4*X3``
+  X1 = client threads, X3 = request size, X4 = #requests, X5 = address range.
+  Significant: ``X1:X3:X4`` (per-thread load) and ``X3:X4:X5`` (page faults +
+  garbage collection) — Tables I–II.
+- HDD   (eq. 9):  ``Y ~ X3*X4 + X5*X1*X2``
+  X1 = processes, X2 = stripe count (disks), X3 = stripes/disk,
+  X4 = stripe size, X5 = file size. Significant: ``X5``, ``X5:X1``,
+  ``X5:X2``, ``X5:X1:X2`` (communication) and ``X3`` — Tables III–IV.
+
+This module provides: R-style formula expansion into a design matrix, OLS
+with standard errors / t-values / p-values / AIC (matching R's ``lm``
+summary columns), K-fold cross-validation (paper: K=20), and **simulated
+device measurement campaigns** standing in for the paper's 400 NVMe / 200
+HDD experiments on Delta (no NVMe/HDD in this container — the devices are
+simulated with behavioral ground truth + noise; the regression machinery is
+identical and the recovered significance *structure* is compared to the
+paper's tables in the benchmarks).
+
+The fitted rates feed :mod:`repro.core.queuing` (μ1, μ2) and the tier-2
+simulator (:mod:`repro.storage.tier2`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Callable, Sequence
+
+import numpy as np
+
+try:  # p-values via Student-t; scipy is available in this environment.
+    from scipy import stats as _sstats
+except Exception:  # pragma: no cover
+    _sstats = None
+
+__all__ = [
+    "expand_formula",
+    "design_matrix",
+    "OLSFit",
+    "fit_ols",
+    "kfold_cv",
+    "NVME_TERMS",
+    "HDD_TERMS",
+    "PAPER_NVME_WRITE",
+    "PAPER_NVME_READ",
+    "PAPER_HDD_WRITE",
+    "PAPER_HDD_READ",
+    "simulate_nvme",
+    "simulate_hdd",
+    "fit_nvme_model",
+    "fit_hdd_model",
+    "DeviceModel",
+]
+
+
+# ---------------------------------------------------------------------------
+# R-style formula expansion: "x1*x3*x4 + x5*x4*x3" -> unique terms.
+# ---------------------------------------------------------------------------
+
+
+def expand_formula(formula: str) -> list[tuple[str, ...]]:
+    """Expand an R-style formula RHS into unique interaction terms.
+
+    ``a*b*c`` expands to all non-empty subsets {a, b, c, a:b, a:c, b:c,
+    a:b:c}; ``+`` unions term sets (dedup, order preserved by first
+    appearance). Returns tuples of variable names (1-tuples = main effects).
+    """
+    terms: list[tuple[str, ...]] = []
+    seen = set()
+    for prod in formula.replace(" ", "").split("+"):
+        vars_ = prod.split("*")
+        for r in range(1, len(vars_) + 1):
+            for combo in itertools.combinations(vars_, r):
+                key = tuple(sorted(combo))
+                if key not in seen:
+                    seen.add(key)
+                    terms.append(key)
+    return terms
+
+
+def design_matrix(
+    data: dict[str, np.ndarray], terms: Sequence[tuple[str, ...]]
+) -> np.ndarray:
+    """[n, 1+len(terms)] design matrix with intercept column first."""
+    n = len(next(iter(data.values())))
+    cols = [np.ones(n)]
+    for t in terms:
+        col = np.ones(n)
+        for v in t:
+            col = col * np.asarray(data[v], float)
+        cols.append(col)
+    return np.stack(cols, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# OLS with the R `summary(lm)` columns.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OLSFit:
+    terms: tuple[tuple[str, ...], ...]
+    coef: np.ndarray       # [p] incl. intercept at index 0
+    stderr: np.ndarray
+    tvalues: np.ndarray
+    pvalues: np.ndarray
+    aic: float
+    r2: float
+    sigma2: float
+    n: int
+
+    def term_names(self) -> list[str]:
+        return ["(Intercept)"] + [":".join(t) for t in self.terms]
+
+    def predict(self, data: dict[str, np.ndarray]) -> np.ndarray:
+        return design_matrix(data, self.terms) @ self.coef
+
+    def significant(self, alpha: float = 1e-3) -> list[str]:
+        names = self.term_names()
+        return [names[i] for i in range(len(names)) if self.pvalues[i] < alpha]
+
+    def table(self) -> str:
+        rows = ["term                 estimate     stderr     t       p"]
+        for name, c, se, t, p in zip(
+            self.term_names(), self.coef, self.stderr, self.tvalues, self.pvalues
+        ):
+            rows.append(f"{name:<20} {c: .3e} {se: .3e} {t: 7.2f} {p: .3e}")
+        rows.append(f"AIC={self.aic:.1f}  R2={self.r2:.4f}  n={self.n}")
+        return "\n".join(rows)
+
+
+def fit_ols(
+    data: dict[str, np.ndarray], y: np.ndarray, formula: str
+) -> OLSFit:
+    terms = tuple(expand_formula(formula))
+    X = design_matrix(data, terms)
+    n, p = X.shape
+    coef, *_ = np.linalg.lstsq(X, y, rcond=None)
+    resid = y - X @ coef
+    rss = float(resid @ resid)
+    dof = max(n - p, 1)
+    sigma2 = rss / dof
+    xtx_inv = np.linalg.pinv(X.T @ X)
+    stderr = np.sqrt(np.maximum(np.diag(xtx_inv) * sigma2, 1e-300))
+    tvals = coef / stderr
+    if _sstats is not None:
+        pvals = 2.0 * _sstats.t.sf(np.abs(tvals), dof)
+    else:  # normal approximation
+        pvals = 2.0 * 0.5 * np.erfc(np.abs(tvals) / math.sqrt(2))
+    tss = float(((y - y.mean()) ** 2).sum())
+    r2 = 1.0 - rss / max(tss, 1e-300)
+    # R's AIC for gaussian lm: n*log(2*pi*rss/n) + n + 2*(p+1)
+    aic = n * math.log(2 * math.pi * rss / n) + n + 2 * (p + 1)
+    return OLSFit(terms, coef, stderr, tvals, pvals, aic, r2, sigma2, n)
+
+
+def kfold_cv(
+    data: dict[str, np.ndarray],
+    y: np.ndarray,
+    formula: str,
+    k: int = 20,
+    seed: int = 0,
+) -> float:
+    """K-fold cross-validated RMSE (paper uses K=20 to reduce over-fitting)."""
+    n = len(y)
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(n)
+    folds = np.array_split(idx, k)
+    sq = 0.0
+    for f in folds:
+        mask = np.ones(n, bool)
+        mask[f] = False
+        train = {v: a[mask] for v, a in data.items()}
+        test = {v: a[f] for v, a in data.items()}
+        fit = fit_ols(train, y[mask], formula)
+        pred = fit.predict(test)
+        sq += float(((pred - y[f]) ** 2).sum())
+    return math.sqrt(sq / n)
+
+
+# ---------------------------------------------------------------------------
+# Simulated measurement campaigns (the container has no NVMe/HDD).
+# Ground truth mirrors the paper's *findings* so the regression should
+# recover the same significance structure.
+# ---------------------------------------------------------------------------
+
+NVME_FORMULA = "x1*x3*x4 + x5*x4*x3"  # eq. 8
+HDD_FORMULA = "x3*x4 + x5*x1*x2"      # eq. 9
+NVME_TERMS = expand_formula(NVME_FORMULA)
+HDD_TERMS = expand_formula(HDD_FORMULA)
+
+# Ground-truth coefficients = the paper's own fitted estimates (Tables I–IV).
+# The simulated "device" IS the paper's behavioral model plus measurement
+# noise, so the regression benchmark can check *recovery* of both the
+# coefficients and the significance structure against the published tables.
+PAPER_NVME_WRITE = {  # Table I
+    "(Intercept)": -5.941, "x1": 6.252e-1, "x3": -6.326e-5, "x4": 3.726e-5,
+    "x5": 6.213e-11, "x1:x3": 1.667e-6, "x1:x4": -8.464e-7, "x3:x4": -1.650e-9,
+    "x4:x5": 2.029e-16, "x3:x5": -6.564e-16, "x1:x3:x4": 1.973e-10,
+    "x3:x4:x5": 1.103e-20,
+}
+PAPER_NVME_READ = {  # Table II
+    "(Intercept)": -6.059, "x1": 2.182e-2, "x3": 1.009e-4, "x4": -3.566e-6,
+    "x5": 6.963e-11, "x1:x3": -2.066e-7, "x1:x4": -1.165e-8, "x3:x4": -4.060e-10,
+    "x4:x5": 1.259e-16, "x3:x5": -2.984e-15, "x1:x3:x4": -6.675e-12,
+    "x3:x4:x5": 1.896e-20,
+}
+PAPER_HDD_WRITE = {  # Table III
+    "(Intercept)": 7.297, "x3": 4.318e-4, "x4": -4.354e-6, "x5": 1.002e-8,
+    "x1": 3.869e-1, "x2": 6.664, "x3:x4": 2.007e-11, "x1:x5": -7.486e-11,
+    "x2:x5": -9.269e-10, "x1:x2": -9.916e-2, "x1:x2:x5": 8.344e-12,
+}
+PAPER_HDD_READ = {  # Table IV
+    "(Intercept)": -3.771e-1, "x3": 5.913e-4, "x4": -1.584e-6, "x2": 8.933,
+    "x1": -2.563, "x5": 6.274e-10, "x3:x4": 1.715e-8, "x1:x2": 3.694e-1,
+    "x2:x5": -2.272e-10, "x1:x5": -4.751e-11, "x1:x2:x5": 5.167e-12,
+}
+
+
+def _truth(data: dict[str, np.ndarray], coefs: dict[str, float]) -> np.ndarray:
+    n = len(next(iter(data.values())))
+    y = np.full(n, coefs.get("(Intercept)", 0.0))
+    for name, c in coefs.items():
+        if name == "(Intercept)":
+            continue
+        col = np.ones(n)
+        for v in name.split(":"):
+            col = col * data[v]
+        y = y + c * col
+    return y
+
+
+def simulate_nvme(
+    n_exp: int = 400, *, read: bool, seed: int = 0, noise: float = 0.05
+) -> tuple[dict[str, np.ndarray], np.ndarray]:
+    """Simulated NVMe campaign over the paper's §V-A training ranges.
+
+    Response = the paper's fitted model (Table I/II) + gaussian noise with
+    ``noise`` * sd(signal).
+    """
+    rng = np.random.default_rng(seed + (1 if read else 0))
+    x1 = rng.choice([8, 16, 32, 64], n_exp).astype(float)           # threads
+    x3 = rng.choice([512, 4096, 8192, 65536, 262144], n_exp).astype(float)
+    x4 = np.exp(rng.uniform(np.log(1e3), np.log(4e6), n_exp))       # #requests
+    x5 = np.exp(rng.uniform(np.log(5e8), np.log(5e11), n_exp))      # addr range
+    x2 = np.minimum(x5 / x3, x4)                                    # distinct blocks
+    data = dict(x1=x1, x2=x2, x3=x3, x4=x4, x5=x5)
+    y = _truth(data, PAPER_NVME_READ if read else PAPER_NVME_WRITE)
+    y = y + rng.normal(0.0, noise * y.std(), n_exp)
+    return data, y
+
+
+def simulate_hdd(
+    n_exp: int = 200, *, read: bool, seed: int = 0, noise: float = 0.05
+) -> tuple[dict[str, np.ndarray], np.ndarray]:
+    """Simulated parallel-HDF5-on-Lustre campaign over the §V-B ranges.
+
+    Response = the paper's fitted model (Table III/IV) + gaussian noise.
+    """
+    rng = np.random.default_rng(seed + (10 if read else 11))
+    x1 = rng.choice([4, 8, 16, 32, 64, 128, 200], n_exp).astype(float)  # procs
+    x2 = rng.choice([1, 2, 4, 8], n_exp).astype(float)                  # disks
+    x4 = np.exp(rng.uniform(np.log(65536), np.log(6.4e7), n_exp))       # stripe
+    x5 = np.exp(rng.uniform(np.log(1e8), np.log(3.5e11), n_exp))        # file
+    x3 = np.maximum(x5 / (x4 * x2), 1.0)                                # stripes/disk
+    data = dict(x1=x1, x2=x2, x3=x3, x4=x4, x5=x5)
+    y = _truth(data, PAPER_HDD_READ if read else PAPER_HDD_WRITE)
+    y = y + rng.normal(0.0, noise * y.std(), n_exp)
+    return data, y
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceModel:
+    """A fitted device behavioral model usable as a queuing service rate."""
+
+    fit: OLSFit
+    kind: str  # nvme_read | nvme_write | hdd_read | hdd_write
+    cv_rmse: float
+
+    def total_time(self, **xs: float) -> float:
+        data = {k: np.asarray([v], float) for k, v in xs.items()}
+        return float(self.fit.predict(data)[0])
+
+    def service_rate(self, n_requests: float, **xs: float) -> float:
+        """Mean requests/sec implied by the model (μ for queuing)."""
+        t = self.total_time(x4=n_requests, **xs)
+        return n_requests / max(t, 1e-9)
+
+
+def fit_nvme_model(*, read: bool, n_exp: int = 400, seed: int = 0) -> DeviceModel:
+    data, y = simulate_nvme(n_exp, read=read, seed=seed)
+    fit = fit_ols(data, y, NVME_FORMULA)
+    cv = kfold_cv(data, y, NVME_FORMULA, k=20, seed=seed)
+    return DeviceModel(fit, "nvme_read" if read else "nvme_write", cv)
+
+
+def fit_hdd_model(*, read: bool, n_exp: int = 200, seed: int = 0) -> DeviceModel:
+    data, y = simulate_hdd(n_exp, read=read, seed=seed)
+    fit = fit_ols(data, y, HDD_FORMULA)
+    cv = kfold_cv(data, y, HDD_FORMULA, k=20, seed=seed)
+    return DeviceModel(fit, "hdd_read" if read else "hdd_write", cv)

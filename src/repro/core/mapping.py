@@ -1,0 +1,82 @@
+"""Page -> shard mapping policies (paper §III).
+
+The paper distributes pages across MPI processes with round-robin, random,
+block and block-cyclic policies; the policy is chosen from the correlation
+structure of the workload ("random mapping will provide good load balance
+... block mapping will minimize inter process communication for exclusively
+accessed pages").
+
+Here a *shard* is a device slice of the mesh ``model`` axis (tier-1 page
+pools live in per-device HBM). All maps are pure jittable int32 -> int32
+functions so they can run inside shard_map'd engines and Pallas index maps.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+__all__ = ["page_to_shard", "MAPPING_POLICIES", "shard_load"]
+
+# Knuth multiplicative hash constant (fits in uint32).
+_HASH_MULT = jnp.uint32(2654435761)
+
+
+def _round_robin(page: jnp.ndarray, n_shards: int, n_pages: int) -> jnp.ndarray:
+    del n_pages
+    return (page % n_shards).astype(jnp.int32)
+
+
+def _random(page: jnp.ndarray, n_shards: int, n_pages: int) -> jnp.ndarray:
+    del n_pages
+    h = (page.astype(jnp.uint32) * _HASH_MULT) >> jnp.uint32(16)
+    return (h % jnp.uint32(n_shards)).astype(jnp.int32)
+
+
+def _block(page: jnp.ndarray, n_shards: int, n_pages: int) -> jnp.ndarray:
+    block = -(-n_pages // n_shards)  # ceil
+    return jnp.clip(page // block, 0, n_shards - 1).astype(jnp.int32)
+
+
+def _block_cyclic(
+    page: jnp.ndarray, n_shards: int, n_pages: int, block: int = 8
+) -> jnp.ndarray:
+    del n_pages
+    return ((page // block) % n_shards).astype(jnp.int32)
+
+
+MAPPING_POLICIES: dict[str, Callable[..., jnp.ndarray]] = {
+    "round_robin": _round_robin,
+    "random": _random,
+    "block": _block,
+    "block_cyclic": _block_cyclic,
+}
+
+
+def page_to_shard(
+    page: jnp.ndarray,
+    n_shards: int,
+    n_pages: int,
+    policy: str = "block",
+    **kw,
+) -> jnp.ndarray:
+    """Map page numbers to owning shard ids under ``policy``.
+
+    ``page`` may be any int array; returns int32 of the same shape.
+    """
+    try:
+        fn = MAPPING_POLICIES[policy]
+    except KeyError:
+        raise ValueError(
+            f"unknown mapping policy {policy!r}; options: {sorted(MAPPING_POLICIES)}"
+        ) from None
+    return fn(page, n_shards, n_pages, **kw)
+
+
+def shard_load(
+    pages: jnp.ndarray, n_shards: int, n_pages: int, policy: str, **kw
+) -> jnp.ndarray:
+    """Request count per shard for a page stream — the load-balance metric the
+    paper uses to choose between policies (§III)."""
+    owner = page_to_shard(pages, n_shards, n_pages, policy, **kw)
+    return jnp.bincount(owner, length=n_shards)

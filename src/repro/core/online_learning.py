@@ -1,0 +1,154 @@
+"""Weight-sharing online learning for cache replacement (paper §III-A).
+
+Implements Algorithms 1 (GetVictim) and 2 (WeightSharing: Weight Adjust):
+
+- Three low-overhead experts — **LRU** (timestamps), **LFU** (frequency
+  counters) and **Random** — each propose an eviction victim readable
+  directly from the current cache state.
+- The expert with the highest probability is chosen (Algorithm 1); every
+  expert's proposal is recorded in its *prediction vector* for the epoch.
+- A miss on a page present in expert *i*'s prediction vector is a
+  **misprediction** for *i* (the expert evicted / would have evicted a page
+  that was re-requested within the epoch).
+- Every ``EPOCH_WIDTH`` iterations the weights are adjusted: experts whose
+  misprediction count reaches ``THRESHOLD * miss_count`` are penalized
+  multiplicatively (``w_i <- w_i * beta^{l_i}``) and the total lost weight is
+  shared back (``w_i <- w_i + alpha * mean_lost``), after which weights are
+  normalized into probabilities. Prediction vectors are cleared each epoch
+  "to avoid mixing history from distant past".
+
+Note on the paper's pseudocode: Algorithm 2 writes
+``weights[i] = weights[i] - weights[i] * d`` with ``d = beta^l``, which for a
+*perfect* expert (``l = 0``, ``d = 1``) would zero its weight — the opposite
+of the intended penalty and inconsistent with the cited weighted-majority /
+weight-share literature [50], [54] (Blum & Burch). We implement the intended
+multiplicative update ``w_i <- w_i * beta^{l_i}`` (beta < 1: more
+mispredictions => smaller weight), followed by the paper's alpha-sharing and
+normalization. The paper's defaults are EPOCH_WIDTH=4 and THRESHOLD=0.25.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "EXPERTS",
+    "OLConfig",
+    "OLState",
+    "init_ol",
+    "propose_victims",
+    "choose_expert",
+    "record_predictions",
+    "note_miss",
+    "weight_adjust",
+    "probabilities",
+]
+
+# Expert order is part of the public contract (indices used in stats/tests).
+EXPERTS: tuple[str, ...] = ("lru", "lfu", "random")
+N_EXPERTS = len(EXPERTS)
+
+
+class OLConfig(NamedTuple):
+    epoch_width: int = 4      # iterations per epoch (paper §III-A)
+    alpha: float = 0.5        # weight-share rate
+    beta: float = 0.7         # multiplicative penalty base (< 1)
+    threshold: float = 0.25   # ignore experts below threshold*miss_count
+    pred_cap: int = 64        # prediction-vector ring capacity per expert
+
+
+class OLState(NamedTuple):
+    weights: jnp.ndarray       # f32[E]
+    pred: jnp.ndarray          # int32[E, C] evicted pages this epoch (-1 empty)
+    pred_n: jnp.ndarray        # int32[E] ring write cursor
+    mispred: jnp.ndarray       # int32[E]
+    epoch_misses: jnp.ndarray  # int32[1] misses in current epoch
+    chosen: jnp.ndarray        # int32[1] expert used for the last eviction
+    # (1-element arrays, not scalars: every leaf keeps a leading dim so
+    # device-local learner state shards cleanly under shard_map.)
+
+
+def init_ol(cfg: OLConfig) -> OLState:
+    return OLState(
+        weights=jnp.ones((N_EXPERTS,), jnp.float32) / N_EXPERTS,
+        pred=jnp.full((N_EXPERTS, cfg.pred_cap), -1, jnp.int32),
+        pred_n=jnp.zeros((N_EXPERTS,), jnp.int32),
+        mispred=jnp.zeros((N_EXPERTS,), jnp.int32),
+        epoch_misses=jnp.zeros((1,), jnp.int32),
+        chosen=jnp.zeros((1,), jnp.int32),
+    )
+
+
+def probabilities(weights: jnp.ndarray) -> jnp.ndarray:
+    s = jnp.sum(weights)
+    return jnp.where(s > 0, weights / s, jnp.full_like(weights, 1.0 / N_EXPERTS))
+
+
+def propose_victims(cache, key: jax.Array, pinned=None) -> jnp.ndarray:
+    """Each expert's victim line index, int32[E] = [lru, lfu, random].
+
+    Decisions are computed "by reading the current cache state" (§III-A):
+    LRU = oldest timestamp, LFU = lowest frequency, Random = uniform over
+    valid lines. Invalid lines are excluded (callers only evict when full,
+    but the masking makes the proposals total functions). ``pinned`` marks
+    lines that must not be evicted (e.g. in-flight pages of active
+    sequences — the paper's single-writer lock on lines in service).
+    """
+    ok = cache.valid if pinned is None else (cache.valid & ~pinned)
+    big = jnp.iinfo(jnp.int32).max
+    ts = jnp.where(ok, cache.ts, big)
+    fq = jnp.where(ok, cache.freq, big)
+    lru = jnp.argmin(ts).astype(jnp.int32)
+    lfu = jnp.argmin(fq).astype(jnp.int32)
+    noise = jax.random.uniform(key, cache.tags.shape)
+    rnd = jnp.argmax(jnp.where(ok, noise, -1.0)).astype(jnp.int32)
+    return jnp.stack([lru, lfu, rnd])
+
+
+def choose_expert(ol: OLState, policy_idx: int | None = None) -> jnp.ndarray:
+    """Algorithm 1: highest-probability expert (or a fixed expert when the
+    store is configured with a single policy for baseline runs)."""
+    if policy_idx is not None:
+        return jnp.asarray(policy_idx, jnp.int32)
+    return jnp.argmax(probabilities(ol.weights)).astype(jnp.int32)
+
+
+def record_predictions(ol: OLState, cfg: OLConfig, victim_pages: jnp.ndarray) -> OLState:
+    """Append each expert's proposed victim page to its prediction ring."""
+    slot = ol.pred_n % cfg.pred_cap
+    pred = ol.pred.at[jnp.arange(N_EXPERTS), slot].set(victim_pages.astype(jnp.int32))
+    return ol._replace(pred=pred, pred_n=ol.pred_n + 1)
+
+
+def note_miss(ol: OLState, page: jnp.ndarray) -> OLState:
+    """Count the miss and any expert mispredictions it reveals (Algorithm 2's
+    ``p in pred[i]`` scan, done online)."""
+    hit_pred = jnp.any(ol.pred == page, axis=1)  # bool[E]
+    return ol._replace(
+        mispred=ol.mispred + hit_pred.astype(jnp.int32),
+        epoch_misses=ol.epoch_misses + 1,
+    )
+
+
+def weight_adjust(ol: OLState, cfg: OLConfig) -> OLState:
+    """Algorithm 2 epoch-boundary update (see module docstring)."""
+    thresh = cfg.threshold * ol.epoch_misses[0].astype(jnp.float32)
+    losses = jnp.where(
+        ol.mispred.astype(jnp.float32) >= thresh, ol.mispred, 0
+    ).astype(jnp.float32)
+    prev = ol.weights
+    w = prev * jnp.power(jnp.float32(cfg.beta), losses)
+    shared = jnp.mean(prev - w)  # total lost weight / n
+    w = w + jnp.float32(cfg.alpha) * shared
+    # Guard against total collapse, then renormalize.
+    w = jnp.maximum(w, 1e-8)
+    w = w / jnp.sum(w)
+    return ol._replace(
+        weights=w,
+        pred=jnp.full_like(ol.pred, -1),
+        pred_n=jnp.zeros_like(ol.pred_n),
+        mispred=jnp.zeros_like(ol.mispred),
+        epoch_misses=jnp.zeros_like(ol.epoch_misses),
+    )

@@ -1,0 +1,164 @@
+"""IO request prefetchers (paper §III, §II).
+
+Two categories per the paper: **stream identifiers** (constant strides
+computed from differences between miss addresses) and **Markov chains**
+(transition tables over recent pages — "better at recognizing non-trivial
+sequences than stream identifiers").
+
+Prefetched pages land in a separate prefetch buffer that follows the same
+mapping function as the cache; misses first probe the buffer and, on a hit,
+promote the page to the cache (§III). Prefetching happens only when the
+buffer has empty slots, and "page misses are prioritized over prefetches".
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "PrefetchState",
+    "init_prefetch",
+    "probe_and_promote",
+    "observe_miss",
+    "issue_prefetches",
+    "MarkovState",
+    "init_markov",
+    "markov_observe",
+    "markov_predict",
+]
+
+
+class PrefetchState(NamedTuple):
+    """Prefetch buffer + stream-identifier state."""
+
+    ptags: jnp.ndarray      # int32[B] page ids in the buffer (-1 empty)
+    pvalid: jnp.ndarray     # bool[B]
+    last_miss: jnp.ndarray  # int32[] previous miss page
+    stride: jnp.ndarray     # int32[] current candidate stride
+    conf: jnp.ndarray       # int32[] consecutive confirmations of stride
+    issued: jnp.ndarray     # int32[] total prefetches issued (stat)
+    useful: jnp.ndarray     # int32[] prefetch-buffer hits (stat)
+
+
+def init_prefetch(buf_size: int) -> PrefetchState:
+    z = jnp.zeros((), jnp.int32)
+    return PrefetchState(
+        ptags=jnp.full((buf_size,), -1, jnp.int32),
+        pvalid=jnp.zeros((buf_size,), bool),
+        last_miss=jnp.full((), -1, jnp.int32),
+        stride=z,
+        conf=z,
+        issued=z,
+        useful=z,
+    )
+
+
+def probe_and_promote(pf: PrefetchState, page: jnp.ndarray):
+    """On a cache miss, look for ``page`` in the prefetch buffer. If found it
+    is *removed* (promotion to the cache happens in the store engine).
+
+    Returns ``(pf, found)``.
+    """
+    match = pf.pvalid & (pf.ptags == page)
+    found = jnp.any(match)
+    pvalid = jnp.where(match, False, pf.pvalid)
+    return (
+        pf._replace(pvalid=pvalid, useful=pf.useful + found.astype(jnp.int32)),
+        found,
+    )
+
+
+def observe_miss(pf: PrefetchState, page: jnp.ndarray) -> PrefetchState:
+    """Stream identifier: track differences between consecutive miss pages;
+    two equal consecutive deltas confirm a stride."""
+    delta = page - pf.last_miss
+    same = (delta == pf.stride) & (pf.last_miss >= 0) & (delta != 0)
+    conf = jnp.where(same, pf.conf + 1, jnp.where(delta != 0, 1, pf.conf))
+    stride = jnp.where(same, pf.stride, jnp.where(delta != 0, delta, pf.stride))
+    return pf._replace(last_miss=page, stride=stride, conf=conf)
+
+
+def issue_prefetches(
+    pf: PrefetchState,
+    page: jnp.ndarray,
+    cache_tags: jnp.ndarray,
+    cache_valid: jnp.ndarray,
+    width: int,
+) -> PrefetchState:
+    """Insert up to ``width`` predicted pages (page + k*stride) into empty
+    buffer slots, skipping pages already cached or buffered.
+
+    Static-shape: iterates ``width`` candidates with a fori_loop, each doing a
+    masked single-slot insert — mirrors "prefetching is performed only if
+    there are empty slots in the prefetch buffer".
+    """
+    active = pf.conf >= 2
+
+    def body(k, pf_):
+        cand = page + (k + 1) * pf_.stride
+        in_cache = jnp.any(cache_valid & (cache_tags == cand))
+        in_buf = jnp.any(pf_.pvalid & (pf_.ptags == cand))
+        free = ~pf_.pvalid
+        has_free = jnp.any(free)
+        do = active & has_free & ~in_cache & ~in_buf & (cand >= 0)
+        slot = jnp.argmax(free).astype(jnp.int32)
+        ptags = jnp.where(do, pf_.ptags.at[slot].set(cand), pf_.ptags)
+        pvalid = jnp.where(do, pf_.pvalid.at[slot].set(True), pf_.pvalid)
+        return pf_._replace(
+            ptags=ptags, pvalid=pvalid, issued=pf_.issued + do.astype(jnp.int32)
+        )
+
+    return jax.lax.fori_loop(0, width, body, pf)
+
+
+# ---------------------------------------------------------------------------
+# Markov-chain prefetcher (first order, hashed state table) — §II [12], [40].
+# ---------------------------------------------------------------------------
+
+
+class MarkovState(NamedTuple):
+    succ: jnp.ndarray   # int32[S, K] successor pages per hashed state
+    count: jnp.ndarray  # int32[S, K] transition counts
+    prev: jnp.ndarray   # int32[] previous page (-1 at start)
+
+
+def _hash_state(page: jnp.ndarray, n_states: int) -> jnp.ndarray:
+    h = page.astype(jnp.uint32) * jnp.uint32(2654435761)
+    return ((h >> jnp.uint32(8)) % jnp.uint32(n_states)).astype(jnp.int32)
+
+
+def init_markov(n_states: int = 256, k: int = 4) -> MarkovState:
+    return MarkovState(
+        succ=jnp.full((n_states, k), -1, jnp.int32),
+        count=jnp.zeros((n_states, k), jnp.int32),
+        prev=jnp.full((), -1, jnp.int32),
+    )
+
+
+def markov_observe(mk: MarkovState, page: jnp.ndarray) -> MarkovState:
+    """Record transition prev -> page in the hashed table (LFU slot steal)."""
+    n_states = mk.succ.shape[0]
+    s = _hash_state(mk.prev, n_states)
+    row_succ = mk.succ[s]
+    row_cnt = mk.count[s]
+    match = row_succ == page
+    found = jnp.any(match)
+    slot = jnp.where(found, jnp.argmax(match), jnp.argmin(row_cnt)).astype(jnp.int32)
+    new_succ = row_succ.at[slot].set(page)
+    new_cnt = jnp.where(found, row_cnt.at[slot].add(1), row_cnt.at[slot].set(1))
+    do = mk.prev >= 0
+    succ = jnp.where(do, mk.succ.at[s].set(new_succ), mk.succ)
+    count = jnp.where(do, mk.count.at[s].set(new_cnt), mk.count)
+    return MarkovState(succ=succ, count=count, prev=page)
+
+
+def markov_predict(mk: MarkovState, page: jnp.ndarray, top: int = 2) -> jnp.ndarray:
+    """Most probable next pages from the current state (int32[top], -1 pad)."""
+    s = _hash_state(page, mk.succ.shape[0])
+    row_succ, row_cnt = mk.succ[s], mk.count[s]
+    order = jnp.argsort(-row_cnt)
+    cand = row_succ[order][:top]
+    cnt = row_cnt[order][:top]
+    return jnp.where(cnt > 0, cand, -1)

@@ -1,0 +1,227 @@
+"""Queuing-network performance model of the two-tier store (paper §V).
+
+Implements equations 1–7 plus the standard M/M/1, M/M/k and (Allen–Cunneen
+approximate) M/G/k building blocks, and the paper's worked example.
+
+The network (Fig. 5): read/write requests arrive at tier 1 at rate λ; hits
+exit via the k-server RPC pool (M/G/k, service rate μ1); misses (fraction
+``p12``) enter the single IO-thread queue (M/M/1, service rate μ2) and
+re-enter tier 1 when serviced. The system is analyzable at equilibrium
+(all utilization ratios < 1).
+
+Two conventions for the *effective arrival rate* at the k-server queue:
+
+- ``flow="paper"`` reproduces §V's worked example, which feeds the miss
+  traffic back at rate ``p12 * μ2``  (λ_eff = (1-p12)·λ + p12·μ2; gives
+  λ_eff = 86.6 for the example).
+- ``flow="conserving"`` uses flow conservation at equilibrium (the miss
+  queue's throughput equals its arrival rate): λ_eff = (1-p12)·λ + p12·λ = λ.
+
+Everything is plain float math (no tracing requirement) with jnp-compatible
+vector forms where useful for sweeps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal, NamedTuple
+
+import numpy as np
+
+__all__ = [
+    "ServiceTimes",
+    "service_time_model",
+    "system_service_rate",
+    "mm1_queue",
+    "mmk_queue",
+    "mgk_queue",
+    "QueueMetrics",
+    "TwoTierModel",
+    "TwoTierReport",
+]
+
+
+# ---------------------------------------------------------------------------
+# Equations 1–4: total service time (non-equilibrium / minimum-time model).
+# ---------------------------------------------------------------------------
+
+
+class ServiceTimes(NamedTuple):
+    t_hit: np.ndarray   # T_h_i per process (eq. 1)
+    t_miss: np.ndarray  # T_m_i per process (eq. 2)
+    t_proc: np.ndarray  # T_i = max(T_h, T_m) per process (eq. 3)
+    t_total: float      # T = max_i T_i (eq. 4)
+
+
+def service_time_model(
+    n_read: np.ndarray,
+    n_write: np.ndarray,
+    n_miss: np.ndarray,
+    mu1_read: float,
+    mu1_write: float,
+    mu2: float,
+) -> ServiceTimes:
+    """Equations 1–4. Inputs are per-process request/miss counts."""
+    n_read = np.asarray(n_read, float)
+    n_write = np.asarray(n_write, float)
+    n_miss = np.asarray(n_miss, float)
+    t_hit = n_read / mu1_read + n_write / mu1_write
+    t_miss = n_miss / mu2
+    t_proc = np.maximum(t_hit, t_miss)
+    return ServiceTimes(t_hit, t_miss, t_proc, float(np.max(t_proc)))
+
+
+def system_service_rate(mu1: float, mu2: float, p12: float) -> float:
+    """Equation 5: harmonic composition of tier service rates."""
+    inv = (1.0 - p12) / mu1 + p12 / mu2
+    return 1.0 / inv
+
+
+# ---------------------------------------------------------------------------
+# Queue primitives.
+# ---------------------------------------------------------------------------
+
+
+class QueueMetrics(NamedTuple):
+    rho: float      # utilization (per-server for k-server queues)
+    p0: float       # probability of an empty system
+    lq: float       # expected queue length (waiting)
+    l: float        # expected number in system
+    wq: float       # expected waiting time
+    w: float        # expected time in system
+    stable: bool
+
+
+def mm1_queue(lam: float, mu: float) -> QueueMetrics:
+    """M/M/1 (paper eq. 7 uses Lq = rho^2/(1-rho))."""
+    rho = lam / mu
+    if rho >= 1.0:
+        return QueueMetrics(rho, 0.0, math.inf, math.inf, math.inf, math.inf, False)
+    lq = rho * rho / (1.0 - rho)
+    l = rho / (1.0 - rho)
+    return QueueMetrics(rho, 1.0 - rho, lq, l, lq / lam, l / lam, True)
+
+
+def _mmk_p0(a: float, k: int) -> float:
+    """P0 for M/M/k with offered load a = lam/mu (paper cites [42])."""
+    s = sum(a**i / math.factorial(i) for i in range(k))
+    s += a**k / (math.factorial(k) * (1.0 - a / k))
+    return 1.0 / s
+
+
+def mmk_queue(lam: float, mu: float, k: int) -> QueueMetrics:
+    """M/M/k. Paper eq. 6: L1 = P0 * a^(k+1) / ((k-1)! (k-a)^2), a = lam/mu."""
+    a = lam / mu
+    rho = a / k
+    if rho >= 1.0:
+        return QueueMetrics(rho, 0.0, math.inf, math.inf, math.inf, math.inf, False)
+    p0 = _mmk_p0(a, k)
+    lq = p0 * a ** (k + 1) / (math.factorial(k - 1) * (k - a) ** 2)
+    l = lq + a
+    return QueueMetrics(rho, p0, lq, l, lq / lam, l / lam, True)
+
+
+def mgk_queue(lam: float, mean_s: float, var_s: float, k: int) -> QueueMetrics:
+    """M/G/k via the Allen–Cunneen approximation:
+    Lq(M/G/k) ≈ Lq(M/M/k) * (1 + C_s^2) / 2, C_s^2 = var/mean^2.
+
+    The paper derives its tier-1 queue "using the mean and variance of the
+    read/write service (hit) time distribution" — this is that model.
+    """
+    mu = 1.0 / mean_s
+    base = mmk_queue(lam, mu, k)
+    if not base.stable:
+        return base
+    cs2 = var_s / (mean_s * mean_s)
+    scale = (1.0 + cs2) / 2.0
+    lq = base.lq * scale
+    l = lq + lam * mean_s
+    return QueueMetrics(base.rho, base.p0, lq, l, lq / lam, l / lam, True)
+
+
+# ---------------------------------------------------------------------------
+# The composed two-tier model (Fig. 5 + eqs. 5–7).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoTierModel:
+    """Per-process two-tier queuing network.
+
+    lam:  workload request arrival rate (reqs/sec per process)
+    mu1:  tier-1 hit service rate (per RPC server; includes RPC + sync costs)
+    mu2:  tier-2 miss service rate (IO thread + HDD)
+    p12:  miss rate (fraction of requests forwarded to tier 2)
+    k:    RPC service threads per process (k-server queue)
+    var_s1: variance of tier-1 service time (M/G/k); 0 => exponential M/M/k
+    """
+
+    lam: float
+    mu1: float
+    mu2: float
+    p12: float
+    k: int = 1
+    var_s1: float = 0.0
+    flow: Literal["paper", "conserving"] = "paper"
+
+    def effective_arrival(self) -> float:
+        """Arrival rate at the k-server (tier-1) queue."""
+        if self.flow == "paper":
+            # §V worked example: misses re-enter at rate p12 * mu2.
+            return (1.0 - self.p12) * self.lam + self.p12 * self.mu2
+        return self.lam
+
+    def analyze(self) -> "TwoTierReport":
+        lam_eff = self.effective_arrival()
+        # Tier-1 k-server queue (M/M/k or M/G/k).
+        if self.var_s1 > 0:
+            q1 = mgk_queue(lam_eff, 1.0 / self.mu1, self.var_s1, self.k)
+        else:
+            q1 = mmk_queue(lam_eff, self.mu1, self.k)
+        # Tier-2 M/M/1 miss queue (eq. 7).
+        lam_miss = self.p12 * self.lam
+        q2 = mm1_queue(lam_miss, self.mu2)
+        mu_sys = system_service_rate(self.mu1, self.mu2, self.p12)
+        return TwoTierReport(
+            model=self,
+            lam_eff=lam_eff,
+            q1=q1,
+            q2=q2,
+            mu_system=mu_sys,
+            rho_system=self.lam / mu_sys,
+            equilibrium=q1.stable and q2.stable,
+        )
+
+    def time_for(self, n_requests: int) -> dict[str, float]:
+        """§V worked example: wall time for ``n_requests`` arrivals plus the
+        pure response time (all requests at tier-1 service rate)."""
+        lam_eff = self.effective_arrival()
+        return {
+            "arrival_window_s": n_requests / lam_eff,
+            "response_time_s": n_requests / self.mu1,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoTierReport:
+    model: TwoTierModel
+    lam_eff: float
+    q1: QueueMetrics
+    q2: QueueMetrics
+    mu_system: float
+    rho_system: float
+    equilibrium: bool
+
+    def summary(self) -> dict[str, float]:
+        return {
+            "lam_eff": self.lam_eff,
+            "rho1": self.q1.rho * self.model.k,  # offered load a = lam/mu
+            "rho2": self.q2.rho,
+            "L1": self.q1.lq,
+            "W1": self.q1.wq,
+            "L2": self.q2.lq,
+            "W2": self.q2.wq,
+            "mu_system": self.mu_system,
+            "rho_system": self.rho_system,
+            "equilibrium": float(self.equilibrium),
+        }

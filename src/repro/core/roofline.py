@@ -1,0 +1,418 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_wire_bytes / (chips × link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``. Collective bytes are
+parsed from the HLO text: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute contributes its *wire* bytes under ring
+scheduling (factors below), divided by the number of participating devices
+(per-chip link traffic).
+
+Hardware model (TPU v5e-class, per chip): 197 bf16 TFLOP/s, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+__all__ = ["HW", "CollectiveStats", "collective_bytes", "roofline_report"]
+
+HW = dict(
+    peak_flops=197e12,   # bf16 per chip
+    hbm_bw=819e9,        # bytes/s per chip
+    link_bw=50e9,        # bytes/s per ICI link
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# output-shape -> wire-bytes multiplier under ring schedules with group size n
+# (expressed as a function of n; see e.g. the collective cost models in XLA).
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(tok: str) -> int:
+    m = _SHAPE_RE.match(tok)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    b = _DTYPE_BYTES.get(dt)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)  # replica_groups=[G,N] iota form
+    if m:
+        return int(m.group(2))
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0
+    by_kind: Optional[dict] = None
+    count: int = 0
+
+    def __post_init__(self):
+        if self.by_kind is None:
+            self.by_kind = {}
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum per-chip wire bytes of every collective op in an HLO module.
+
+    Ring-schedule factors on the *output* shape S with group size n:
+      all-gather:          S · (n-1)/n         (each chip receives S·(n-1)/n)
+      reduce-scatter:      S · (n-1)           (input = S·n, sends (n-1) shards)
+      all-reduce:          2 · S · (n-1)/n     (RS + AG)
+      all-to-all:          S · (n-1)/n
+      collective-permute:  S
+    """
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        eq = stripped.find("=")
+        if eq < 0:
+            continue
+        kind = None
+        pos = -1
+        for k in _COLL_KINDS:
+            for suffix in ("(", "-start("):
+                p = stripped.find(" " + k + suffix)
+                if p > eq:
+                    kind, pos = k, p
+                    break
+            if kind:
+                break
+        if kind is None:
+            continue
+        # Output type(s) sit between "=" and the op name (layouts ignored).
+        out_tok = stripped[eq + 1: pos]
+        out_bytes = sum(_shape_bytes(t) for t in
+                        re.findall(r"\w+\[[\d,]*\]", out_tok))
+        n = _group_size(stripped)
+        if kind == "all-gather":
+            wire = out_bytes * (n - 1) / max(n, 1)
+        elif kind == "reduce-scatter":
+            wire = out_bytes * (n - 1)
+        elif kind == "all-reduce":
+            wire = 2.0 * out_bytes * (n - 1) / max(n, 1)
+        elif kind == "all-to-all":
+            wire = out_bytes * (n - 1) / max(n, 1)
+        else:  # collective-permute
+            wire = float(out_bytes)
+        st.wire_bytes += wire
+        st.by_kind[kind] = st.by_kind.get(kind, 0.0) + wire
+        st.count += 1
+    return st
+
+
+_BLOCK_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_WHILE_RE = re.compile(r"while\(.*?\).*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def module_collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Collective wire bytes for a whole HLO module, multiplying collectives
+    inside ``while`` bodies (lax.scan layers) by their trip counts.
+
+    Trip counts are recovered from the loop condition's integer constant
+    (XLA canonicalizes scan conditions to ``iter < constant(N)``).
+    """
+    blocks: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _BLOCK_HDR.match(line.strip())
+        if m:
+            cur = m.group(2)
+            blocks[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                blocks[cur].append(line)
+
+    def trip_count(cond_name: str) -> int:
+        consts = [int(c) for ln in blocks.get(cond_name, ())
+                  for c in _CONST_RE.findall(ln)]
+        return max(consts) if consts else 1
+
+    memo: dict[str, CollectiveStats] = {}
+
+    def total(name: str, depth=0) -> CollectiveStats:
+        if name in memo:
+            return memo[name]
+        st = collective_bytes("\n".join(blocks.get(name, ())))
+        if depth < 8:
+            for ln in blocks.get(name, ()):
+                w = _WHILE_RE.search(ln)
+                if w:
+                    cond, body = w.groups()
+                    inner = total(body, depth + 1)
+                    n = trip_count(cond)
+                    st.wire_bytes += n * inner.wire_bytes
+                    st.count += n * inner.count
+                    for k, v in inner.by_kind.items():
+                        st.by_kind[k] = st.by_kind.get(k, 0.0) + n * v
+        memo[name] = st
+        return st
+
+    if entry is None:
+        return collective_bytes(hlo_text)
+    # Also include non-entry computations reachable via call/fusion? XLA
+    # inlines collectives into the entry/while graph post-optimization, so
+    # entry + while bodies cover them.
+    out = total(entry)
+    return out
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[\w\[\],]+(?:\{[\d,]*\})?)\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_SKIP_BYTES = {"get-tuple-element", "tuple", "parameter", "constant",
+               "bitcast", "after-all", "custom-call"}
+
+# Ops whose outputs hit HBM under TPU-class fusion (elementwise/broadcast/
+# reshape chains fuse into their consumers and stay in VMEM/registers).
+_MAJOR_OPS = {
+    "dot", "convolution", "fusion", "copy", "gather", "scatter",
+    "dynamic-update-slice", "dynamic-slice", "concatenate", "pad", "sort",
+    "reduce", "reduce-window", "all-gather", "all-reduce", "reduce-scatter",
+    "all-to-all", "collective-permute", "rng", "rng-bit-generator", "cumsum",
+}
+
+
+def _shape_dims(tok: str):
+    m = _SHAPE_RE.match(tok)
+    if not m:
+        return None, 0
+    dt, dims = m.groups()
+    b = _DTYPE_BYTES.get(dt, 0)
+    out = [int(d) for d in dims.split(",") if d]
+    return out, b
+
+
+def hlo_cost(hlo_text: str) -> dict:
+    """Trip-count-corrected FLOPs / HBM-bytes estimate from HLO text.
+
+    XLA's ``compiled.cost_analysis()`` counts while-loop (lax.scan) bodies
+    exactly once, which undercounts layer-scanned models by ~n_layers. This
+    walker counts per-computation dot FLOPs (2·M·N·K; fusion-internal dots
+    included) and fusion-boundary bytes (operand + output sizes of top-level
+    ops), then multiplies while bodies by their trip counts — the same
+    computation-graph traversal as :func:`module_collective_bytes`.
+    """
+    blocks: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _BLOCK_HDR.match(line.strip())
+        if m:
+            cur = m.group(2)
+            blocks[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                blocks[cur].append(line)
+
+    # Pass 1 per block: symbol table name -> (dims, bytes).
+    sym: dict[str, tuple] = {}
+    for name, lines in blocks.items():
+        for ln in lines:
+            s = ln.strip()
+            dm = _DEF_RE.match(s)
+            if not dm:
+                continue
+            rest = s[s.find("=") + 1:]
+            shapes = re.findall(r"\w+\[[\d,]*\]", rest.split("(")[0])
+            dims_total = 0
+            by = 0
+            dims = None
+            for t in shapes:
+                d, eb = _shape_dims(t)
+                if d is None:
+                    continue
+                n = 1
+                for x in d:
+                    n *= x
+                by += n * eb
+                dims = d if dims is None else dims
+            sym[dm.group(1)] = (dims, by)
+
+    def trip_count(cond_name: str) -> int:
+        consts = [int(c) for ln in blocks.get(cond_name, ())
+                  for c in _CONST_RE.findall(ln)]
+        return max(consts) if consts else 1
+
+    def dot_flops(line: str) -> float:
+        """2*M*N*K from output dims x contract size (lhs operand shape)."""
+        s = line.strip()
+        out_dims, _ = sym.get(_DEF_RE.match(s).group(1), (None, 0))
+        if out_dims is None:
+            return 0.0
+        out_n = 1
+        for d in out_dims:
+            out_n *= d
+        # contraction size: from the lhs operand's dims + contracting spec
+        ops = _OPERAND_RE.findall(s.split("(", 1)[1]) if "(" in s else []
+        cm = _CDIMS_RE.search(s)
+        k = 1
+        if ops and cm:
+            lhs_dims, _ = sym.get(ops[0], (None, 0))
+            if lhs_dims:
+                for ci in cm.group(1).split(","):
+                    if ci:
+                        i = int(ci)
+                        if i < len(lhs_dims):
+                            k *= lhs_dims[i]
+        return 2.0 * out_n * k
+
+    # FLOPs inside a computation, *without* loop multiplication (fusion
+    # bodies counted at their call sites).
+    flops_memo: dict[str, float] = {}
+
+    def block_dot_flops(name: str, depth=0) -> float:
+        if name in flops_memo:
+            return flops_memo[name]
+        total = 0.0
+        for ln in blocks.get(name, ()):
+            s = ln.strip()
+            om = _OPCODE_RE.search(s)
+            op = om.group(1) if om else None
+            if op == "dot":
+                total += dot_flops(ln)
+            elif op == "fusion" and depth < 6:
+                cm = _CALLS_RE.search(s)
+                if cm:
+                    total += block_dot_flops(cm.group(1), depth + 1)
+        flops_memo[name] = total
+        return total
+
+    def block_bytes(name: str) -> float:
+        """HBM traffic estimate for a TPU-class compiler: elementwise chains
+        fuse into neighbouring matmuls, so only *major* producers write HBM
+        (dots, fusions, copies, gathers/scatters, collectives, reductions).
+        Each such output is written once and read ~once => 2x output bytes.
+        The raw all-ops sum (CPU HLO materializes every intermediate) is
+        tracked separately as ``bytes_all`` for comparison.
+        """
+        total = 0.0
+        for ln in blocks.get(name, ()):
+            s = ln.strip()
+            dm = _DEF_RE.match(s)
+            om = _OPCODE_RE.search(s)
+            if not dm or not om:
+                continue
+            op = om.group(1)
+            if op not in _MAJOR_OPS:
+                continue
+            _, out_b = sym.get(dm.group(1), (None, 0))
+            total += 2.0 * out_b
+        return total
+
+    def block_bytes_all(name: str) -> float:
+        total = 0.0
+        for ln in blocks.get(name, ()):
+            s = ln.strip()
+            dm = _DEF_RE.match(s)
+            om = _OPCODE_RE.search(s)
+            if not dm or not om:
+                continue
+            op = om.group(1)
+            if op in _SKIP_BYTES or op == "while":
+                continue
+            _, out_b = sym.get(dm.group(1), (None, 0))
+            total += 2.0 * out_b
+        return total
+
+    def walk(name: str, depth=0) -> tuple[float, float, float]:
+        f = block_dot_flops(name)
+        b = block_bytes(name)
+        ba = block_bytes_all(name)
+        if depth < 8:
+            for ln in blocks.get(name, ()):
+                w = _WHILE_RE.search(ln)
+                if w:
+                    cond, body = w.groups()
+                    bf, bb, bba = walk(body, depth + 1)
+                    n = trip_count(cond)
+                    f += n * bf
+                    b += n * bb
+                    ba += n * bba
+        return f, b, ba
+
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "bytes_all": 0.0}
+    f, b, ba = walk(entry)
+    return {"flops": f, "bytes": b, "bytes_all": ba}
+
+
+def roofline_report(
+    *,
+    hlo_flops: float,
+    hlo_bytes: float,
+    coll: CollectiveStats,
+    chips: int,
+    model_flops: float,
+) -> dict:
+    """The §Roofline record for one (arch × shape × mesh) cell."""
+    t_compute = hlo_flops / (chips * HW["peak_flops"])
+    t_memory = hlo_bytes / (chips * HW["hbm_bw"])
+    # wire_bytes already per-chip-ish (each chip sends/receives its share of
+    # the ring); divide by link bandwidth per chip.
+    t_coll = coll.wire_bytes / (chips * HW["link_bw"])
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    useful = model_flops / hlo_flops if hlo_flops else 0.0
+    # Roofline fraction: ideal model-compute time over the binding term.
+    ideal = model_flops / (chips * HW["peak_flops"])
+    frac = ideal / bound if bound > 0 else 0.0
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops": hlo_flops,
+        "useful_flops_frac": useful,
+        "roofline_frac": frac,
+        "collective_by_kind": dict(coll.by_kind),
+        "collective_ops": coll.count,
+    }

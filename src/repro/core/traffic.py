@@ -1,0 +1,261 @@
+"""IO traffic models (paper §VI-A).
+
+The paper evaluates cache replacement under two traffic models:
+
+- **Poisson**: "the probability of a page request decreases exponentially
+  with time since its arrival" — pages have exponentially-decaying temporal
+  locality. Chosen so the sequence is *slow evolving* (LRU-friendly, §II).
+- **IRM** (Independent Reference Model): pages have fixed popularities drawn
+  from a Zipf distribution and fixed lifetimes (maximum request counts).
+  A page expires once its requests exceed the maximum and is replaced by a
+  fresh page (sharp popularity changes; LFU-friendly).
+
+Also provided: strided streams (exercise the stream-identifier prefetcher,
+§III) and Markov-chain streams (§II, [40]) for the Markov prefetcher.
+
+Generators are host-side (numpy, seeded) — traffic is an *input* to the
+jitted storage engine, mirroring the paper where clients generate requests
+outside the cache. Each generator returns ``(pages, is_write)`` int32/bool
+arrays of length ``n``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+__all__ = [
+    "TrafficSpec",
+    "poisson_stream",
+    "irm_stream",
+    "strided_stream",
+    "markov_stream",
+    "mixed_stream",
+    "make_stream",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficSpec:
+    """Declarative description of a workload (used by benchmarks/configs)."""
+
+    kind: str  # poisson | irm | strided | markov | mixed
+    n_requests: int
+    n_pages: int
+    write_fraction: float = 0.0
+    seed: int = 0
+    # poisson
+    decay_tau: float = 200.0
+    arrival_rate: float = 0.05
+    # irm
+    zipf_s: float = 1.1
+    lifetime: int = 200
+    # strided
+    stride: int = 1
+    n_streams: int = 1
+    # markov
+    n_hot_states: int = 16
+    hot_self_p: float = 0.85
+
+
+def _writes(rng: np.random.Generator, n: int, frac: float) -> np.ndarray:
+    if frac <= 0.0:
+        return np.zeros(n, dtype=bool)
+    return rng.random(n) < frac
+
+
+def poisson_stream(
+    n: int,
+    n_pages: int,
+    *,
+    decay_tau: float = 200.0,
+    arrival_rate: float = 0.05,
+    write_fraction: float = 0.0,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Poisson traffic model: exponential temporal decay since page arrival.
+
+    Pages "arrive" (become active) according to a Poisson process with rate
+    ``arrival_rate`` per step; at each step a request is drawn with
+    probability proportional to ``exp(-(t - arrival_t[p]) / decay_tau)`` over
+    active pages. ``decay_tau`` large => slow-evolving (paper's choice).
+    """
+    rng = np.random.default_rng(seed)
+    arrival_t = np.full(n_pages, np.inf)
+    # Seed a small active set so the stream is well-defined from step 0.
+    n_seed = max(1, n_pages // 16)
+    arrival_t[:n_seed] = 0.0
+    next_page = n_seed
+    pages = np.empty(n, dtype=np.int32)
+    for t in range(n):
+        # New page arrivals.
+        k = rng.poisson(arrival_rate)
+        for _ in range(k):
+            if next_page < n_pages:
+                arrival_t[next_page] = t
+                next_page += 1
+        active = np.isfinite(arrival_t)
+        w = np.exp(-(t - arrival_t[active]) / decay_tau)
+        w_sum = w.sum()
+        if w_sum <= 0:
+            w = np.ones_like(w)
+            w_sum = w.sum()
+        idx = rng.choice(np.nonzero(active)[0], p=w / w_sum)
+        pages[t] = idx
+    return pages, _writes(rng, n, write_fraction)
+
+
+def irm_stream(
+    n: int,
+    n_pages: int,
+    *,
+    zipf_s: float = 1.1,
+    lifetime: int = 200,
+    write_fraction: float = 0.0,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """IRM traffic: Zipf popularity + fixed lifetimes (max requests).
+
+    ``n_pages`` concurrent popularity *slots*; when a slot's page exceeds its
+    lifetime it expires and a brand-new page id takes over the slot (sharp
+    change in the active set, preserving the popularity distribution).
+    Page ids grow beyond ``n_pages`` as pages expire — callers should treat
+    the page id space as unbounded (the cache engine hashes tags, not ranks).
+    """
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, n_pages + 1, dtype=np.float64)
+    pop = ranks ** (-zipf_s)
+    pop /= pop.sum()
+    slot_page = np.arange(n_pages, dtype=np.int64)  # page id per slot
+    slot_count = np.zeros(n_pages, dtype=np.int64)
+    slot_life = rng.poisson(lifetime, size=n_pages).clip(min=1)
+    next_id = n_pages
+    pages = np.empty(n, dtype=np.int32)
+    slots = rng.choice(n_pages, size=n, p=pop)
+    for t, s in enumerate(slots):
+        pages[t] = slot_page[s]
+        slot_count[s] += 1
+        if slot_count[s] >= slot_life[s]:  # page expired -> fresh page
+            slot_page[s] = next_id
+            next_id += 1
+            slot_count[s] = 0
+            slot_life[s] = max(1, int(rng.poisson(lifetime)))
+    return pages, _writes(rng, n, write_fraction)
+
+
+def strided_stream(
+    n: int,
+    n_pages: int,
+    *,
+    stride: int = 1,
+    n_streams: int = 1,
+    write_fraction: float = 0.0,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Interleaved constant-stride streams (prefetcher-friendly)."""
+    rng = np.random.default_rng(seed)
+    starts = rng.integers(0, n_pages, size=n_streams)
+    pages = np.empty(n, dtype=np.int32)
+    for t in range(n):
+        s = t % n_streams
+        step = t // n_streams
+        pages[t] = (starts[s] + step * stride) % n_pages
+    return pages, _writes(rng, n, write_fraction)
+
+
+def markov_stream(
+    n: int,
+    n_pages: int,
+    *,
+    n_hot_states: int = 16,
+    hot_self_p: float = 0.85,
+    write_fraction: float = 0.0,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """First-order Markov page stream: a hot ring with occasional jumps.
+
+    From hot page ``h`` the next request is ``h+1`` in the hot ring with
+    probability ``hot_self_p``, otherwise a uniform random page. Exercises
+    the Markov prefetcher (non-strided but predictable transitions).
+    """
+    rng = np.random.default_rng(seed)
+    hot = rng.choice(n_pages, size=min(n_hot_states, n_pages), replace=False)
+    pages = np.empty(n, dtype=np.int32)
+    pos = 0
+    for t in range(n):
+        if rng.random() < hot_self_p:
+            pages[t] = hot[pos]
+            pos = (pos + 1) % len(hot)
+        else:
+            pages[t] = rng.integers(0, n_pages)
+    return pages, _writes(rng, n, write_fraction)
+
+
+def mixed_stream(
+    n: int,
+    n_pages: int,
+    *,
+    switch_every: int = 1000,
+    write_fraction: float = 0.0,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Alternate Poisson and IRM phases — the paper's motivation for OL:
+    "a mix of cache replacement algorithms will perform better for complex
+    IO traffic" (§I). Phase switches force the OL policy to re-learn.
+    """
+    rng = np.random.default_rng(seed)
+    pages = np.empty(n, dtype=np.int32)
+    t = 0
+    phase = 0
+    while t < n:
+        m = min(switch_every, n - t)
+        gen = poisson_stream if phase == 0 else irm_stream
+        p, _ = gen(m, n_pages, seed=int(rng.integers(2**31)))
+        pages[t : t + m] = p
+        t += m
+        phase ^= 1
+    return pages, _writes(rng, n, write_fraction)
+
+
+def make_stream(spec: TrafficSpec) -> tuple[np.ndarray, np.ndarray]:
+    """Build a stream from a :class:`TrafficSpec`."""
+    common = dict(
+        write_fraction=spec.write_fraction,
+        seed=spec.seed,
+    )
+    if spec.kind == "poisson":
+        return poisson_stream(
+            spec.n_requests,
+            spec.n_pages,
+            decay_tau=spec.decay_tau,
+            arrival_rate=spec.arrival_rate,
+            **common,
+        )
+    if spec.kind == "irm":
+        return irm_stream(
+            spec.n_requests,
+            spec.n_pages,
+            zipf_s=spec.zipf_s,
+            lifetime=spec.lifetime,
+            **common,
+        )
+    if spec.kind == "strided":
+        return strided_stream(
+            spec.n_requests,
+            spec.n_pages,
+            stride=spec.stride,
+            n_streams=spec.n_streams,
+            **common,
+        )
+    if spec.kind == "markov":
+        return markov_stream(
+            spec.n_requests,
+            spec.n_pages,
+            n_hot_states=spec.n_hot_states,
+            hot_self_p=spec.hot_self_p,
+            **common,
+        )
+    if spec.kind == "mixed":
+        return mixed_stream(spec.n_requests, spec.n_pages, **common)
+    raise ValueError(f"unknown traffic kind: {spec.kind!r}")

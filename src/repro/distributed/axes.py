@@ -1,0 +1,159 @@
+"""Mesh-axis context + degradable collective helpers.
+
+The whole framework runs in **manual SPMD** (shard_map): every collective is
+explicit, so the dry-run HLO contains exactly the collective schedule we
+designed (this is what makes the §Roofline collective term trustworthy and
+the §Perf iterations controllable).
+
+``Axes`` names the mesh axes a computation runs under; any axis can be
+``None`` (absent), in which case the helpers degrade to identities — the
+same model code then runs un-sharded on one device (smoke tests) or under
+any mesh slice.
+
+Convention for parameter leaves (see ``models/params.py``):
+  - stacked-layer leaves: dim0 = layer, dim1 = FSDP ("data"), last dim = TP
+    ("model") where applicable;
+  - FSDP gather (``fsdp_gather``) all-gathers dim0 of a per-layer slice;
+    its AD transpose is automatically a reduce-scatter => ZeRO-3 for free;
+  - the "pod" axis is pure data parallelism: params replicated over pods,
+    gradients explicitly ``pmean``-ed across pods (optionally int8
+    compressed, see ``training/compression.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["Axes", "SINGLE", "pvary_like", "vma_of"]
+
+
+def vma_of(x) -> frozenset:
+    """The varying-manual-axes set of a traced value (empty outside shard_map)."""
+    try:
+        return frozenset(jax.core.get_aval(x).vma)
+    except AttributeError:  # pragma: no cover - older jax
+        return frozenset()
+
+
+def pvary_like(x, ref):
+    """Promote ``x``'s varying axes to (at least) those of ``ref``.
+
+    Needed for scan carries initialized from constants under
+    ``shard_map(check_vma=True)``: the zero init is replicated while the body
+    output is device-varying; pvary is free (no communication).
+    """
+    want = vma_of(ref) - vma_of(x)
+    if not want:
+        return x
+    return jax.lax.pvary(x, tuple(sorted(want)))
+
+
+def pvary_tree(tree, names: Sequence[str]):
+    """pvary every leaf of a pytree to the given axis names (free op).
+
+    Used for device-local state (paged pools, OL learners) whose out_specs
+    declare full device variance even when the initial values are constants.
+    """
+    names = tuple(n for n in names if n)
+
+    def one(x):
+        want = tuple(sorted(set(names) - vma_of(x)))
+        return jax.lax.pvary(x, want) if want else x
+
+    return jax.tree.map(one, tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class Axes:
+    data: Optional[str] = None   # FSDP + batch axis
+    model: Optional[str] = None  # TP axis
+    pod: Optional[str] = None    # pure-DP (multi-pod) axis
+
+    # -- sizes / indices -----------------------------------------------------
+    def size(self, name: Optional[str]) -> int:
+        if name is None:
+            return 1
+        return lax.axis_size(name)
+
+    def index(self, name: Optional[str]) -> jnp.ndarray:
+        if name is None:
+            return jnp.zeros((), jnp.int32)
+        return lax.axis_index(name)
+
+    @property
+    def model_size(self) -> int:
+        return self.size(self.model)
+
+    @property
+    def data_size(self) -> int:
+        return self.size(self.data)
+
+    @property
+    def pod_size(self) -> int:
+        return self.size(self.pod)
+
+    def batch_shards(self) -> int:
+        """How many ways the global batch is split (pod x data)."""
+        return self.pod_size * self.data_size
+
+    # -- collectives (identity when the axis is absent) ----------------------
+    def psum(self, x, name: Optional[str]):
+        return x if name is None else lax.psum(x, name)
+
+    def pmean(self, x, name: Optional[str]):
+        return x if name is None else lax.pmean(x, name)
+
+    def pmax(self, x, name: Optional[str]):
+        return x if name is None else lax.pmax(x, name)
+
+    def psum_many(self, x, names: Sequence[Optional[str]]):
+        real = tuple(n for n in names if n is not None)
+        return lax.psum(x, real) if real else x
+
+    def pmax_many(self, x, names: Sequence[Optional[str]]):
+        real = tuple(n for n in names if n is not None)
+        return lax.pmax(x, real) if real else x
+
+    def all_gather(self, x, name: Optional[str], *, axis: int = 0, tiled: bool = True):
+        if name is None:
+            return x
+        return lax.all_gather(x, name, axis=axis, tiled=tiled)
+
+    def psum_scatter(self, x, name: Optional[str], *, axis: int = 0):
+        if name is None:
+            return x
+        return lax.psum_scatter(x, name, scatter_dimension=axis, tiled=True)
+
+    def all_to_all(self, x, name: Optional[str], split_axis: int, concat_axis: int):
+        if name is None:
+            return x
+        return lax.all_to_all(x, name, split_axis, concat_axis, tiled=True)
+
+    def ppermute(self, x, name: Optional[str], perm):
+        if name is None:
+            return x
+        return lax.ppermute(x, name, perm)
+
+    # -- framework conventions ------------------------------------------------
+    def fsdp_gather(self, w: jnp.ndarray) -> jnp.ndarray:
+        """Gather a parameter's FSDP-sharded dim0 (ZeRO-3 unshard)."""
+        return self.all_gather(w, self.data, axis=0, tiled=True)
+
+    def dp_mean_grads(self, grads):
+        """Pure-DP gradient mean across pods (the inter-pod all-reduce)."""
+        if self.pod is None:
+            return grads
+        return jax.tree.map(lambda g: lax.pmean(g, self.pod), grads)
+
+    def tp_degree(self, n: int) -> int:
+        """TP degree used for an n-way-splittable dimension: the model axis
+        when it divides n, else 1 (compute replicated across the axis)."""
+        m = self.model_size
+        return m if n % m == 0 else 1
+
+
+SINGLE = Axes()  # un-sharded execution (smoke tests, reference paths)

@@ -1,0 +1,123 @@
+"""Flash attention forward, Pallas TPU kernel.
+
+TPU-native tiling (not a CUDA port): the grid is (batch, q-head, q-block,
+kv-block) with the kv-block dimension innermost and *sequential*, so the
+online-softmax state (m, l, acc) lives in VMEM scratch across kv-block
+iterations and the MXU sees [block_q, head_dim] x [head_dim, block_kv]
+matmuls with 128-aligned tiles. GQA is handled in the BlockSpec index map
+(kv head = q head // group); causal/sliding-window masking is applied
+in-kernel with iota tiles.
+
+Layouts: q [B, H, Sq, hd], k/v [B, KV, Skv, hd]. Output [B, H, Sq, hd].
+Target: TPU v5e (validated on CPU via interpret=True against
+``kernels/ref.py``).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: Optional[int],
+            block_q: int, block_kv: int, n_kv: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # [bq, hd]
+    k = k_ref[0, 0].astype(jnp.float32)            # [bkv, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                      # [bq, bkv]
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = kj * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+    m_scr[...] = m_new
+
+    @pl.when(kj == pl.num_programs(3) - 1)
+    def _done():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_kv", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,  # [B, H, Sq, hd]
+    k: jnp.ndarray,  # [B, KV, Skv, hd]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, Sq, hd = q.shape
+    _, KV, Skv, _ = k.shape
+    G = H // KV
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Skv)
+    assert Sq % bq == 0 and Skv % bkv == 0, (Sq, bq, Skv, bkv)
+    grid = (B, H, Sq // bq, Skv // bkv)
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=bq, block_kv=bkv, n_kv=KV,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bkv, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bkv, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=_scratch(bq, hd),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _scratch(bq: int, hd: int):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return [
+        pltpu.VMEM((bq,), jnp.float32),      # m (running max)
+        pltpu.VMEM((bq,), jnp.float32),      # l (running sum)
+        pltpu.VMEM((bq, hd), jnp.float32),   # acc (weighted values)
+    ]

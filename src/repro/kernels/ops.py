@@ -1,0 +1,53 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels run in interpret mode (``interpret=True``
+default via :data:`INTERPRET`); on real TPUs set ``REPRO_KERNELS=tpu`` (or
+pass ``interpret=False``) to compile them for the MXU. The pure-jnp oracles
+live in :mod:`repro.kernels.ref`.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.page_gather import page_copy as _page_copy
+from repro.kernels.paged_attention import paged_attention as _paged
+from repro.kernels.rglru_scan import rglru_scan_kernel as _rglru
+from repro.kernels.ssd_scan import ssd_scan_kernel as _ssd
+
+__all__ = ["INTERPRET", "flash_attention", "paged_attention", "page_copy",
+           "rglru_scan", "ssd_scan"]
+
+INTERPRET = os.environ.get("REPRO_KERNELS", "interpret") != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window: Optional[int] = None,
+                    block_q=128, block_kv=128, interpret: Optional[bool] = None):
+    return _flash(q, k, v, causal=causal, window=window, block_q=block_q,
+                  block_kv=block_kv,
+                  interpret=INTERPRET if interpret is None else interpret)
+
+
+def paged_attention(q, pool, page_slot, lengths, *,
+                    interpret: Optional[bool] = None):
+    return _paged(q, pool, page_slot, lengths,
+                  interpret=INTERPRET if interpret is None else interpret)
+
+
+def page_copy(dst, src, dst_idx, src_idx, *, interpret: Optional[bool] = None):
+    return _page_copy(dst, src, dst_idx, src_idx,
+                      interpret=INTERPRET if interpret is None else interpret)
+
+
+def rglru_scan(u, w_a, b_a, w_x, b_x, lam, *, block_w=128, chunk=128,
+               interpret: Optional[bool] = None):
+    return _rglru(u, w_a, b_a, w_x, b_x, lam, block_w=block_w, chunk=chunk,
+                  interpret=INTERPRET if interpret is None else interpret)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk=128, interpret: Optional[bool] = None):
+    return _ssd(x, dt, A, Bm, Cm, chunk=chunk,
+                interpret=INTERPRET if interpret is None else interpret)

@@ -1,0 +1,67 @@
+"""Tier data movement kernel: batched page copies between pools.
+
+The tier-1 <-> tier-2 engine hot path (evict write-backs, promotions,
+prefill population): copy N whole pages between pools given index vectors.
+Index vectors ride in scalar-prefetch SMEM so each grid step's BlockSpecs
+address the right source/destination page; a -1 pair routes to the
+destination scratch row (pools allocate one, see kvpool). The destination
+is aliased in/out so untouched rows are preserved.
+
+Pages are viewed as [rows, lane]-shaped payloads (lane = 128-aligned last
+dim for the VPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(dst_idx_ref, src_idx_ref, dst_in_ref, src_ref, dst_out_ref):
+    i = pl.program_id(0)
+    ok = (dst_idx_ref[i] >= 0) & (src_idx_ref[i] >= 0)
+
+    @pl.when(ok)
+    def _copy():
+        dst_out_ref[0] = src_ref[0]
+
+    @pl.when(~ok)
+    def _keep():
+        dst_out_ref[0] = dst_in_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def page_copy(
+    dst: jnp.ndarray,      # [Sd, R, C] destination pool (page payload [R, C])
+    src: jnp.ndarray,      # [Ss, R, C]
+    dst_idx: jnp.ndarray,  # [N] int32 (-1 = skip)
+    src_idx: jnp.ndarray,  # [N] int32 (-1 = skip)
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    Sd, R, C = dst.shape
+    N = dst_idx.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((1, R, C),
+                         lambda i, di, si: (jnp.maximum(di[i], 0), 0, 0)),
+            pl.BlockSpec((1, R, C),
+                         lambda i, di, si: (jnp.maximum(si[i], 0), 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, R, C), lambda i, di, si: (jnp.maximum(di[i], 0), 0, 0)
+        ),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(dst.shape, dst.dtype),
+        input_output_aliases={2: 0},  # dst aliased in/out
+        interpret=interpret,
+    )(dst_idx, src_idx, dst, src)

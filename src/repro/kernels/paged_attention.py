@@ -1,0 +1,135 @@
+"""Paged decode attention, Pallas TPU kernel.
+
+The device-local piece of the distributed two-tier decode: single-token
+queries attend over this shard's *resident tier-1 pages*, gathered directly
+from the page pool via the page table — the table rides in scalar-prefetch
+SMEM so each grid step's BlockSpec index map picks the right pool slot (no
+materialized gather in HBM). Pages are visited sequentially per sequence
+with online-softmax state in VMEM scratch; the kernel returns the partial
+(acc, m, l) so shards combine with the tiny psum/pmax of
+``models.attention.combine_partials`` (paper: remote hits never move pages).
+
+Layouts: q [B, H, hd]; pool [slots, page, 2, KV, hd];
+page_slot [B, n_pages] (int32, -1 = non-resident); lengths [B].
+Output: acc [B, H, hd] f32, m [B, H] f32, l [B, H] f32.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(page_slot_ref, lengths_ref, q_ref, pool_ref,
+            acc_ref, m_ref, l_ref, m_scr, l_scr, acc_scr, *,
+            page: int, n_kv: int, scale: float):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                     # [H, hd]
+    blk = pool_ref[0].astype(jnp.float32)                # [page, 2, KV, hd]
+    k = blk[:, 0]                                        # [page, KV, hd]
+    v = blk[:, 1]
+    H, hd = q.shape
+    G = H // n_kv
+    qg = q.reshape(n_kv, G, hd)
+    s = jax.lax.dot_general(
+        qg.reshape(n_kv * G, hd), k.reshape(page * n_kv, hd),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    ).reshape(n_kv, G, page, n_kv)
+    # keep only matching kv head: s[kv, g, t, kv]
+    eye = jax.lax.broadcasted_iota(jnp.int32, (n_kv, n_kv), 0) == \
+        jax.lax.broadcasted_iota(jnp.int32, (n_kv, n_kv), 1)
+    s = jnp.sum(jnp.where(eye[:, None, None, :], s, 0.0), axis=3) * scale
+    # [KV, G, page]
+
+    resident = page_slot_ref[b, p] >= 0
+    tok = p * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)[0]
+    live = tok < lengths_ref[b]
+    ok = live & resident
+    s = jnp.where(ok[None, None, :], s, _NEG)
+
+    m_prev = m_scr[...]                                  # [KV, G]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    pexp = jnp.exp(s - m_new[..., None])
+    pexp = jnp.where(ok[None, None, :], pexp, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(pexp, axis=-1)
+    pv = jax.lax.dot_general(
+        pexp.reshape(n_kv * G, page) *
+        jnp.ones((1,), jnp.float32),                     # [KV*G, page]
+        v.reshape(page, n_kv * hd),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    ).reshape(n_kv, G, n_kv, hd)
+    pv = jnp.sum(jnp.where(eye[:, None, :, None], pv, 0.0), axis=2)
+    acc_scr[...] = acc_scr[...] * corr[..., None] + pv
+    m_scr[...] = m_new
+
+    @pl.when(p == pl.num_programs(1) - 1)
+    def _done():
+        H_, hd_ = acc_ref.shape[1], acc_ref.shape[2]
+        acc_ref[0] = acc_scr[...].reshape(H_, hd_)
+        m_ref[0] = m_scr[...].reshape(H_)
+        l_ref[0] = l_scr[...].reshape(H_)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(
+    q: jnp.ndarray,          # [B, H, hd]
+    pool: jnp.ndarray,       # [slots, page, 2, KV, hd]
+    page_slot: jnp.ndarray,  # [B, n_pages] int32 (-1 = non-resident)
+    lengths: jnp.ndarray,    # [B] int32
+    *,
+    interpret: bool = False,
+):
+    B, H, hd = q.shape
+    slots, page, _, KV, _ = pool.shape
+    n_pages = page_slot.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(_kernel, page=page, n_kv=KV, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, p, tbl, ln: (b, 0, 0)),
+            pl.BlockSpec(
+                (1, page, 2, KV, hd),
+                # The page table IS the index map: resident slot or scratch 0.
+                lambda b, p, tbl, ln: (jnp.maximum(tbl[b, p], 0), 0, 0, 0, 0),
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, p, tbl, ln: (b, 0, 0)),
+            pl.BlockSpec((1, H), lambda b, p, tbl, ln: (b, 0)),
+            pl.BlockSpec((1, H), lambda b, p, tbl, ln: (b, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((KV, H // KV), jnp.float32),
+            pltpu.VMEM((KV, H // KV), jnp.float32),
+            pltpu.VMEM((KV, H // KV, hd), jnp.float32),
+        ],
+    )
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(page_slot, lengths, q, pool)
+    return acc, m, l

@@ -1,0 +1,138 @@
+"""Pure-jnp oracles for every Pallas kernel (shape-for-shape references).
+
+These are deliberately naive (full softmax, materialized scores, sequential
+scans) — correctness baselines for the interpret-mode kernel tests, NOT the
+production XLA path (that is ``models/attention.py`` etc.).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "attention_ref",
+    "paged_attention_ref",
+    "page_copy_ref",
+    "rglru_ref",
+    "ssd_ref",
+]
+
+
+def attention_ref(
+    q: jnp.ndarray,  # [B, H, Sq, hd]
+    k: jnp.ndarray,  # [B, KV, Skv, hd]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    B, H, Sq, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, G, Sq, hd)
+    s = jnp.einsum("bkgqh,bksh->bkgqs", qf, k.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[2])[None, :]
+    if causal:
+        m = qpos >= kpos
+        if window is not None:
+            m &= kpos > qpos - window
+        s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksh->bkgqh", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)
+
+
+def paged_attention_ref(
+    q: jnp.ndarray,        # [B, H, hd] single-token queries
+    pool: jnp.ndarray,     # [slots, page, 2, KV, hd]
+    page_slot: jnp.ndarray,  # [B, n_pages] int32 slot ids (-1 invalid)
+    lengths: jnp.ndarray,  # [B]
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Partial attention over resident pages. Returns (acc, m, l) so results
+    can be combined across shards exactly like the kernel."""
+    B, H, hd = q.shape
+    n_pages = page_slot.shape[1]
+    page = pool.shape[1]
+    KV = pool.shape[3]
+    G = H // KV
+    slot = jnp.clip(page_slot, 0)
+    data = pool[slot]                          # [B, n_pages, page, 2, KV, hd]
+    k = data[..., 0, :, :].reshape(B, n_pages * page, KV, hd)
+    v = data[..., 1, :, :].reshape(B, n_pages * page, KV, hd)
+    tok = (jnp.arange(n_pages)[:, None] * page
+           + jnp.arange(page)[None, :]).reshape(-1)
+    valid = (page_slot >= 0)[:, :, None].repeat(page, 2).reshape(B, -1)
+    valid &= tok[None, :] < lengths[:, None]
+    qf = q.astype(jnp.float32).reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,btkh->bkgt", qf, k.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid[:, None, None], p, 0.0)  # all-masked rows -> l = 0
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bkgt,btkh->bkgh", p, v.astype(jnp.float32))
+    return acc, m, l
+
+
+def page_copy_ref(
+    dst: jnp.ndarray,       # [Sd, ...page payload...]
+    src: jnp.ndarray,       # [Ss, ...]
+    dst_idx: jnp.ndarray,   # [N] int32 (-1 = skip)
+    src_idx: jnp.ndarray,   # [N] int32
+) -> jnp.ndarray:
+    """Tier movement: dst[dst_idx[i]] = src[src_idx[i]] for each live pair."""
+    def body(i, d):
+        ok = (dst_idx[i] >= 0) & (src_idx[i] >= 0)
+        row = src[jnp.clip(src_idx[i], 0)]
+        di = jnp.clip(dst_idx[i], 0)
+        return jnp.where(ok, d.at[di].set(row), d)
+
+    return jax.lax.fori_loop(0, dst_idx.shape[0], body, dst)
+
+
+def rglru_ref(u, w_a, b_a, w_x, b_x, lam):
+    """Sequential RG-LRU recurrence. u: [B, S, W] -> h [B, S, W] (f32)."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * w_a + b_a)
+    i = jax.nn.sigmoid(uf * w_x + b_x)
+    log_a = -8.0 * jax.nn.softplus(lam) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    _, hs = jax.lax.scan(step, jnp.zeros_like(uf[:, 0]),
+                         (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    """Sequential SSD scan. x: [B,S,H,P]; returns y [B,S,H,P] f32."""
+    Bsz, S, H, P = x.shape
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        decay = jnp.exp(dt_t * A)                        # [B,H]
+        h = h * decay[..., None, None] + jnp.einsum(
+            "bn,bhp->bhnp", b_t, dt_t[..., None] * x_t)
+        y = jnp.einsum("bn,bhnp->bhp", c_t, h)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, Bm.shape[-1], P), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(Bm.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(Cm.astype(jnp.float32), 1, 0)),
+    )
+    return jnp.moveaxis(ys, 0, 1)

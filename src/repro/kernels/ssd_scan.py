@@ -1,0 +1,104 @@
+"""Mamba-2 SSD chunked-scan kernel (state-space duality).
+
+TPU adaptation of the SSD algorithm: grid (batch, head, chunk) with the
+chunk dimension innermost/sequential; the inter-chunk state h [N, P] lives
+in VMEM scratch, and each grid step runs the three MXU matmuls of the
+intra-chunk form:
+
+    CB    = C · Bᵀ                       [Q, Q]
+    y     = (CB ⊙ causal-decay) · (dt·x) [Q, P]   (+ C·h_prev·exp(cum))
+    h'    = decay_end·h_prev + (exp(cum_end - cum)·dt·B)ᵀ · x   [N, P]
+
+Q = chunk length (128-aligned), N = state dim, P = head dim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_scr, *, q: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)     # [Q, P]
+    dt = dt_ref[0, 0].astype(jnp.float32)   # [Q]
+    A = a_ref[0].astype(jnp.float32)        # scalar (per head)
+    Bm = b_ref[0].astype(jnp.float32)       # [Q, N]
+    Cm = c_ref[0].astype(jnp.float32)       # [Q, N]
+
+    dA = dt * A                              # [Q] (negative)
+    cum = jnp.cumsum(dA)                     # [Q]
+
+    CB = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                        # [Q, Q]
+    t_i = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    s_i = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    decay = jnp.where(t_i >= s_i, decay, 0.0)
+    y_diag = jax.lax.dot_general(
+        CB * decay, dt[:, None] * x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                        # [Q, P]
+
+    h_prev = h_scr[...]                      # [N, P]
+    y_off = jax.lax.dot_general(
+        Cm * jnp.exp(cum)[:, None], h_prev, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    y_ref[0, 0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    edge = jnp.exp(cum[-1] - cum) * dt       # [Q]
+    state_inc = jax.lax.dot_general(
+        Bm * edge[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                        # [N, P]
+    h_scr[...] = h_prev * jnp.exp(cum[-1]) + state_inc
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_kernel(
+    x: jnp.ndarray,    # [B, S, H, P]
+    dt: jnp.ndarray,   # [B, S, H]   (softplus'ed)
+    A: jnp.ndarray,    # [H]         (negative)
+    Bm: jnp.ndarray,   # [B, S, N]
+    Cm: jnp.ndarray,   # [B, S, N]
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    grid = (B, H, S // Q)
+
+    # Kernel-friendly layouts.
+    xk = jnp.moveaxis(x, 2, 1)               # [B, H, S, P]
+    dtk = jnp.moveaxis(dt, 2, 1)             # [B, H, S]
+
+    kernel = functools.partial(_kernel, q=Q)
+    yk = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, Q), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Q, P), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(xk, dtk, A, Bm, Cm)
+    return jnp.moveaxis(yk, 1, 2)            # [B, S, H, P]

@@ -1,0 +1,297 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e) + roofline extraction (deliverable g).
+
+For every (architecture × input shape) cell:
+  - build the production mesh (16x16 single-pod, or 2x16x16 multi-pod),
+  - lower + compile the cell's step (train_step / prefill_step / decode_step)
+    against ShapeDtypeStruct inputs (no allocation),
+  - record memory_analysis(), cost_analysis() FLOPs/bytes, and the
+    collective wire bytes parsed from the optimized HLO,
+  - derive the three roofline terms (core/roofline.py).
+
+Results are written incrementally to a JSON file so interrupted runs resume.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+      [--mesh pod1|pod2|both] [--out PATH] [--force]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.archs import ARCHS, get_config
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec
+from repro.core import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch import spmd
+from repro.models import params as pm
+from repro.serving.engine import ServeConfig
+from repro.training.optimizer import AdamWState
+from repro.training.train_step import TrainHyper, TrainState
+
+DEFAULT_OUT = "benchmarks/results/dryrun.json"
+
+
+# ---------------------------------------------------------------------------
+# Cell construction.
+# ---------------------------------------------------------------------------
+
+
+def active_param_count(cfg: ModelConfig, ms: pm.MeshSizes) -> tuple[int, int]:
+    """(N_total, N_active) from the actual parameter structs."""
+    structs = pm.param_structs(cfg, ms)
+    total = 0
+    active = 0
+    scale_names = {"w_gate", "w_up", "w_down"} if cfg.moe else set()
+    ratio = (cfg.moe.top_k / cfg.moe.n_experts) if cfg.moe else 1.0
+
+    def walk(tree, path=()):
+        nonlocal total, active
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                walk(v, path + (k,))
+        elif isinstance(tree, list):
+            for i, v in enumerate(tree):
+                walk(v, path + (i,))
+        else:
+            n = 1
+            for d in tree.shape:
+                n *= d
+            total += n
+            name = path[-1]
+            active += int(n * ratio) if name in scale_names else n
+
+    walk(structs)
+    return total, active
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec, ms: pm.MeshSizes) -> float:
+    _, n_active = active_param_count(cfg, ms)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: per step
+
+
+def long_ctx_supported(cfg: ModelConfig) -> bool:
+    """long_500k runs only for sub-quadratic attention families."""
+    return all(k != "attn_full" for k in cfg.block_pattern)
+
+
+def serve_config(cfg: ModelConfig, shape: ShapeSpec, mesh) -> ServeConfig:
+    names = mesh.axis_names
+    sizes = dict(zip(names, mesh.devices.shape))
+    if shape.name == "long_500k":
+        page_axes = tuple(n for n in ("pod", "data", "model") if n in names)
+        batch_shards = 1
+    else:
+        page_axes = ("model",)
+        batch_shards = sizes.get("pod", 1) * sizes.get("data", 1)
+    b_local = max(1, shape.global_batch // batch_shards)
+    return ServeConfig(
+        max_seq=shape.seq_len,
+        batch_local=b_local,
+        page_axes=page_axes,
+        mapping="block_cyclic",
+        hbm_fraction=0.5,
+    )
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, cfg=None, sc_patch=None):
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    ms = spmd.mesh_sizes(mesh)
+
+    if shape.kind == "train":
+        step, st_spec, b_spec = spmd.build_train_step(cfg, mesh, TrainHyper())
+        params = pm.param_structs(cfg, ms)
+        opt_dt = jnp.dtype(cfg.opt_state_dtype)
+        opt = AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            mu=jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, opt_dt),
+                            params),
+            nu=jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, opt_dt),
+                            params),
+        )
+        err = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params
+        )
+        state = TrainState(params=params, opt=opt, err_fb=err)
+        batch = spmd.batch_structs(
+            cfg, global_batch=shape.global_batch, seq_len=shape.seq_len
+        )
+        with mesh:
+            return step.lower(state, batch)
+
+    sc = serve_config(cfg, shape, mesh)
+    if sc_patch:
+        sc = dataclasses.replace(sc, **sc_patch)
+    prefill_fn, decode_fn, specs = spmd.build_serve(cfg, mesh, sc)
+    params = pm.param_structs(cfg, ms)
+    n_batch_shards = max(1, shape.global_batch // sc.batch_local) \
+        if specs["batch_axes"] else 1
+    gb = sc.batch_local * (
+        1 if not specs["batch_axes"] else _axes_size(mesh, specs["batch_axes"])
+    )
+    st_global = spmd.serve_state_global_structs(specs["state_structs"], mesh)
+
+    if shape.kind == "prefill":
+        s_txt = shape.seq_len - cfg.vlm_prefix
+        tokens = jax.ShapeDtypeStruct((gb, s_txt), jnp.int32)
+        extras = {}
+        if cfg.enc_dec:
+            extras["frames"] = jax.ShapeDtypeStruct(
+                (gb, cfg.enc_seq, cfg.d_model), jnp.dtype(cfg.param_dtype))
+        if cfg.vlm_prefix:
+            extras["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (gb, cfg.vlm_prefix, cfg.d_model), jnp.dtype(cfg.param_dtype))
+        with mesh:
+            return prefill_fn.lower(params, tokens, extras)
+
+    tokens = jax.ShapeDtypeStruct((gb,), jnp.int32)
+    with mesh:
+        return decode_fn.lower(params, st_global, tokens)
+
+
+def _axes_size(mesh, axes) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in axes:
+        n *= sizes.get(a, 1)
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Per-cell record.
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             cfg_patch=None, sc_patch=None) -> dict:
+    cfg = get_config(arch)
+    if cfg_patch:
+        cfg = dataclasses.replace(cfg, **cfg_patch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not long_ctx_supported(cfg):
+        return {
+            "status": "skipped",
+            "reason": "pure full-attention arch: 512k decode needs "
+                      "sub-quadratic attention (DESIGN.md §4)",
+        }
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    lowered = lower_cell(arch, shape_name, mesh, cfg=cfg, sc_patch=sc_patch)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "peak_memory_in_bytes"):
+        v = getattr(mem, f, None)
+        if v is not None:
+            mem_rec[f] = int(v)
+
+    cost = compiled.cost_analysis() or {}
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_bytes = float(cost.get("bytes accessed", 0.0))
+
+    hlo = compiled.as_text()
+    # XLA's cost_analysis counts while (lax.scan) bodies once; use the
+    # trip-count-corrected HLO walker instead (validated in tests).
+    walked = rl.hlo_cost(hlo)
+    flops = walked["flops"]
+    bytes_ = walked["bytes"]
+    bytes_all = walked["bytes_all"]
+    coll = rl.module_collective_bytes(hlo)
+    ms = spmd.mesh_sizes(mesh)
+    mf = model_flops(cfg, shape, ms)
+    # The compiled module is the per-device SPMD program: HLO flops/bytes
+    # and the parsed collective wire bytes are all PER DEVICE. Pass chips=1
+    # and the per-chip slice of MODEL_FLOPS.
+    report = rl.roofline_report(
+        hlo_flops=flops * 1.0,
+        hlo_bytes=bytes_,
+        coll=coll,
+        chips=1,
+        model_flops=mf / chips,
+    )
+    report.update(
+        status="ok",
+        chips=chips,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        memory=mem_rec,
+        hlo_bytes_accessed=bytes_,
+        hlo_bytes_all_ops=bytes_all,
+        xla_cost_flops=xla_flops,
+        xla_cost_bytes=xla_bytes,
+        collective_wire_bytes_total=coll.wire_bytes,
+    )
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["pod1", "pod2", "both"])
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    results = {}
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            results = json.load(f)
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"pod1": [False], "pod2": [True], "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key = f"{arch}|{shape}|{'pod2' if mp else 'pod1'}"
+                if key in results and results[key].get("status") in (
+                        "ok", "skipped") and not args.force:
+                    print(f"[skip-cached] {key}")
+                    continue
+                print(f"[run] {key} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape, mp)
+                except Exception as e:  # record failures for triage
+                    rec = {"status": "error", "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                results[key] = rec
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1, sort_keys=True)
+                status = rec.get("status")
+                extra = ""
+                if status == "ok":
+                    extra = (f" dom={rec['dominant']}"
+                             f" frac={rec['roofline_frac']:.3f}"
+                             f" compile={rec['compile_s']}s")
+                print(f"[done] {key}: {status}{extra}", flush=True)
+
+    n_ok = sum(1 for r in results.values() if r.get("status") == "ok")
+    n_skip = sum(1 for r in results.values() if r.get("status") == "skipped")
+    n_err = sum(1 for r in results.values() if r.get("status") == "error")
+    print(f"\nTOTAL ok={n_ok} skipped={n_skip} error={n_err}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Mesh construction for the production topology.
+
+Single pod: 16x16 = 256 chips, axes ("data", "model").
+Multi-pod:  2x16x16 = 512 chips, axes ("pod", "data", "model") — the "pod"
+axis is pure data parallelism over the inter-pod links.
+
+``make_production_mesh`` is a function (not a module constant) so importing
+this module never touches jax device state; the dry-run sets
+``--xla_force_host_platform_device_count=512`` before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh", "axes_for_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    return jax.make_mesh(shape, axes)
+
+
+def axes_for_mesh(mesh):
+    """Axes context matching a mesh's axis names."""
+    from repro.distributed.axes import Axes
+
+    names = mesh.axis_names
+    return Axes(
+        data="data" if "data" in names else None,
+        model="model" if "model" in names else None,
+        pod="pod" if "pod" in names else None,
+    )

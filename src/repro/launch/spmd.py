@@ -1,0 +1,220 @@
+"""shard_map wrappers: build fully-sharded train/serve steps for a mesh.
+
+This is the glue between the pure SPMD step bodies (``training/train_step``,
+``serving/engine``) and a concrete mesh: it derives every PartitionSpec from
+the declarative param defs and wraps the body in shard_map + jit.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+from repro.configs.base import ModelConfig
+from repro.distributed.axes import Axes
+from repro.launch.mesh import axes_for_mesh
+from repro.models import params as pm
+from repro.training.optimizer import AdamWState
+from repro.training.train_step import TrainHyper, TrainState, make_train_step
+
+__all__ = [
+    "mesh_sizes",
+    "batch_pspec",
+    "state_pspecs",
+    "build_train_step",
+    "batch_structs",
+]
+
+
+def mesh_sizes(mesh) -> pm.MeshSizes:
+    names = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return pm.MeshSizes(data=names.get("data", 1), model=names.get("model", 1))
+
+
+def _batch_axes(mesh):
+    names = mesh.axis_names
+    ax = tuple(n for n in ("pod", "data") if n in names)
+    return ax if ax else None
+
+
+def batch_pspec(cfg: ModelConfig, mesh) -> dict:
+    """Batch dim sharded over (pod, data); everything else replicated."""
+    b = _batch_axes(mesh)
+    spec = {"tokens": P(b), "labels": P(b)}
+    if cfg.vlm_prefix:
+        spec["prefix_embeds"] = P(b)
+    if cfg.enc_dec:
+        spec["frames"] = P(b)
+    return spec
+
+
+def batch_structs(
+    cfg: ModelConfig, *, global_batch: int, seq_len: int
+) -> dict:
+    """ShapeDtypeStruct stand-ins for a global training batch (dry-run)."""
+    s_txt = seq_len - cfg.vlm_prefix
+    out = {
+        "tokens": jax.ShapeDtypeStruct((global_batch, s_txt), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((global_batch, s_txt), jnp.int32),
+    }
+    if cfg.vlm_prefix:
+        out["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (global_batch, cfg.vlm_prefix, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.enc_dec:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (global_batch, cfg.enc_seq, cfg.d_model), jnp.bfloat16
+        )
+    return out
+
+
+def state_pspecs(cfg: ModelConfig, mesh) -> TrainState:
+    ms = mesh_sizes(mesh)
+    names = mesh.axis_names
+    pspec = pm.param_pspecs(
+        cfg, ms,
+        data_axis="data" if "data" in names else None,
+        model_axis="model" if "model" in names else None,
+    )
+    return TrainState(
+        params=pspec,
+        opt=AdamWState(step=P(), mu=pspec, nu=pspec),
+        err_fb=pspec,
+    )
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    mesh,
+    hyper: TrainHyper = TrainHyper(),
+):
+    """Returns (jitted step fn, state_specs, batch_specs)."""
+    ms = mesh_sizes(mesh)
+    ax = axes_for_mesh(mesh)
+    body = make_train_step(cfg, ax, ms, hyper)
+    st_spec = state_pspecs(cfg, mesh)
+    b_spec = batch_pspec(cfg, mesh)
+    metrics_spec = {k: P() for k in ("loss", "grad_norm", "aux_loss", "dropped")}
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(st_spec, b_spec),
+        out_specs=(st_spec, metrics_spec),
+        check_vma=True,
+    )
+    return jax.jit(fn), st_spec, b_spec
+
+
+# ---------------------------------------------------------------------------
+# Serving wrappers (prefill / decode) — device-local state is stacked over
+# every mesh axis (dim 0) in the global view; see serving/kvpool.py.
+# ---------------------------------------------------------------------------
+
+
+def _all_axes(mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def _state_pspec_tree(state_structs, mesh):
+    axes = _all_axes(mesh)
+
+    def one(sds):
+        return P(axes, *([None] * (len(sds.shape) - 1)))
+
+    return jax.tree.map(one, state_structs)
+
+
+def serve_state_global_structs(state_structs, mesh):
+    """Global ShapeDtypeStructs: device-local dim0 stacked over all devices."""
+    n = mesh.devices.size
+
+    def one(sds):
+        return jax.ShapeDtypeStruct((sds.shape[0] * n,) + sds.shape[1:],
+                                    sds.dtype)
+
+    return jax.tree.map(one, state_structs)
+
+
+def build_serve(cfg: ModelConfig, mesh, sc):
+    """Returns (jit prefill, jit decode, specs dict) for an (arch, shape).
+
+    sc: ServeConfig with batch_local = global_batch / batch_shards and
+    page_axes naming mesh axes that shard the paged KV pools.
+    """
+    from repro.distributed.axes import pvary_tree
+    from repro.serving.engine import (
+        decode_state_structs, make_decode_step, make_prefill_step,
+    )
+
+    ms = mesh_sizes(mesh)
+    ax = axes_for_mesh(mesh)
+    names = mesh.axis_names
+    batch_axes = tuple(n for n in ("pod", "data") if n in names
+                       and n not in sc.page_axes)
+    n_page_shards = 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for n in sc.page_axes:
+        n_page_shards *= sizes.get(n, 1)
+
+    p_spec = pm.param_pspecs(
+        cfg, ms,
+        data_axis="data" if "data" in names else None,
+        model_axis="model" if "model" in names else None,
+    )
+    st_structs = decode_state_structs(cfg, sc, n_page_shards, ms)
+    st_spec = _state_pspec_tree(st_structs, mesh)
+    tok_spec = P(batch_axes if batch_axes else None)
+    out_tok_spec = (tok_spec, tok_spec)  # (next_token, logprob)
+
+    decode_body = make_decode_step(cfg, sc, ax, ms)
+
+    # Token outputs are value-identical across non-batch axes but the type
+    # system cannot prove it through all-gathered weights; a pvary+pmax pair
+    # (numerically a no-op on identical values) settles them to invariant.
+    clear_axes = tuple(n for n in names if n not in batch_axes)
+
+    def _settle(v):
+        if not clear_axes:
+            return v
+        v = pvary_tree(v, clear_axes)
+        return jax.lax.pmax(v, clear_axes)
+
+    def decode_wrapped(params, state, tokens):
+        new_state, out = decode_body(params, state, tokens)
+        out = jax.tree.map(_settle, out)
+        return pvary_tree(new_state, names), out
+
+    decode_fn = shard_map(
+        decode_wrapped, mesh=mesh,
+        in_specs=(p_spec, st_spec, tok_spec),
+        out_specs=(st_spec, out_tok_spec),
+        check_vma=True,
+    )
+
+    prefill_body = make_prefill_step(cfg, sc, ax, ms)
+    extras_spec = {}
+    if cfg.enc_dec:
+        extras_spec["frames"] = tok_spec
+    if cfg.vlm_prefix:
+        extras_spec["prefix_embeds"] = tok_spec
+
+    def prefill_wrapped(params, tokens, extras):
+        state, out = prefill_body(params, tokens, extras)
+        out = jax.tree.map(_settle, out)
+        return pvary_tree(state, names), out
+
+    prefill_fn = shard_map(
+        prefill_wrapped, mesh=mesh,
+        in_specs=(p_spec, tok_spec, extras_spec),
+        out_specs=(st_spec, out_tok_spec),
+        check_vma=True,
+    )
+
+    specs = dict(params=p_spec, state=st_spec, state_structs=st_structs,
+                 tokens=tok_spec, extras=extras_spec,
+                 batch_axes=batch_axes, n_page_shards=n_page_shards)
+    return jax.jit(prefill_fn), jax.jit(decode_fn), specs

@@ -1,0 +1,215 @@
+"""Blockwise (flash-style) attention in pure JAX.
+
+This is the production XLA path (and the CPU dry-run path): O(block) memory
+via online softmax, static skipping of out-of-range KV blocks for causal /
+sliding-window patterns (so HLO FLOPs reflect the *real* cost — important
+for the roofline). The Pallas TPU kernel (``kernels/flash_attention.py``)
+implements the same tiling for the MXU; this module doubles as its
+shape/semantics reference.
+
+Mask patterns: full (bidirectional), causal, causal+window (SWA / local),
+prefix-LM (bidirectional prefix + causal suffix). GQA via head groups.
+
+``attention_partial`` / ``combine_partials`` expose the online-softmax
+partial state so *distributed* decode can combine per-device partial
+attention over policy-mapped KV pages (DESIGN.md §2) with a tiny psum/pmax.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.axes import Axes, pvary_like
+
+__all__ = [
+    "blockwise_attention",
+    "attention_partial",
+    "combine_partials",
+    "Partial",
+]
+
+_F32 = jnp.float32
+_NEG = -1e30
+
+
+def _block_scores(q, k, scale):
+    # q: [B, bq, KV, G, hd]  k: [B, bk, KV, hd] -> [B, KV, G, bq, bk]
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k, preferred_element_type=_F32)
+    return s * scale
+
+
+def _mask(
+    q_pos: jnp.ndarray,  # [bq]
+    kv_pos: jnp.ndarray,  # [bk]
+    *,
+    causal: bool,
+    window: Optional[int],
+    prefix_len: int,
+    kv_len: jnp.ndarray | int,
+) -> jnp.ndarray:
+    ok = kv_pos[None, :] < kv_len  # kv padding / valid length
+    if causal:
+        vis = q_pos[:, None] >= kv_pos[None, :]
+        if window is not None:
+            vis &= kv_pos[None, :] > (q_pos[:, None] - window)
+        if prefix_len:
+            vis |= kv_pos[None, :] < prefix_len
+        ok &= vis
+    return ok  # [bq, bk]
+
+
+def blockwise_attention(
+    q: jnp.ndarray,  # [B, Sq, H, hd]
+    k: jnp.ndarray,  # [B, Skv, KV, hd]
+    v: jnp.ndarray,  # [B, Skv, KV, hd]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    prefix_len: int = 0,
+    q_offset: int = 0,
+    kv_len: Optional[jnp.ndarray] = None,
+    block_q: int = 512,
+    block_kv: int = 512,
+) -> jnp.ndarray:
+    """Online-softmax attention with statically-skipped KV blocks.
+
+    The Python loop over q blocks is static, so each q block slices only the
+    KV range it can see (triangular for causal, banded for windows) — the
+    lowered HLO does no masked-away work beyond block granularity.
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+
+    bq = min(block_q, Sq)
+    bk = min(block_kv, Skv)
+    nq = -(-Sq // bq)
+    pad_q = nq * bq - Sq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    nkv_total = -(-Skv // bk)
+    pad_k = nkv_total * bk - Skv
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    if kv_len is None:
+        kv_len = Skv
+
+    qg = q.reshape(B, nq, bq, KV, G, hd)
+    outs = []
+    for i in range(nq):
+        # Static KV block range visible to q block i.
+        q_lo = q_offset + i * bq
+        q_hi = q_offset + (i + 1) * bq - 1
+        if causal:
+            hi = min(nkv_total, -(-(q_hi + 1) // bk))
+            lo = 0
+            if window is not None:
+                lo = max(0, (q_lo - window + 1) // bk)
+            if prefix_len:
+                lo = 0
+                hi = max(hi, -(-prefix_len // bk))
+            hi = max(hi, lo + 1)
+        else:
+            lo, hi = 0, nkv_total
+        n_blocks = hi - lo
+        k_slice = jax.lax.slice_in_dim(k, lo * bk, hi * bk, axis=1)
+        v_slice = jax.lax.slice_in_dim(v, lo * bk, hi * bk, axis=1)
+        k_blocks = k_slice.reshape(B, n_blocks, bk, KV, hd)
+        v_blocks = v_slice.reshape(B, n_blocks, bk, KV, hd)
+        q_i = qg[:, i]  # [B, bq, KV, G, hd]
+        q_pos = q_offset + i * bq + jnp.arange(bq)
+
+        def kv_step(carry, inp, q_i=q_i, q_pos=q_pos, lo=lo):
+            m, l, acc = carry
+            j, k_b, v_b = inp
+            s = _block_scores(q_i, k_b, scale)  # [B, KV, G, bq, bk]
+            kv_pos = (lo + j) * bk + jnp.arange(bk)
+            msk = _mask(
+                q_pos, kv_pos, causal=causal, window=window,
+                prefix_len=prefix_len, kv_len=kv_len,
+            )
+            s = jnp.where(msk[None, None, None], s, _NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum(
+                "bkgqs,bskh->bkgqh", p, v_b.astype(_F32),
+                preferred_element_type=_F32,
+            )
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = pvary_like(jnp.full((B, KV, G, bq), _NEG, _F32), q)
+        l0 = pvary_like(jnp.zeros((B, KV, G, bq), _F32), q)
+        a0 = pvary_like(jnp.zeros((B, KV, G, bq, hd), _F32), q)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step,
+            (m0, l0, a0),
+            (jnp.arange(n_blocks), jnp.moveaxis(k_blocks, 1, 0),
+             jnp.moveaxis(v_blocks, 1, 0)),
+        )
+        out_i = acc / jnp.maximum(l, 1e-30)[..., None]
+        outs.append(out_i)  # [B, KV, G, bq, hd]
+
+    out = jnp.stack(outs, axis=3)  # [B, KV, G, nq, bq, hd]
+    out = out.reshape(B, KV, G, nq * bq, hd)
+    out = jnp.moveaxis(out, 3, 1)  # [B, S, KV, G, hd]
+    out = out.reshape(B, nq * bq, H, hd)
+    if pad_q:
+        out = out[:, :Sq]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Partial attention for distributed decode over policy-mapped pages.
+# ---------------------------------------------------------------------------
+
+
+class Partial(NamedTuple):
+    acc: jnp.ndarray  # [..., hd] f32 — unnormalized weighted values
+    m: jnp.ndarray    # [...]     f32 — running max
+    l: jnp.ndarray    # [...]     f32 — running sum of exp
+
+
+def attention_partial(
+    q: jnp.ndarray,      # [B, H, hd] single-token query
+    k: jnp.ndarray,      # [B, T, KV, hd] local KV slice (may be masked)
+    v: jnp.ndarray,
+    valid: jnp.ndarray,  # [B, T] bool — which local positions are live
+) -> Partial:
+    B, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,btkh->bkgt", qg, k, preferred_element_type=_F32) * scale
+    s = jnp.where(valid[:, None, None, :], s, _NEG)
+    m = jnp.max(s, axis=-1)  # [B, KV, G]
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum(
+        "bkgt,btkh->bkgh", p, v.astype(_F32), preferred_element_type=_F32
+    )
+    return Partial(acc=acc, m=m, l=l)
+
+
+def combine_partials(p: Partial, ax: Axes, names) -> jnp.ndarray:
+    """Combine per-device partial attention (flash-decoding across shards).
+
+    Collective traffic per combine: O(B*H*hd) — three small reductions,
+    instead of moving any KV page across the fabric.
+    """
+    m_g = ax.pmax_many(p.m, names)
+    corr = jnp.exp(p.m - m_g)
+    l_g = ax.psum_many(p.l * corr, names)
+    acc_g = ax.psum_many(p.acc * corr[..., None], names)
+    out = acc_g / jnp.maximum(l_g, 1e-30)[..., None]
+    B, KV, G, hd = out.shape
+    return out.reshape(B, KV * G, hd)

@@ -1,0 +1,196 @@
+"""Shared model layers, written for manual-SPMD execution (see
+``distributed/axes.py``): TP over the ``model`` axis, FSDP gathers over the
+``data`` axis, explicit psums where partial sums cross shards.
+
+Numerics: params/activations bf16, normalization + softmax + logsumexp in
+f32, matmul accumulation in f32 via ``preferred_element_type``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.axes import Axes
+
+__all__ = [
+    "rms_norm",
+    "layer_norm",
+    "apply_rope",
+    "sinusoidal_positions",
+    "embed",
+    "unembed_loss",
+    "unembed_greedy",
+    "mlp_swiglu",
+    "mlp_gelu",
+    "dense",
+]
+
+_F32 = jnp.float32
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x @ w with f32 accumulation, output cast back to x.dtype."""
+    return jnp.einsum(
+        "...d,df->...f", x, w, preferred_element_type=_F32
+    ).astype(x.dtype)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(_F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(_F32))).astype(x.dtype)
+
+
+def rms_norm_tp(
+    x: jnp.ndarray, scale: jnp.ndarray, eps: float, ax: Axes, full_width: int
+) -> jnp.ndarray:
+    """RMSNorm over a TP-sharded last dim: sum-of-squares psum'ed over the
+    model axis so the normalizer matches the unsharded computation."""
+    xf = x.astype(_F32)
+    ss = jnp.sum(xf * xf, axis=-1, keepdims=True)
+    if x.shape[-1] != full_width:  # sharded: reduce across model shards
+        ss = ax.psum(ss, ax.model)
+    var = ss / full_width
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(_F32))).astype(x.dtype)
+
+
+def layer_norm(
+    x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float
+) -> jnp.ndarray:
+    xf = x.astype(_F32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(_F32) + bias.astype(_F32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Positions.
+# ---------------------------------------------------------------------------
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float
+) -> jnp.ndarray:
+    """RoPE over the last dim. x: [..., S, H, hd]; positions: [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=_F32) / half)
+    ang = positions[..., :, None].astype(_F32) * freq  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half].astype(_F32), x[..., half:].astype(_F32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal absolute position embeddings [..., S, d]."""
+    half = d // 2
+    freq = jnp.exp(-jnp.arange(half, dtype=_F32) * (jnp.log(10000.0) / (half - 1)))
+    ang = positions[..., :, None].astype(_F32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Vocab-sharded embedding / unembedding. The embedding table is TP-sharded
+# over the padded vocab (dim0, "model" axis) and FSDP-sharded over d (dim1).
+# ---------------------------------------------------------------------------
+
+
+def embed(tokens: jnp.ndarray, emb: jnp.ndarray, ax: Axes) -> jnp.ndarray:
+    """tokens [B,S] int32, emb [V_local, d] (already FSDP-gathered)."""
+    v_local = emb.shape[0]
+    if ax.model is None:
+        return jnp.take(emb, tokens, axis=0)
+    start = ax.index(ax.model) * v_local
+    local = tokens - start
+    ok = (local >= 0) & (local < v_local)
+    safe = jnp.clip(local, 0, v_local - 1)
+    out = jnp.take(emb, safe, axis=0) * ok[..., None].astype(emb.dtype)
+    return ax.psum(out, ax.model)
+
+
+def unembed_loss(
+    x: jnp.ndarray,
+    emb: jnp.ndarray,
+    labels: jnp.ndarray,
+    ax: Axes,
+    *,
+    mask: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Fused unembed + cross-entropy over the TP-sharded vocab.
+
+    Never materializes global logits: logsumexp uses a pmax/psum pair and
+    the label logit a masked psum — the only cross-shard traffic is O(B*S).
+    x: [B,S,d]; emb: [V_local, d]; labels: [B,S]. Returns mean NLL (f32).
+    """
+    v_local = emb.shape[0]
+    logits = jnp.einsum(
+        "bsd,vd->bsv", x, emb, preferred_element_type=_F32
+    )  # [B,S,V_local] f32
+    m_loc = jnp.max(logits, axis=-1)
+    m = ax.pmax(jax.lax.stop_gradient(m_loc), ax.model)
+    se = ax.psum(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1), ax.model)
+    start = ax.index(ax.model) * v_local if ax.model is not None else 0
+    local = labels - start
+    ok = (local >= 0) & (local < v_local)
+    safe = jnp.clip(local, 0, v_local - 1)
+    ll_loc = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    label_logit = ax.psum(jnp.where(ok, ll_loc, 0.0), ax.model)
+    nll = jnp.log(se) + m - label_logit  # [B,S]
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        denom = jnp.asarray(nll.size, _F32)
+    return jnp.sum(nll) / denom
+
+
+def unembed_greedy(
+    x: jnp.ndarray, emb: jnp.ndarray, ax: Axes
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Greedy next token over the TP-sharded vocab without gathering logits.
+
+    x: [B,d] -> (token [B] int32, logprob [B] f32).
+    """
+    v_local = emb.shape[0]
+    logits = jnp.einsum("bd,vd->bv", x, emb, preferred_element_type=_F32)
+    m_loc = jnp.max(logits, axis=-1)
+    i_loc = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    m = ax.pmax(m_loc, ax.model)
+    se = ax.psum(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1), ax.model)
+    start = ax.index(ax.model) * v_local if ax.model is not None else 0
+    is_max = m_loc >= m  # ties: every shard claiming max contributes; take min id
+    big = jnp.iinfo(jnp.int32).max
+    cand = jnp.where(is_max, i_loc + start, big)
+    token = -ax.pmax(-cand, ax.model)  # global argmin over candidate ids
+    logprob = m - jnp.log(se)
+    return token.astype(jnp.int32), logprob
+
+
+# ---------------------------------------------------------------------------
+# MLPs (TP over d_ff; partial down-projection psum'ed over "model").
+# ---------------------------------------------------------------------------
+
+
+def mlp_swiglu(x, w_gate, w_up, w_down, ax: Axes,
+               reduce_dtype=_F32) -> jnp.ndarray:
+    g = dense(x, w_gate)
+    u = dense(x, w_up)
+    h = jax.nn.silu(g.astype(_F32)).astype(x.dtype) * u
+    out = jnp.einsum("...f,fd->...d", h, w_down, preferred_element_type=_F32)
+    # TP partial reduction; bf16 wire halves the dominant collective bytes.
+    return ax.psum(out.astype(reduce_dtype), ax.model).astype(x.dtype)
+
+
+def mlp_gelu(x, w1, b1, w2, b2, ax: Axes, reduce_dtype=_F32) -> jnp.ndarray:
+    h = dense(x, w1) + b1.astype(x.dtype)
+    h = jax.nn.gelu(h.astype(_F32)).astype(x.dtype)
+    out = jnp.einsum("...f,fd->...d", h, w2, preferred_element_type=_F32)
+    out = ax.psum(out.astype(reduce_dtype), ax.model)
+    return (out.astype(_F32) + b2.astype(_F32)).astype(x.dtype)

@@ -1,0 +1,96 @@
+"""Mixture-of-Experts layer (grok-1 / mixtral: 8 experts, top-2).
+
+Dispatch is the paper's request-routing problem in miniature: tokens are IO
+requests, experts are storage shards, and the dispatch buffer is a bounded
+IO queue (capacity factor == queue depth). We use a *local* capacity-buffer
+dispatch: position-in-expert via a cumsum over one-hot assignments, a
+scatter into an [E, C, d] buffer, batched expert matmuls, and a gather back
+— all local to the device (tokens stay on their data shard; expert weights
+are TP-sharded over d_ff, FSDP-sharded over d_model). No GSPMD guessing:
+the only collective is the down-projection psum over "model".
+
+An EP (expert-parallel all_to_all) variant is a §Perf hillclimb option —
+see EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.distributed.axes import Axes
+from repro.models.layers import dense
+
+__all__ = ["MoEOut", "moe_swiglu", "capacity"]
+
+_F32 = jnp.float32
+
+
+class MoEOut(NamedTuple):
+    y: jnp.ndarray         # [T, d]
+    aux_loss: jnp.ndarray  # load-balance loss (switch-style)
+    dropped: jnp.ndarray   # fraction of (token, k) slots dropped
+
+
+def capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_swiglu(
+    x: jnp.ndarray,          # [T, d] local tokens
+    w_router: jnp.ndarray,   # [d, E] (replicated over model, FSDP dim0)
+    w_gate: jnp.ndarray,     # [E, d, f_local]
+    w_up: jnp.ndarray,       # [E, d, f_local]
+    w_down: jnp.ndarray,     # [E, f_local, d]
+    cfg: MoEConfig,
+    ax: Axes,
+    reduce_dtype=_F32,
+) -> MoEOut:
+    T, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = capacity(T, cfg)
+
+    logits = jnp.einsum("td,de->te", x, w_router, preferred_element_type=_F32)
+    probs_full = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs_full, K)          # [T, K]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalize
+
+    # Load-balance aux loss (fraction routed vs mean router prob).
+    frac = jnp.mean(
+        jax.nn.one_hot(top_e[:, 0], E, dtype=_F32), axis=0
+    )  # top-1 routing fraction
+    mean_p = jnp.mean(probs_full, axis=0)
+    aux = E * jnp.sum(frac * mean_p)
+
+    # Position of each (token, k) slot within its expert queue.
+    e_flat = top_e.reshape(-1)                            # [T*K]
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)   # [T*K, E]
+    pos = jnp.take_along_axis(
+        jnp.cumsum(onehot, axis=0) - 1, e_flat[:, None], axis=1
+    )[:, 0]                                               # [T*K]
+    keep = pos < C
+    dropped = 1.0 - jnp.mean(keep.astype(_F32))
+    slot = jnp.where(keep, e_flat * C + pos, E * C)       # overflow -> scratch row
+
+    # Dispatch: scatter tokens into the expert buffers (+1 scratch row).
+    tok_idx = jnp.repeat(jnp.arange(T), K)
+    xb = jnp.zeros((E * C + 1, d), x.dtype).at[slot].set(x[tok_idx])
+    xb = xb[: E * C].reshape(E, C, d)
+
+    # Expert computation (batched over E; f_local is the TP shard).
+    g = jnp.einsum("ecd,edf->ecf", xb, w_gate, preferred_element_type=_F32)
+    u = jnp.einsum("ecd,edf->ecf", xb, w_up, preferred_element_type=_F32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    out_e = jnp.einsum("ecf,efd->ecd", h, w_down, preferred_element_type=_F32)
+
+    # Combine: gather each slot's output, weight by router prob, sum over K.
+    flat = jnp.concatenate(
+        [out_e.reshape(E * C, d), jnp.zeros((1, d), out_e.dtype)], axis=0
+    )
+    y_slots = flat[slot] * (top_p.reshape(-1)[:, None] * keep[:, None])
+    y = jnp.sum(y_slots.reshape(T, K, d), axis=1)
+    y = ax.psum(y.astype(reduce_dtype), ax.model)  # TP partial reduction
+    return MoEOut(y=y.astype(x.dtype), aux_loss=aux, dropped=dropped)

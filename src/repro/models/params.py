@@ -1,0 +1,374 @@
+"""Declarative parameter definitions: shapes, sharding, init.
+
+Every leaf is described by a :class:`ParamDef` with a global shape plus the
+dims that are FSDP-sharded (over "data") and TP-sharded (over "model").
+Stacked-layer leaves get a leading layer dim (never sharded). The same defs
+produce: init pytrees (smoke tests), ShapeDtypeStruct pytrees + PartitionSpecs
+(dry-run), and the per-leaf FSDP-gather dims used inside the forward scan.
+
+TP rule (``Axes.tp_degree``): a dim is TP-sharded only when the mesh model
+axis divides it; otherwise compute is replicated across the model axis
+(e.g. whisper-tiny's 6 heads on a 16-wide model axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, SSMConfig
+
+__all__ = [
+    "ParamDef",
+    "MeshSizes",
+    "build_defs",
+    "init_params",
+    "param_structs",
+    "param_pspecs",
+    "fsdp_dims",
+    "pad_vocab",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSizes:
+    data: int = 1
+    model: int = 1
+
+    def tp(self, n: int) -> int:
+        return self.model if (self.model > 1 and n % self.model == 0) else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]          # per-layer (unstacked) global shape
+    fsdp_dim: Optional[int] = None  # dim sharded over "data"
+    tp_dim: Optional[int] = None    # dim sharded over "model"
+    init: str = "normal"            # normal | zeros | ones | lambda
+    scale: float = 0.02
+    # Gradient sync over the model axis (manual SPMD, check_rep=False):
+    # True  => forward consumers are split over "model" (grads are partial,
+    #          psum over "model" required);
+    # False => leaf is TP-owned or its use is fully replicated (grads are
+    #          already correct / identical across the model axis).
+    model_grad: bool = False
+
+
+def pad_vocab(v: int, multiple: int = 256) -> int:
+    return -(-v // multiple) * multiple
+
+
+# ---------------------------------------------------------------------------
+# Per-block-kind parameter tables.
+# ---------------------------------------------------------------------------
+
+
+def _attn_defs(cfg: ModelConfig, ms: MeshSizes, cross: bool = False) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    tp_h = ms.tp(H)
+    split = tp_h > 1
+    pre = "x" if cross else ""
+    defs = {
+        f"{pre}wq": ParamDef((d, H * hd), 0, 1 if split else None,
+                             scale=d ** -0.5),
+        f"{pre}wk": ParamDef((d, KV * hd), 0, None, scale=d ** -0.5,
+                             model_grad=split),
+        f"{pre}wv": ParamDef((d, KV * hd), 0, None, scale=d ** -0.5,
+                             model_grad=split),
+        f"{pre}wo": ParamDef((H * hd, d), 1, 0 if split else None,
+                             scale=(H * hd) ** -0.5),
+        f"{pre}norm": ParamDef((d,), init="zeros", model_grad=split),
+    }
+    return defs
+
+
+def _mlp_defs(cfg: ModelConfig, ms: MeshSizes) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    tp_f = ms.tp(f)
+    tpd = 1 if tp_f > 1 else None
+    split = tp_f > 1
+    if cfg.family == "audio":  # gelu mlp with biases (whisper)
+        return {
+            "w1": ParamDef((d, f), 0, tpd, scale=d ** -0.5),
+            "b1": ParamDef((f,), None, 0 if split else None, init="zeros"),
+            "w2": ParamDef((f, d), 1, 0 if split else None, scale=f ** -0.5),
+            "b2": ParamDef((d,), init="zeros"),
+            "norm2": ParamDef((d,), init="zeros", model_grad=split),
+        }
+    if cfg.moe is not None:
+        E = cfg.moe.n_experts
+        return {
+            "w_router": ParamDef((d, E), 0, None, scale=d ** -0.5,
+                                 model_grad=split),
+            "w_gate": ParamDef((E, d, f), 1, 2 if split else None,
+                               scale=d ** -0.5),
+            "w_up": ParamDef((E, d, f), 1, 2 if split else None,
+                             scale=d ** -0.5),
+            "w_down": ParamDef((E, f, d), 2, 1 if split else None,
+                               scale=f ** -0.5),
+            "norm2": ParamDef((d,), init="zeros", model_grad=split),
+        }
+    return {
+        "w_gate": ParamDef((d, f), 0, tpd, scale=d ** -0.5),
+        "w_up": ParamDef((d, f), 0, tpd, scale=d ** -0.5),
+        "w_down": ParamDef((f, d), 1, 0 if split else None, scale=f ** -0.5),
+        "norm2": ParamDef((d,), init="zeros", model_grad=split),
+    }
+
+
+def _rglru_defs(cfg: ModelConfig, ms: MeshSizes) -> dict:
+    d = cfg.d_model
+    w = d  # lru width = d_model
+    tp_w = ms.tp(w)
+    tpd = 1 if tp_w > 1 else None
+    vec_tp = 0 if tp_w > 1 else None
+    return {
+        "w1": ParamDef((d, w), 0, tpd, scale=d ** -0.5),
+        "w2": ParamDef((d, w), 0, tpd, scale=d ** -0.5),
+        "w_out": ParamDef((w, d), 1, 0 if tp_w > 1 else None, scale=w ** -0.5),
+        "conv": ParamDef((4, w), None, 1 if tp_w > 1 else None, scale=0.1),
+        "w_a": ParamDef((w,), None, vec_tp, scale=0.5),
+        "b_a": ParamDef((w,), None, vec_tp, init="zeros"),
+        "w_x": ParamDef((w,), None, vec_tp, scale=0.5),
+        "b_x": ParamDef((w,), None, vec_tp, init="zeros"),
+        "lam": ParamDef((w,), None, vec_tp, init="lambda"),
+        "norm": ParamDef((d,), init="zeros", model_grad=tp_w > 1),
+    }
+
+
+def _ssd_defs(cfg: ModelConfig, ms: MeshSizes) -> dict:
+    d = cfg.d_model
+    s = cfg.ssm or SSMConfig()
+    di = s.expand * d
+    H = di // s.head_dim
+    N = s.state_dim
+    tp_i = ms.tp(di) if ms.tp(di) == ms.tp(H) else 1  # heads & width together
+    tpd = 1 if tp_i > 1 else None
+    vec_tp = 0 if tp_i > 1 else None
+    split = tp_i > 1
+    return {
+        "w_z": ParamDef((d, di), 0, tpd, scale=d ** -0.5),
+        "w_x": ParamDef((d, di), 0, tpd, scale=d ** -0.5),
+        "w_bc": ParamDef((d, 2 * N), 0, None, scale=d ** -0.5, model_grad=split),
+        "w_dt": ParamDef((d, H), 0, tpd, scale=d ** -0.5),
+        "conv_x": ParamDef((s.conv_width, di), None, 1 if split else None,
+                           scale=0.1),
+        "conv_b": ParamDef((s.conv_width, N), None, None, scale=0.1,
+                           model_grad=split),
+        "conv_c": ParamDef((s.conv_width, N), None, None, scale=0.1,
+                           model_grad=split),
+        "A_log": ParamDef((H,), None, vec_tp, init="ones"),
+        "dt_bias": ParamDef((H,), None, vec_tp, init="zeros"),
+        "D": ParamDef((H,), None, vec_tp, init="ones"),
+        "norm_g": ParamDef((di,), None, vec_tp, init="zeros"),
+        "w_out": ParamDef((di, d), 1, 0 if split else None, scale=di ** -0.5),
+        "norm": ParamDef((d,), init="zeros", model_grad=split),
+    }
+
+
+def block_defs(kind: str, cfg: ModelConfig, ms: MeshSizes, *, decoder: bool = False) -> dict:
+    """Parameter defs for one block of the given kind."""
+    defs: dict[str, ParamDef] = {}
+    if kind.startswith("attn"):
+        defs.update(_attn_defs(cfg, ms))
+        if decoder and cfg.enc_dec:
+            defs.update(_attn_defs(cfg, ms, cross=True))
+        defs.update(_mlp_defs(cfg, ms))
+    elif kind == "rglru":
+        defs.update(_rglru_defs(cfg, ms))
+        defs.update(_mlp_defs(cfg, ms))
+    elif kind == "ssd":
+        defs.update(_ssd_defs(cfg, ms))
+    else:
+        raise ValueError(kind)
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Whole-model defs: pattern superblocks (stacked) + tail + embeddings (+enc).
+# ---------------------------------------------------------------------------
+
+
+def model_layout(cfg: ModelConfig) -> tuple[int, tuple[str, ...]]:
+    """(n_superblock_repeats, tail_kinds)."""
+    p = len(cfg.block_pattern)
+    reps = cfg.n_layers // p
+    tail = cfg.layer_kinds()[reps * p:]
+    return reps, tail
+
+
+def build_defs(cfg: ModelConfig, ms: MeshSizes) -> dict:
+    """Full nested ParamDef tree (mirrors the params pytree structure)."""
+    return _apply_fsdp_toggle(_build_defs_inner(cfg, ms), cfg)
+
+
+def _build_defs_inner(cfg: ModelConfig, ms: MeshSizes) -> dict:
+    reps, tail = model_layout(cfg)
+    vp = pad_vocab(cfg.vocab)
+    split_v = ms.model > 1
+    tree: dict = {
+        "embed": ParamDef((vp, cfg.d_model), 1, 0, scale=0.02),
+        "final_norm": ParamDef((cfg.d_model,), init="zeros",
+                               model_grad=split_v),
+        "blocks": [
+            block_defs(k, cfg, ms, decoder=cfg.enc_dec)
+            for k in cfg.block_pattern
+        ],
+        "tail": [
+            block_defs(k, cfg, ms, decoder=cfg.enc_dec) for k in tail
+        ],
+    }
+    if not cfg.tie_embeddings:
+        tree["unembed"] = ParamDef((vp, cfg.d_model), 1, 0, scale=0.02)
+    if cfg.enc_dec:
+        tree["enc_blocks"] = [block_defs("attn_full", cfg, ms)]
+        tree["enc_final_norm"] = ParamDef((cfg.d_model,), init="zeros")
+    return tree
+
+
+def _leaf_init(d: ParamDef, key, dtype) -> jnp.ndarray:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "lambda":  # RG-LRU Lambda: a in [0.9, 0.999]
+        u = jax.random.uniform(key, d.shape, jnp.float32, 0.9, 0.999)
+        # softplus^{-1}(-log(a)/c) with c=8
+        x = -jnp.log(u) / 8.0
+        lam = jnp.log(jnp.expm1(jnp.maximum(x, 1e-8)))
+        return lam.astype(dtype)
+    return (jax.random.normal(key, d.shape, jnp.float32) * d.scale).astype(dtype)
+
+
+def _apply_fsdp_toggle(defs, cfg):
+    """Drop FSDP sharding when cfg.fsdp is False (params replicated over
+    "data"; kills the per-layer weight all-gathers at the cost of per-device
+    param/optimizer memory — a §Perf trade for mid-sized models)."""
+    if cfg.fsdp:
+        return defs
+
+    def strip(d):
+        if isinstance(d, ParamDef):
+            return dataclasses.replace(d, fsdp_dim=None)
+        if isinstance(d, dict):
+            return {k: strip(v) for k, v in d.items()}
+        if isinstance(d, list):
+            return [strip(v) for v in d]
+        return d
+
+    return strip(defs)
+
+
+def _map_tree(tree, fn, *, stack: dict[int, int]):
+    """Apply fn(def, path, n_stack) over the def tree. 'blocks'/'enc_blocks'
+    entries are stacked with their repeat counts from ``stack``."""
+    out = {}
+    for name, sub in tree.items():
+        if name == "blocks":
+            out[name] = [
+                {k: fn(d, (name, i, k), stack["blocks"]) for k, d in blk.items()}
+                for i, blk in enumerate(sub)
+            ]
+        elif name == "enc_blocks":
+            out[name] = [
+                {k: fn(d, (name, i, k), stack["enc_blocks"]) for k, d in blk.items()}
+                for i, blk in enumerate(sub)
+            ]
+        elif name == "tail":
+            out[name] = [
+                {k: fn(d, (name, i, k), 0) for k, d in blk.items()}
+                for i, blk in enumerate(sub)
+            ]
+        else:
+            out[name] = fn(sub, (name,), 0)
+    return out
+
+
+def _stacks(cfg: ModelConfig) -> dict[int, int]:
+    reps, _ = model_layout(cfg)
+    return {"blocks": reps, "enc_blocks": cfg.n_enc_layers}
+
+
+def init_params(cfg: ModelConfig, key, ms: MeshSizes = MeshSizes()) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    defs = build_defs(cfg, ms)
+    keys = iter(jax.random.split(key, 4096))
+
+    def fn(d: ParamDef, path, n_stack):
+        if n_stack:
+            sub = jax.random.split(next(keys), n_stack)
+            return jnp.stack([_leaf_init(d, k, dtype) for k in sub])
+        return _leaf_init(d, next(keys), dtype)
+
+    return _map_tree(defs, fn, stack=_stacks(cfg))
+
+
+def param_structs(cfg: ModelConfig, ms: MeshSizes = MeshSizes()) -> dict:
+    """ShapeDtypeStruct pytree (dry-run: no allocation)."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    defs = build_defs(cfg, ms)
+
+    def fn(d: ParamDef, path, n_stack):
+        shape = (n_stack,) + d.shape if n_stack else d.shape
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    return _map_tree(defs, fn, stack=_stacks(cfg))
+
+
+def param_pspecs(
+    cfg: ModelConfig,
+    ms: MeshSizes = MeshSizes(),
+    *,
+    data_axis: Optional[str] = "data",
+    model_axis: Optional[str] = "model",
+) -> dict:
+    """PartitionSpec pytree matching the params tree."""
+    defs = build_defs(cfg, ms)
+
+    def fn(d: ParamDef, path, n_stack):
+        ndim = len(d.shape)
+        axes: list = [None] * ndim
+        if d.fsdp_dim is not None and data_axis and ms.data > 1:
+            axes[d.fsdp_dim] = data_axis
+        if d.tp_dim is not None and model_axis and ms.model > 1:
+            axes[d.tp_dim] = model_axis
+        if n_stack:
+            axes = [None] + axes
+        return P(*axes)
+
+    return _map_tree(defs, fn, stack=_stacks(cfg))
+
+
+def fsdp_dims(cfg: ModelConfig, ms: MeshSizes = MeshSizes()) -> dict:
+    """Per-leaf FSDP dim (in the per-layer view) or None — used by the
+    forward pass to all-gather each layer's weights (ZeRO-3)."""
+    defs = build_defs(cfg, ms)
+
+    def fn(d: ParamDef, path, n_stack):
+        return d.fsdp_dim
+
+    return _map_tree(defs, fn, stack=_stacks(cfg))
+
+
+def grad_sync(cfg: ModelConfig, ms: MeshSizes = MeshSizes()) -> dict:
+    """Per-leaf gradient sync spec: dict(data=bool, model=bool).
+
+    data=True  => leaf is NOT FSDP-sharded, grads need psum over "data"
+                  (FSDP leaves are reduced by the all-gather transpose).
+    model=True => forward consumers split over "model": psum over "model".
+    Grads always need psum over "pod" (pure DP) when a pod axis exists.
+    """
+    defs = build_defs(cfg, ms)
+
+    def fn(d: ParamDef, path, n_stack):
+        return {
+            "data": d.fsdp_dim is None,      # data-replicated => psum("data")
+            "model": d.model_grad,           # split consumers => psum("model")
+            "model_rep": d.tp_dim is None,   # value replicated over "model"
+        }
+
+    return _map_tree(defs, fn, stack=_stacks(cfg))

@@ -1,0 +1,124 @@
+"""RG-LRU recurrent block (recurrentgemma / Griffin).
+
+The Griffin recurrent block: two branches from the residual stream —
+GeLU(x·W1) gating a (x·W2 -> causal conv1d -> RG-LRU) branch — merged by an
+output projection.
+
+RG-LRU recurrence (per channel, gates diagonal — see DESIGN.md for the
+block-diagonal simplification note):
+
+    r_t = sigmoid(w_a * u_t + b_a)              (recurrence gate)
+    i_t = sigmoid(w_x * u_t + b_x)              (input gate)
+    log a_t = -c * softplus(Lambda) * r_t       (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Training uses ``jax.lax.associative_scan`` (log-depth linear recurrence);
+decode is the single-step update with carried state. The recurrence is
+elementwise over the LRU width, so it is embarrassingly TP-sharded.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.axes import Axes
+from repro.models.layers import dense
+
+__all__ = ["rglru_scan", "rglru_step", "recurrent_block", "recurrent_block_step"]
+
+_F32 = jnp.float32
+_C = 8.0
+
+
+def _gates(u, w_a, b_a, w_x, b_x, lam):
+    uf = u.astype(_F32)
+    r = jax.nn.sigmoid(uf * w_a + b_a)
+    i = jax.nn.sigmoid(uf * w_x + b_x)
+    log_a = -_C * jax.nn.softplus(lam) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+    return a, b
+
+
+def rglru_scan(u: jnp.ndarray, w_a, b_a, w_x, b_x, lam) -> jnp.ndarray:
+    """u: [B, S, W] -> h: [B, S, W] via associative scan over S."""
+    a, b = _gates(u, w_a.astype(_F32), b_a.astype(_F32),
+                  w_x.astype(_F32), b_x.astype(_F32), lam.astype(_F32))
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(op, (a, b), axis=1)
+    return h.astype(u.dtype)
+
+
+def rglru_step(u, h_prev, w_a, b_a, w_x, b_x, lam):
+    """Single decode step. u: [B, W], h_prev: [B, W] (f32)."""
+    a, b = _gates(u, w_a.astype(_F32), b_a.astype(_F32),
+                  w_x.astype(_F32), b_x.astype(_F32), lam.astype(_F32))
+    h = a * h_prev + b
+    return h.astype(u.dtype), h
+
+
+def _causal_conv1d(x: jnp.ndarray, kernel: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x: [B, S, W], kernel: [K, W]."""
+    K = kernel.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=_F32)
+    for k in range(K):
+        out = out + xp[:, k : k + x.shape[1]].astype(_F32) * kernel[k].astype(_F32)
+    return out.astype(x.dtype)
+
+
+def recurrent_block(
+    x: jnp.ndarray, p: dict, ax: Axes, *, capture: bool = False,
+    reduce_dtype=_F32,
+):
+    """Full Griffin recurrent block, training form. x: [B, S, d].
+
+    Params (w = lru width, TP-sharded on dim1 of the projections):
+      w1 [d, w_l], w2 [d, w_l], w_out [w_l, d], conv [K, w_l],
+      gate params w_a/b_a/w_x/b_x/lam [w_l].
+
+    With ``capture``, also returns the decode-continuation state
+    {"h": [B, w_l] f32, "conv": [B, K-1, w_l]} (prefill -> decode handoff).
+    """
+    y1 = jax.nn.gelu(dense(x, p["w1"]).astype(_F32)).astype(x.dtype)
+    u_pre = dense(x, p["w2"])
+    u = _causal_conv1d(u_pre, p["conv"])
+    h = rglru_scan(u, p["w_a"], p["b_a"], p["w_x"], p["b_x"], p["lam"])
+    merged = (y1.astype(_F32) * h.astype(_F32)).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", merged, p["w_out"], preferred_element_type=_F32)
+    out = ax.psum(out.astype(reduce_dtype), ax.model).astype(x.dtype)
+    if not capture:
+        return out, None
+    K = p["conv"].shape[0]
+    state = {
+        "h": h[:, -1].astype(_F32),
+        "conv": u_pre[:, -(K - 1):],
+    }
+    return out, state
+
+
+def recurrent_block_step(
+    x: jnp.ndarray, state: dict, p: dict, ax: Axes
+) -> tuple[jnp.ndarray, dict]:
+    """Decode step. x: [B, d]. state: {"h": [B,w_l] f32, "conv": [B,K-1,w_l]}."""
+    y1 = jax.nn.gelu(dense(x, p["w1"]).astype(_F32)).astype(x.dtype)
+    u_in = dense(x, p["w2"])  # [B, w_l]
+    K = p["conv"].shape[0]
+    window = jnp.concatenate([state["conv"], u_in[:, None, :]], axis=1)  # [B,K,w]
+    u = jnp.einsum("bkw,kw->bw", window.astype(_F32), p["conv"].astype(_F32))
+    u = u.astype(x.dtype)
+    h_out, h_new = rglru_step(
+        u, state["h"], p["w_a"], p["b_a"], p["w_x"], p["b_x"], p["lam"]
+    )
+    merged = (y1.astype(_F32) * h_out.astype(_F32)).astype(x.dtype)
+    out = jnp.einsum("bw,wd->bd", merged, p["w_out"], preferred_element_type=_F32)
+    out = ax.psum(out, ax.model).astype(x.dtype)
+    new_state = {"h": h_new, "conv": window[:, 1:]}
+    return out, new_state

@@ -1,0 +1,194 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Training uses the chunked SSD algorithm: quadratic attention-like compute
+inside chunks (MXU-friendly batched matmuls) + a linear recurrence over
+chunk boundary states. Decode is the O(1) state update.
+
+TP layout: heads (and the inner width d_i = expand*d_model) are sharded
+over "model"; the shared B/C projections (ngroups = 1, state dim N) are
+replicated across model shards (they are tiny: d x 2N).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.distributed.axes import Axes
+from repro.models.layers import dense, rms_norm_tp
+
+__all__ = ["ssd_block", "ssd_block_step", "ssd_chunked"]
+
+_F32 = jnp.float32
+
+
+def _causal_conv1d(x, kernel):
+    K = kernel.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros(x.shape, _F32)
+    for k in range(K):
+        out = out + xp[:, k : k + x.shape[1]].astype(_F32) * kernel[k].astype(_F32)
+    return out.astype(x.dtype)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,    # [B, S, H, P]
+    dt: jnp.ndarray,   # [B, S, H]  (already softplus'ed, > 0)
+    A: jnp.ndarray,    # [H]        (negative)
+    Bm: jnp.ndarray,   # [B, S, N]
+    Cm: jnp.ndarray,   # [B, S, N]
+    chunk: int,
+    *,
+    return_state: bool = False,
+):
+    """Chunked SSD scan: y[t] = C_t . h_t,  h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t."""
+    Bsz, S0, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S0)
+    pad = (-S0) % Q
+    if pad:  # zero-pad the tail: dt=0 contributes nothing to states/outputs
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    S = S0 + pad
+    nc = S // Q
+
+    xf = x.astype(_F32).reshape(Bsz, nc, Q, H, P)
+    dtf = dt.astype(_F32).reshape(Bsz, nc, Q, H)
+    Bf = Bm.astype(_F32).reshape(Bsz, nc, Q, N)
+    Cf = Cm.astype(_F32).reshape(Bsz, nc, Q, N)
+
+    dA = dtf * A.astype(_F32)                       # [B,nc,Q,H] (negative)
+    cum = jnp.cumsum(dA, axis=2)                    # within-chunk cumulative
+
+    # Intra-chunk (diagonal) term.
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cf, Bf, preferred_element_type=_F32)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # [B,nc,Q,Q,H]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], decay, 0.0)
+    y_diag = jnp.einsum(
+        "bcqk,bcqkh,bckh,bckhp->bcqhp", CB, decay, dtf, xf,
+        preferred_element_type=_F32,
+    )
+
+    # Chunk boundary states.
+    edge = jnp.exp(cum[:, :, -1:, :] - cum)         # exp(cum_end - cum_s)
+    states = jnp.einsum(
+        "bckh,bckn,bckhp->bchnp", edge * dtf, Bf, xf, preferred_element_type=_F32
+    )                                               # [B,nc,H,N,P]
+
+    # Inter-chunk linear recurrence over boundary states.
+    chunk_decay = jnp.exp(cum[:, :, -1, :])         # [B,nc,H]
+
+    def op(l, r):
+        al, hl = l
+        ar, hr = r
+        return al * ar, hl * ar[..., None, None] + hr
+
+    _, h_all = jax.lax.associative_scan(op, (chunk_decay, states), axis=1)
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(h_all[:, :1]), h_all[:, :-1]], axis=1
+    )                                               # state entering each chunk
+
+    y_off = jnp.einsum(
+        "bcqn,bchnp,bcqh->bcqhp", Cf, h_prev, jnp.exp(cum),
+        preferred_element_type=_F32,
+    )
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    if pad:
+        y = y[:, :S0]
+    y = y.astype(x.dtype)
+    if return_state:
+        # Final state in decode layout [B, H, N, P].
+        return y, h_all[:, -1]
+    return y
+
+
+def ssd_block(
+    x: jnp.ndarray, p: dict, cfg: SSMConfig, ax: Axes, *,
+    capture: bool = False, reduce_dtype=_F32,
+):
+    """Full Mamba-2 block, training form. x: [B, S, d].
+
+    With ``capture``, also returns the decode-continuation state
+    {"h": [B, H_l, N, P] f32, "conv": [B, K-1, di_l + 2N]}.
+    """
+    Bsz, S, d = x.shape
+    z = dense(x, p["w_z"])                  # [B,S,di_l]
+    xin_pre = dense(x, p["w_x"])            # [B,S,di_l]
+    bc = dense(x, p["w_bc"])                # [B,S,2N] (replicated over model)
+    dt_raw = dense(x, p["w_dt"])            # [B,S,H_l]
+
+    xin = _causal_conv1d(xin_pre, p["conv_x"])
+    N = cfg.state_dim
+    Bm = _causal_conv1d(bc[..., :N], p["conv_b"])
+    Cm = _causal_conv1d(bc[..., N:], p["conv_c"])
+
+    H_l = p["A_log"].shape[0]
+    P = cfg.head_dim
+    xh = xin.reshape(Bsz, S, H_l, P)
+    dt = jax.nn.softplus(dt_raw.astype(_F32) + p["dt_bias"].astype(_F32))
+    A = -jnp.exp(p["A_log"].astype(_F32))
+
+    if capture:
+        y, h_last = ssd_chunked(xh, dt, A, Bm, Cm, cfg.chunk, return_state=True)
+    else:
+        y = ssd_chunked(xh, dt, A, Bm, Cm, cfg.chunk)
+    y = y + p["D"].astype(_F32)[None, None, :, None] * xh.astype(_F32)
+    y = y.reshape(Bsz, S, H_l * P)
+    y = (y * jax.nn.silu(z.astype(_F32))).astype(x.dtype)
+    y = rms_norm_tp(y, p["norm_g"], 1e-6, ax, cfg.expand * d)
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"], preferred_element_type=_F32)
+    out = ax.psum(out.astype(reduce_dtype), ax.model).astype(x.dtype)
+    if not capture:
+        return out, None
+    K = p["conv_x"].shape[0]
+    feats = jnp.concatenate([xin_pre, bc], axis=-1)  # pre-conv features
+    state = {
+        "h": h_last,
+        "conv": feats[:, -(K - 1):],
+    }
+    return out, state
+
+
+def ssd_block_step(
+    x: jnp.ndarray, state: dict, p: dict, cfg: SSMConfig, ax: Axes
+) -> tuple[jnp.ndarray, dict]:
+    """Decode step. x: [B, d]; state: {"h": [B,H_l,N,P] f32, "conv": [B,K-1,di_l+2N]}."""
+    Bsz, d = x.shape
+    z = dense(x, p["w_z"])
+    xin = dense(x, p["w_x"])
+    bc = dense(x, p["w_bc"])
+    dt_raw = dense(x, p["w_dt"])
+
+    K = p["conv_x"].shape[0]
+    N = cfg.state_dim
+    feats = jnp.concatenate([xin, bc], axis=-1)  # [B, di_l+2N]
+    window = jnp.concatenate([state["conv"], feats[:, None, :]], axis=1)  # [B,K,*]
+    kernel = jnp.concatenate([p["conv_x"], p["conv_b"], p["conv_c"]], axis=1)
+    conv = jnp.einsum("bkf,kf->bf", window.astype(_F32), kernel.astype(_F32))
+    di_l = xin.shape[-1]
+    xin_c = conv[:, :di_l]
+    Bm = conv[:, di_l : di_l + N]
+    Cm = conv[:, di_l + N :]
+
+    H_l = p["A_log"].shape[0]
+    P = cfg.head_dim
+    xh = xin_c.reshape(Bsz, H_l, P)
+    dt = jax.nn.softplus(dt_raw.astype(_F32) + p["dt_bias"].astype(_F32))  # [B,H_l]
+    A = -jnp.exp(p["A_log"].astype(_F32))
+    decay = jnp.exp(dt * A)                                   # [B,H_l]
+
+    dBx = jnp.einsum("bn,bhp->bhnp", Bm, dt[..., None] * xh)
+    h = state["h"] * decay[..., None, None] + dBx
+    y = jnp.einsum("bn,bhnp->bhp", Cm, h, preferred_element_type=_F32)
+    y = y + p["D"].astype(_F32)[None, :, None] * xh
+    y = y.reshape(Bsz, H_l * P)
+    y = (y * jax.nn.silu(z.astype(_F32))).astype(x.dtype)
+    y = rms_norm_tp(y, p["norm_g"], 1e-6, ax, cfg.expand * d)
+    out = jnp.einsum("bw,wd->bd", y, p["w_out"], preferred_element_type=_F32)
+    out = ax.psum(out, ax.model).astype(x.dtype)
+    return out, {"h": h, "conv": window[:, 1:]}

@@ -1,0 +1,353 @@
+"""Unified model trunk for all 10 assigned architectures.
+
+A model is a cycled ``block_pattern`` (attention / RG-LRU / SSD blocks)
+scanned as stacked "superblocks" (one pattern repetition per scan step) +
+an unstacked tail for non-divisible depths, plus vocab-sharded embeddings,
+an optional whisper encoder (stub frame embeddings) and an optional VLM
+patch-embedding prefix (prefix-LM masking).
+
+Everything runs in manual SPMD (``Axes``): FSDP all-gathers per layer
+(ZeRO-3 via AD transposition), TP over heads / d_ff / recurrence width,
+psums only where partial sums cross the model axis.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.distributed.axes import Axes, pvary_like
+from repro.models import params as pm
+from repro.models.attention import blockwise_attention
+from repro.models.layers import (
+    apply_rope,
+    dense,
+    embed,
+    layer_norm,
+    mlp_gelu,
+    mlp_swiglu,
+    rms_norm,
+    sinusoidal_positions,
+    unembed_loss,
+)
+from repro.models.moe import moe_swiglu
+from repro.models.rglru import recurrent_block
+from repro.models.ssd import ssd_block
+
+__all__ = ["fwd_hidden", "fwd_train", "encode_frames", "Metrics"]
+
+_F32 = jnp.float32
+
+
+class Metrics(NamedTuple):
+    loss: jnp.ndarray
+    aux_loss: jnp.ndarray
+    dropped: jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# FSDP fetch.
+# ---------------------------------------------------------------------------
+
+
+def _fetch(ax: Axes, p: dict, fdims: dict) -> dict:
+    return {
+        k: (w if fdims[k] is None else ax.all_gather(w, ax.data, axis=fdims[k]))
+        for k, w in p.items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# Blocks.
+# ---------------------------------------------------------------------------
+
+
+def _local_kv_slice(k, v, cfg: ModelConfig, ax: Axes):
+    """Slice the (model-replicated) KV heads down to the groups needed by
+    this shard's local q heads."""
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    tp_h = ax.tp_degree(H)
+    if tp_h == 1:
+        return k, v
+    h_local = H // tp_h
+    kv_count = max(1, (h_local * KV) // H)
+    start = (ax.index(ax.model) * h_local * KV) // H
+    k = jax.lax.dynamic_slice_in_dim(k, start, kv_count, axis=2)
+    v = jax.lax.dynamic_slice_in_dim(v, start, kv_count, axis=2)
+    return k, v
+
+
+def _self_attention(
+    x, p, cfg: ModelConfig, ax: Axes, positions, *, kind: str,
+    prefix_len: int, capture: bool = False
+):
+    B, S, d = x.shape
+    hd = cfg.head_dim
+    tp_h = ax.tp_degree(cfg.n_heads)
+    h_local = cfg.n_heads // tp_h
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    q = dense(h, p["wq"]).reshape(B, S, h_local, hd)
+    k = dense(h, p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = dense(h, p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.family != "audio":  # whisper uses absolute positions
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    kv_full = (k, v) if capture else None  # all KV heads (paged-pool layout)
+    k, v = _local_kv_slice(k, v, cfg, ax)
+    window = cfg.window if kind in ("attn_swa", "attn_local") else None
+    o = blockwise_attention(
+        q, k, v, causal=True, window=window, prefix_len=prefix_len
+    )
+    out = jnp.einsum(
+        "bshd,hdD->bsD",
+        o.reshape(B, S, h_local, hd),
+        p["wo"].reshape(h_local, hd, d),
+        preferred_element_type=_F32,
+    )
+    if tp_h > 1:
+        out = ax.psum(out.astype(jnp.dtype(cfg.tp_reduce_dtype)), ax.model)
+    return out.astype(x.dtype), kv_full
+
+
+def _cross_attention(x, enc_out, p, cfg: ModelConfig, ax: Axes):
+    B, S, d = x.shape
+    hd = cfg.head_dim
+    tp_h = ax.tp_degree(cfg.n_heads)
+    h_local = cfg.n_heads // tp_h
+    h = rms_norm(x, p["xnorm"], cfg.norm_eps)
+    q = dense(h, p["xwq"]).reshape(B, S, h_local, hd)
+    k = dense(enc_out, p["xwk"]).reshape(B, enc_out.shape[1], cfg.n_kv_heads, hd)
+    v = dense(enc_out, p["xwv"]).reshape(B, enc_out.shape[1], cfg.n_kv_heads, hd)
+    k, v = _local_kv_slice(k, v, cfg, ax)
+    o = blockwise_attention(q, k, v, causal=False)
+    out = jnp.einsum(
+        "bshd,hdD->bsD",
+        o.reshape(B, S, h_local, hd),
+        p["xwo"].reshape(h_local, hd, d),
+        preferred_element_type=_F32,
+    )
+    if tp_h > 1:
+        out = ax.psum(out.astype(jnp.dtype(cfg.tp_reduce_dtype)), ax.model)
+    return out.astype(x.dtype)
+
+
+def _ffn(x, p, cfg: ModelConfig, ax: Axes):
+    """Dense / MoE / gelu FFN sub-block. Returns (delta, aux, dropped)."""
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        B, S, d = h.shape
+        out = moe_swiglu(
+            h.reshape(B * S, d),
+            p["w_router"], p["w_gate"], p["w_up"], p["w_down"],
+            cfg.moe, ax, reduce_dtype=jnp.dtype(cfg.tp_reduce_dtype),
+        )
+        return out.y.reshape(B, S, d), out.aux_loss, out.dropped
+    rd = jnp.dtype(cfg.tp_reduce_dtype)
+    if cfg.family == "audio":
+        return (
+            mlp_gelu(h, p["w1"], p["b1"], p["w2"], p["b2"], ax,
+                     reduce_dtype=rd),
+            jnp.zeros((), _F32),
+            jnp.zeros((), _F32),
+        )
+    return (
+        mlp_swiglu(h, p["w_gate"], p["w_up"], p["w_down"], ax,
+                   reduce_dtype=rd),
+        jnp.zeros((), _F32),
+        jnp.zeros((), _F32),
+    )
+
+
+def apply_block(
+    kind: str,
+    x,
+    p: dict,
+    cfg: ModelConfig,
+    ax: Axes,
+    positions,
+    *,
+    prefix_len: int = 0,
+    enc_out=None,
+    capture: bool = False,
+):
+    """One block of the pattern. Returns (x, aux_loss, dropped, extras);
+    ``extras`` (with capture) is the attention KV or recurrent state."""
+    aux = jnp.zeros((), _F32)
+    dropped = jnp.zeros((), _F32)
+    extras = None
+    if kind.startswith("attn"):
+        delta, kv_full = _self_attention(
+            x, p, cfg, ax, positions, kind=kind, prefix_len=prefix_len,
+            capture=capture,
+        )
+        x = x + delta
+        if enc_out is not None and "xwq" in p:
+            x = x + _cross_attention(x, enc_out, p, cfg, ax)
+        delta, aux, dropped = _ffn(x, p, cfg, ax)
+        x = x + delta
+        extras = kv_full
+    elif kind == "rglru":
+        h = rms_norm(x, p["norm"], cfg.norm_eps)
+        delta, state = recurrent_block(
+            h, p, ax, capture=capture,
+            reduce_dtype=jnp.dtype(cfg.tp_reduce_dtype))
+        x = x + delta
+        delta, aux, dropped = _ffn(x, p, cfg, ax)
+        x = x + delta
+        extras = state
+    elif kind == "ssd":
+        h = rms_norm(x, p["norm"], cfg.norm_eps)
+        delta, state = ssd_block(
+            h, p, cfg.ssm or SSMConfig(), ax, capture=capture,
+            reduce_dtype=jnp.dtype(cfg.tp_reduce_dtype))
+        x = x + delta
+        extras = state
+    else:
+        raise ValueError(kind)
+    return x, aux, dropped, extras
+
+
+# ---------------------------------------------------------------------------
+# Trunk.
+# ---------------------------------------------------------------------------
+
+
+def encode_frames(frames, params, cfg: ModelConfig, ax: Axes, fdims) -> jnp.ndarray:
+    """Whisper encoder over stub frame embeddings [B, T_enc, d]."""
+    T = frames.shape[1]
+    pos = jnp.arange(T)
+    x = frames + sinusoidal_positions(pos, cfg.d_model)[None].astype(frames.dtype)
+
+    def body(x, layer_p):
+        pf = _fetch(ax, layer_p, fdims["enc_blocks"][0])
+        h = rms_norm(x, pf["norm"], cfg.norm_eps)
+        B, S, d = x.shape
+        hd = cfg.head_dim
+        tp_h = ax.tp_degree(cfg.n_heads)
+        h_local = cfg.n_heads // tp_h
+        q = dense(h, pf["wq"]).reshape(B, S, h_local, hd)
+        k = dense(h, pf["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+        v = dense(h, pf["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+        k, v = _local_kv_slice(k, v, cfg, ax)
+        o = blockwise_attention(q, k, v, causal=False)
+        out = jnp.einsum(
+            "bshd,hdD->bsD", o.reshape(B, S, h_local, hd),
+            pf["wo"].reshape(h_local, hd, d), preferred_element_type=_F32,
+        )
+        if tp_h > 1:
+            out = ax.psum(out, ax.model)
+        x = x + out.astype(x.dtype)
+        delta, _, _ = _ffn(x, pf, cfg, ax)
+        return x + delta, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"][0])
+    return rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def fwd_hidden(
+    params: dict,
+    tokens: jnp.ndarray,
+    cfg: ModelConfig,
+    ax: Axes,
+    *,
+    prefix_embeds: Optional[jnp.ndarray] = None,
+    frames: Optional[jnp.ndarray] = None,
+    fdims: Optional[dict] = None,
+    ms: Optional[pm.MeshSizes] = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Token ids -> final hidden states. Returns (x, aux_loss, dropped)."""
+    ms = ms or pm.MeshSizes()
+    fdims = fdims or pm.fsdp_dims(cfg, ms)
+    emb = params["embed"]
+    emb_g = emb if fdims["embed"] is None else ax.all_gather(emb, ax.data, axis=1)
+    x = embed(tokens, emb_g, ax)
+
+    prefix_len = 0
+    if prefix_embeds is not None:
+        prefix_len = prefix_embeds.shape[1]
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    if cfg.family == "audio":
+        x = x + sinusoidal_positions(positions[0], cfg.d_model)[None].astype(x.dtype)
+
+    enc_out = None
+    if cfg.enc_dec:
+        assert frames is not None, "whisper needs stub frame embeddings"
+        enc_out = encode_frames(frames, params, cfg, ax, fdims)
+
+    pattern = cfg.block_pattern
+    aux_total = pvary_like(jnp.zeros((), _F32), x)
+    drop_total = pvary_like(jnp.zeros((), _F32), x)
+
+    def superblock(carry, layer_ps):
+        x, aux, drop = carry
+        for i, kind in enumerate(pattern):
+            pf = _fetch(ax, layer_ps[i], fdims["blocks"][i])
+            x, a, dr, _ = apply_block(
+                kind, x, pf, cfg, ax, positions,
+                prefix_len=prefix_len, enc_out=enc_out,
+            )
+            aux = aux + a
+            drop = drop + dr
+        return (x, aux, drop), None
+
+    body = jax.checkpoint(superblock) if cfg.remat else superblock
+    reps, tail = pm.model_layout(cfg)
+    if reps:
+        (x, aux_total, drop_total), _ = jax.lax.scan(
+            body, (x, aux_total, drop_total), params["blocks"]
+        )
+    for i, kind in enumerate(tail):
+        pf = _fetch(ax, params["tail"][i], fdims["tail"][i])
+        x, a, dr, _ = apply_block(
+            kind, x, pf, cfg, ax, positions,
+            prefix_len=prefix_len, enc_out=enc_out,
+        )
+        aux_total = aux_total + a
+        drop_total = drop_total + dr
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux_total, drop_total
+
+
+def fwd_train(
+    params: dict,
+    batch: dict,
+    cfg: ModelConfig,
+    ax: Axes,
+    *,
+    ms: Optional[pm.MeshSizes] = None,
+    aux_weight: float = 0.01,
+) -> tuple[jnp.ndarray, Metrics]:
+    """Next-token LM loss (globally batch-mean'ed across data/pod shards)."""
+    ms = ms or pm.MeshSizes()
+    fdims = pm.fsdp_dims(cfg, ms)
+    x, aux, dropped = fwd_hidden(
+        params,
+        batch["tokens"],
+        cfg,
+        ax,
+        prefix_embeds=batch.get("prefix_embeds"),
+        frames=batch.get("frames"),
+        fdims=fdims,
+        ms=ms,
+    )
+    if cfg.vlm_prefix:
+        x = x[:, batch["prefix_embeds"].shape[1]:]
+    emb_key = "embed" if cfg.tie_embeddings or "unembed" not in params else "unembed"
+    ue = params[emb_key]
+    ue_g = ue if fdims[emb_key] is None else ax.all_gather(ue, ax.data, axis=1)
+    loss = unembed_loss(x, ue_g, batch["labels"], ax)
+    loss = loss + aux_weight * aux
+    # Mean across the data axis in-graph (AD then inserts the correct FSDP/TP
+    # grad reductions). The pod axis is reduced explicitly by the train step
+    # so inter-pod gradient traffic can be compressed.
+    loss = ax.pmean(loss, ax.data)
+    return loss, Metrics(loss=loss, aux_loss=aux, dropped=dropped)

@@ -1,0 +1,573 @@
+"""Serving engine: chunk-free prefill + paged two-tier decode.
+
+``decode_step`` is the paper's fig. 2 "client thread": it services the
+current batch of requests against the distributed tier-1 cache (partial
+flash-decode over policy-mapped pages + psum combine), forwarding page
+misses to tier 2 in-line. ``promote_pages`` (kvpool) is the "IO thread",
+run by the engine between steps. The OL learner adjusts eviction weights
+every epoch exactly as in §III-A.
+
+Page-shard geometry: pages are distributed over ``page_axes`` (a subset of
+mesh axes, e.g. ("model",) for decode_32k, up to ("pod","data","model") for
+long-context batch-1 decode); the batch is sharded over the remaining axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.core import online_learning as ol
+from repro.distributed.axes import Axes, pvary_like, pvary_tree
+from repro.models import params as pm
+from repro.models.attention import (
+    Partial,
+    attention_partial,
+    blockwise_attention,
+    combine_partials,
+)
+from repro.models.layers import (
+    apply_rope,
+    dense,
+    embed,
+    mlp_gelu,
+    mlp_swiglu,
+    rms_norm,
+    sinusoidal_positions,
+    unembed_greedy,
+)
+from repro.models.moe import moe_swiglu
+from repro.models.rglru import recurrent_block_step
+from repro.models.ssd import ssd_block_step
+from repro.serving import kvpool as kvp
+from repro.serving.kvpool import KVSpec, PagedKV
+
+__all__ = ["ServeConfig", "DecodeState", "make_decode_step", "init_decode_state",
+           "decode_state_structs", "page_shard_index", "make_kv_spec"]
+
+_F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_seq: int
+    batch_local: int
+    page_axes: tuple[str, ...] = ("model",)
+    mapping: str = "block_cyclic"
+    hbm_fraction: float = 0.5   # tier-1 capacity as fraction of owned pages
+    n_promote: int = 2
+    kv_dtype: str = "auto"      # "auto" (= param dtype) | "int8" (quantized)
+
+
+def page_shard_index(ax: Axes, page_axes: tuple[str, ...]) -> jnp.ndarray:
+    """Flat index of this device within the page-shard group. ``page_axes``
+    holds semantic names ("pod"/"data"/"model") resolved via the Axes ctx."""
+    me = jnp.zeros((), jnp.int32)
+    for name in page_axes:
+        actual = getattr(ax, name)
+        me = me * ax.size(actual) + ax.index(actual)
+    return me
+
+
+def _page_shards(ax: Axes, page_axes: tuple[str, ...]) -> int:
+    n = 1
+    for name in page_axes:
+        n *= ax.size(getattr(ax, name))
+    return n
+
+
+def make_kv_spec(cfg: ModelConfig, sc: ServeConfig, n_shards: int) -> KVSpec:
+    """Static pool geometry for an (arch, serve shape) cell."""
+    attn_pp = kvp.n_attn_layers(cfg)
+    reps, tail = pm.model_layout(cfg)
+    n_attn_layers = reps * len(attn_pp) + sum(
+        1 for k in tail if k.startswith("attn")
+    )
+    n_pages = -(-sc.max_seq // cfg.page_size)
+    total = sc.batch_local * n_pages
+    owned = -(-total // n_shards) + 1
+    window_pages = 0
+    window = 0
+    if all(k in ("attn_swa", "attn_local", "rglru", "ssd")
+           for k in cfg.block_pattern) and any(
+        k.startswith("attn") for k in cfg.block_pattern
+    ):
+        window_pages = -(-cfg.window // cfg.page_size) + 1
+        window = cfg.window
+    hbm = max(2, int(owned * sc.hbm_fraction))
+    return KVSpec(
+        b_local=sc.batch_local,
+        n_pages=n_pages,
+        page_size=cfg.page_size,
+        n_kv=cfg.n_kv_heads,
+        head_dim=cfg.head_dim,
+        layers_per_slot=max(n_attn_layers, 1),
+        hbm_slots=hbm,
+        t2_slots=owned + 1,
+        n_shards=n_shards,
+        mapping=sc.mapping,
+        read_pages=window_pages,
+        window=window,
+        dtype=cfg.param_dtype if sc.kv_dtype == "auto" else sc.kv_dtype,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decode state.
+# ---------------------------------------------------------------------------
+
+
+class DecodeState(NamedTuple):
+    kv: Optional[PagedKV]     # None for attention-free archs
+    rec: Any                  # recurrent / cross-KV states per pattern position
+    rec_tail: Any             # unstacked tail states
+
+
+def _rec_state_one(kind: str, cfg: ModelConfig, ms: pm.MeshSizes, B: int,
+                   struct: bool):
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if struct else (
+        lambda s, d: jnp.zeros(s, d))
+    if kind == "rglru":
+        w_l = cfg.d_model // ms.tp(cfg.d_model)
+        return {"h": mk((B, w_l), _F32), "conv": mk((B, 3, w_l), cfg.param_dtype)}
+    if kind == "ssd":
+        s = cfg.ssm or SSMConfig()
+        di = s.expand * cfg.d_model
+        tp = ms.tp(di) if ms.tp(di) == ms.tp(di // s.head_dim) else 1
+        di_l = di // tp
+        H_l = di_l // s.head_dim
+        return {
+            "h": mk((B, H_l, s.state_dim, s.head_dim), _F32),
+            "conv": mk((B, s.conv_width - 1, di_l + 2 * s.state_dim), cfg.param_dtype),
+        }
+    if kind.startswith("attn") and cfg.enc_dec:
+        # Per-layer cross-attention KV (computed once from the encoder).
+        sh = (B, cfg.enc_seq, cfg.n_kv_heads, cfg.head_dim)
+        return {"ck": mk(sh, cfg.param_dtype), "cv": mk(sh, cfg.param_dtype)}
+    return {}
+
+
+def _rec_states(cfg: ModelConfig, ms: pm.MeshSizes, B: int, struct: bool):
+    reps, tail = pm.model_layout(cfg)
+
+    def stack(tree, n):
+        return jax.tree.map(
+            lambda x: (
+                jax.ShapeDtypeStruct((n,) + x.shape, x.dtype)
+                if struct else jnp.broadcast_to(x, (n,) + x.shape)
+            ),
+            tree,
+        )
+
+    rec = [
+        stack(_rec_state_one(k, cfg, ms, B, struct), reps)
+        for k in cfg.block_pattern
+    ]
+    rec_tail = [_rec_state_one(k, cfg, ms, B, struct) for k in tail]
+    return rec, rec_tail
+
+
+def _needs_kv(cfg: ModelConfig) -> bool:
+    return any(k.startswith("attn") for k in cfg.layer_kinds())
+
+
+def init_decode_state(
+    cfg: ModelConfig, sc: ServeConfig, ax: Axes, ms: pm.MeshSizes, seed: int = 0
+) -> DecodeState:
+    spec = make_kv_spec(cfg, sc, _page_shards(ax, sc.page_axes))
+    kv = None
+    if _needs_kv(cfg):
+        me = page_shard_index(ax, sc.page_axes)
+        kv = kvp.init_paged_kv(spec, me, seed)
+    rec, rec_tail = _rec_states(cfg, ms, sc.batch_local, struct=False)
+    return DecodeState(kv=kv, rec=rec, rec_tail=rec_tail)
+
+
+def decode_state_structs(
+    cfg: ModelConfig, sc: ServeConfig, n_page_shards: int, ms: pm.MeshSizes
+) -> DecodeState:
+    spec = make_kv_spec(cfg, sc, n_page_shards)
+    kv = kvp.paged_kv_structs(spec) if _needs_kv(cfg) else None
+    rec, rec_tail = _rec_states(cfg, ms, sc.batch_local, struct=True)
+    return DecodeState(kv=kv, rec=rec, rec_tail=rec_tail)
+
+
+# ---------------------------------------------------------------------------
+# Decode step.
+# ---------------------------------------------------------------------------
+
+
+def _decode_attention(
+    x, p, cfg: ModelConfig, ax: Axes, sc: ServeConfig, spec: KVSpec,
+    kv: PagedKV, plan, pools, li, positions,
+):
+    """One attention block at decode time over the distributed paged cache."""
+    B, d = x.shape
+    hd = cfg.head_dim
+    tp_h = ax.tp_degree(cfg.n_heads)
+    h_local = cfg.n_heads // tp_h
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    q = dense(h, p["wq"]).reshape(B, h_local, hd)
+    k_new = dense(h, p["wk"]).reshape(B, cfg.n_kv_heads, hd)
+    v_new = dense(h, p["wv"]).reshape(B, cfg.n_kv_heads, hd)
+    if cfg.family != "audio":
+        q = apply_rope(q[:, None], positions[:, None], cfg.rope_theta)[:, 0]
+        k_new = apply_rope(k_new[:, None], positions[:, None],
+                           cfg.rope_theta)[:, 0]
+    # Full query on every page shard (tiny gather), partial attention locally.
+    if tp_h > 1:
+        q_full = ax.all_gather(q.reshape(B, h_local * hd), ax.model, axis=1)
+        q_full = q_full.reshape(B, cfg.n_heads, hd)
+    else:
+        q_full = q.reshape(B, cfg.n_heads, hd)
+
+    pools = kvp.write_token_kv(
+        pools, plan, (k_new, v_new), kv.lengths, spec, li
+    )
+    k, v, valid = kvp.read_pages(pools, kv, spec, li)
+    part = attention_partial(q_full, k, v, valid)
+    names = tuple(
+        getattr(ax, n) for n in ("pod", "data", "model") if n in sc.page_axes
+    )
+    o_full = combine_partials(part, ax, names)  # [B, H, hd] f32
+    if tp_h > 1:
+        start = ax.index(ax.model) * h_local
+        o_loc = jax.lax.dynamic_slice_in_dim(o_full, start, h_local, axis=1)
+    else:
+        o_loc = o_full
+    out = jnp.einsum(
+        "bhd,hdD->bD", o_loc.astype(x.dtype), p["wo"].reshape(h_local, hd, d),
+        preferred_element_type=_F32,
+    )
+    if tp_h > 1:
+        out = ax.psum(out, ax.model)
+    return out.astype(x.dtype), pools
+
+
+def _decode_cross_attention(x, p, cfg, ax, cross_kv):
+    B, d = x.shape
+    hd = cfg.head_dim
+    tp_h = ax.tp_degree(cfg.n_heads)
+    h_local = cfg.n_heads // tp_h
+    h = rms_norm(x, p["xnorm"], cfg.norm_eps)
+    q = dense(h, p["xwq"]).reshape(B, h_local, hd)
+    ck, cv = cross_kv
+    from repro.models.transformer import _local_kv_slice  # reuse slicing rule
+
+    ck4, cv4 = _local_kv_slice(ck, cv, cfg, ax)
+    valid = jnp.ones(ck4.shape[:2], bool)
+    # local q heads with local kv groups: G = h_local / kv_count
+    part = attention_partial(q, ck4, cv4, valid)
+    o = (part.acc / jnp.maximum(part.l, 1e-30)[..., None]).reshape(
+        B, h_local, hd
+    )
+    out = jnp.einsum(
+        "bhd,hdD->bD", o.astype(x.dtype), p["xwo"].reshape(h_local, hd, d),
+        preferred_element_type=_F32,
+    )
+    if tp_h > 1:
+        out = ax.psum(out, ax.model)
+    return out.astype(x.dtype)
+
+
+def _decode_ffn(x, p, cfg, ax):
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        out = moe_swiglu(h, p["w_router"], p["w_gate"], p["w_up"],
+                         p["w_down"], cfg.moe, ax)
+        return out.y
+    if cfg.family == "audio":
+        return mlp_gelu(h, p["w1"], p["b1"], p["w2"], p["b2"], ax)
+    return mlp_swiglu(h, p["w_gate"], p["w_up"], p["w_down"], ax)
+
+
+def make_decode_step(cfg: ModelConfig, sc: ServeConfig, ax: Axes,
+                     ms: pm.MeshSizes):
+    """Build the SPMD decode step body:
+    (params, DecodeState, tokens[B_local]) -> (DecodeState, next_tokens)."""
+    fdims = pm.fsdp_dims(cfg, ms)
+    attn_pp = kvp.n_attn_layers(cfg)
+    pattern = cfg.block_pattern
+    reps, tail = pm.model_layout(cfg)
+    n_attn_pp = len(attn_pp)
+
+    def step(params, state: DecodeState, tokens):
+        # Geometry (incl. hbm/t2 slot counts) depends on the page-shard count,
+        # which is known only in mapped context.
+        n_shards = _page_shards(ax, sc.page_axes)
+        sp = make_kv_spec(cfg, sc, n_shards)
+        kv = state.kv
+        positions = kv.lengths if kv is not None else state_positions(state)
+        emb = params["embed"]
+        emb_g = emb if fdims["embed"] is None else ax.all_gather(
+            emb, ax.data, axis=1)
+        x = embed(tokens[:, None], emb_g, ax)[:, 0]  # [B, d]
+        if cfg.family == "audio":
+            x = x + sinusoidal_positions(positions[:, None], cfg.d_model)[
+                :, 0].astype(x.dtype)
+
+        if kv is not None:
+            me = page_shard_index(ax, sc.page_axes)
+            kv, plan = kvp.alloc_step(kv, sp, me, ol.OLConfig())
+            if sp.quantized:
+                pools = (kv.pool1, kv.pool2, kv.scale1, kv.scale2)
+            else:
+                pools = (kv.pool1, kv.pool2)
+        else:
+            plan, pools = None, None
+
+        # The residual stream may pick up variance over any axis (paged reads,
+        # recurrent states); fix the scan-carry type up front (free op).
+        x = pvary_tree(x, tuple(n for n in (ax.pod, ax.data, ax.model) if n))
+
+        def fetch(p, fd):
+            return {
+                k: (w if fd[k] is None else ax.all_gather(w, ax.data,
+                                                          axis=fd[k]))
+                for k, w in p.items()
+            }
+
+        def superblock(carry, xs):
+            x, pools, r = carry
+            layer_ps, recs = xs
+            new_recs = []
+            for i, kind in enumerate(pattern):
+                pf = fetch(layer_ps[i], fdims["blocks"][i])
+                if kind.startswith("attn"):
+                    li = r * n_attn_pp + attn_pp.index(i)
+                    delta, pools = _decode_attention(
+                        x, pf, cfg, ax, sc, sp, kv, plan, pools, li, positions
+                    )
+                    x = x + delta
+                    if cfg.enc_dec and "xwq" in pf:
+                        x = x + _decode_cross_attention(
+                            x, pf, cfg, ax, (recs[i]["ck"], recs[i]["cv"]))
+                    x = x + _decode_ffn(x, pf, cfg, ax)
+                    new_recs.append(recs[i])
+                elif kind == "rglru":
+                    h = rms_norm(x, pf["norm"], cfg.norm_eps)
+                    out, ns = recurrent_block_step(h, recs[i], pf, ax)
+                    x = x + out
+                    x = x + _decode_ffn(x, pf, cfg, ax)
+                    new_recs.append(ns)
+                else:  # ssd
+                    h = rms_norm(x, pf["norm"], cfg.norm_eps)
+                    out, ns = ssd_block_step(
+                        h, recs[i], pf, cfg.ssm or SSMConfig(), ax)
+                    x = x + out
+                    new_recs.append(ns)
+            return (x, pools, r + 1), new_recs
+
+        carry = (x, pools, jnp.zeros((), jnp.int32))
+        if reps:
+            carry, new_rec = jax.lax.scan(
+                superblock, carry, (params["blocks"], state.rec)
+            )
+        else:
+            new_rec = state.rec
+        x, pools, r = carry
+        new_tail = []
+        for i, kind in enumerate(tail):
+            pf = fetch(params["tail"][i], fdims["tail"][i])
+            if kind.startswith("attn"):
+                li = reps * n_attn_pp + sum(
+                    1 for k in tail[:i] if k.startswith("attn"))
+                delta, pools = _decode_attention(
+                    x, pf, cfg, ax, sc, sp, kv, plan, pools,
+                    jnp.asarray(li, jnp.int32), positions,
+                )
+                x = x + delta
+                if cfg.enc_dec and "xwq" in pf:
+                    x = x + _decode_cross_attention(
+                        x, pf, cfg, ax,
+                        (state.rec_tail[i]["ck"], state.rec_tail[i]["cv"]))
+                x = x + _decode_ffn(x, pf, cfg, ax)
+                new_tail.append(state.rec_tail[i])
+            elif kind == "rglru":
+                h = rms_norm(x, pf["norm"], cfg.norm_eps)
+                out, ns = recurrent_block_step(h, state.rec_tail[i], pf, ax)
+                x = x + out
+                x = x + _decode_ffn(x, pf, cfg, ax)
+                new_tail.append(ns)
+            else:
+                h = rms_norm(x, pf["norm"], cfg.norm_eps)
+                out, ns = ssd_block_step(
+                    h, state.rec_tail[i], pf, cfg.ssm or SSMConfig(), ax)
+                x = x + out
+                new_tail.append(ns)
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        emb_key = ("embed" if cfg.tie_embeddings or "unembed" not in params
+                   else "unembed")
+        ue = params[emb_key]
+        ue_g = ue if fdims[emb_key] is None else ax.all_gather(
+            ue, ax.data, axis=1)
+        next_tok, logprob = unembed_greedy(x, ue_g, ax)
+
+        if kv is not None:
+            kv = kv._replace(
+                pool1=pools[0], pool2=pools[1],
+                lengths=kv.lengths + 1, t=kv.t + 1,
+                **({"scale1": pools[2], "scale2": pools[3]}
+                   if sp.quantized else {}),
+            )
+        new_state = DecodeState(kv=kv, rec=new_rec, rec_tail=new_tail)
+        return new_state, (next_tok, logprob)
+
+    return step
+
+
+def state_positions(state: DecodeState) -> jnp.ndarray:
+    """Positions for attention-free archs (track via a counter in rec[0])."""
+    # Attention-free models (mamba2) do not carry lengths; decode positions
+    # are irrelevant to the recurrence, so zeros suffice.
+    leaf = jax.tree.leaves(state.rec)[0]
+    B = leaf.shape[1] if leaf.ndim > 1 else 1
+    return jnp.zeros((B,), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full forward over the prompt, populating the two-tier pools and
+# the recurrent states, returning a DecodeState ready for decode.
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, sc: ServeConfig, ax: Axes,
+                      ms: pm.MeshSizes):
+    """Build the SPMD prefill body:
+    (params, tokens[B_local, S_prompt], extras) -> (DecodeState, first_token).
+
+    ``extras``: {"frames": ...} for whisper (stub frame embeddings),
+    {"prefix_embeds": ...} for the VLM prefix. S_prompt must be a multiple
+    of the page size (pad prompts host-side).
+    """
+    from repro.models.transformer import (
+        _cross_attention, _fetch, apply_block, encode_frames,
+    )
+    from repro.models.layers import embed as embed_fn
+
+    fdims = pm.fsdp_dims(cfg, ms)
+    pattern = cfg.block_pattern
+    reps, tail = pm.model_layout(cfg)
+    attn_pp = kvp.n_attn_layers(cfg)
+    n_attn_pp = len(attn_pp)
+
+    def step(params, tokens, extras=None):
+        extras = extras or {}
+        n_shards = _page_shards(ax, sc.page_axes)
+        spec = make_kv_spec(cfg, sc, n_shards)
+        B = tokens.shape[0]
+        emb = params["embed"]
+        emb_g = emb if fdims["embed"] is None else ax.all_gather(
+            emb, ax.data, axis=1)
+        x = embed_fn(tokens, emb_g, ax)
+        prefix_len = 0
+        if cfg.vlm_prefix and "prefix_embeds" in extras:
+            prefix_len = extras["prefix_embeds"].shape[1]
+            x = jnp.concatenate(
+                [extras["prefix_embeds"].astype(x.dtype), x], axis=1)
+        S = x.shape[1]
+        positions = jnp.arange(S)[None, :]
+        if cfg.family == "audio":
+            x = x + sinusoidal_positions(
+                positions[0], cfg.d_model)[None].astype(x.dtype)
+        enc_out = None
+        if cfg.enc_dec:
+            enc_out = encode_frames(extras["frames"], params, cfg, ax, fdims)
+
+        # Tier residency plan (meta only; the scan fills the pools).
+        kv = None
+        axis_names = tuple(n for n in (ax.pod, ax.data, ax.model) if n)
+        if _needs_kv(cfg):
+            me = page_shard_index(ax, sc.page_axes)
+            kv = kvp.init_paged_kv(spec, me)
+            kv = kvp.prefill_residency(
+                kv, spec, jnp.full((spec.b_local,), S, jnp.int32))
+            # Freshly-built state is constant-valued but device-local: mark
+            # it varying over every mesh axis (free) for check_vma.
+            kv = pvary_tree(kv, axis_names)
+            if spec.quantized:
+                pools = (kv.pool1, kv.pool2, kv.scale1, kv.scale2)
+            else:
+                pools = (kv.pool1, kv.pool2)
+        else:
+            pools = (jnp.zeros((), jnp.int32),) * 2  # dummy carry
+
+        x = pvary_tree(x, axis_names) if axis_names else x
+        pad_s = (-S) % spec.page_size if kv is not None else 0
+
+        def one_block(i, kind, x, pools, layer_p, r):
+            pf = _fetch(ax, layer_p, fdims["blocks"][i]
+                        if isinstance(r, jnp.ndarray) else fdims["tail"][i])
+            x, _, _, ex = apply_block(
+                kind, x, pf, cfg, ax, positions,
+                prefix_len=prefix_len, enc_out=enc_out, capture=True,
+            )
+            state = {}
+            if kind.startswith("attn"):
+                if kv is not None:
+                    li = (r * n_attn_pp + attn_pp.index(i)
+                          if isinstance(r, jnp.ndarray)
+                          else jnp.asarray(r, jnp.int32))
+                    k_full, v_full = ex
+                    if pad_s:
+                        k_full = jnp.pad(
+                            k_full, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+                        v_full = jnp.pad(
+                            v_full, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+                    pools = kvp.prefill_write(
+                        pools, kv, spec, li, k_full, v_full)
+                if cfg.enc_dec:
+                    ck = dense(enc_out, pf["xwk"]).reshape(
+                        B, cfg.enc_seq, cfg.n_kv_heads, cfg.head_dim)
+                    cv = dense(enc_out, pf["xwv"]).reshape(
+                        B, cfg.enc_seq, cfg.n_kv_heads, cfg.head_dim)
+                    state = {"ck": ck, "cv": cv}
+            else:
+                state = ex
+            return x, pools, state
+
+        def superblock(carry, layer_ps):
+            x, pools, r = carry
+            states = []
+            for i, kind in enumerate(pattern):
+                x, pools, st = one_block(i, kind, x, pools, layer_ps[i], r)
+                states.append(st)
+            return (x, pools, r + 1), states
+
+        carry = (x, pools, jnp.zeros((), jnp.int32))
+        if reps:
+            carry, rec = jax.lax.scan(superblock, carry, params["blocks"])
+        else:
+            rec, _ = _rec_states(cfg, ms, B, struct=False)
+        x, pools, _ = carry
+        rec_tail = []
+        for i, kind in enumerate(tail):
+            li_base = reps * n_attn_pp + sum(
+                1 for k in tail[:i] if k.startswith("attn"))
+            x, pools, st = one_block(i, kind, x, pools, params["tail"][i],
+                                     li_base)
+            rec_tail.append(st)
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        emb_key = ("embed" if cfg.tie_embeddings or "unembed" not in params
+                   else "unembed")
+        ue = params[emb_key]
+        ue_g = ue if fdims[emb_key] is None else ax.all_gather(
+            ue, ax.data, axis=1)
+        next_tok, logprob = unembed_greedy(x[:, -1], ue_g, ax)
+
+        if kv is not None:
+            kv = kv._replace(
+                pool1=pools[0], pool2=pools[1],
+                **({"scale1": pools[2], "scale2": pools[3]}
+                   if spec.quantized else {}),
+            )
+        state = DecodeState(kv=kv, rec=rec, rec_tail=rec_tail)
+        return state, (next_tok, logprob)
+
+    return step

@@ -1,0 +1,577 @@
+"""Paged two-tier KV cache — the paper's tier-1/tier-2 store on a TPU mesh.
+
+Mapping of paper concepts (DESIGN.md §2):
+
+- **cache line / page**: ``page_size`` consecutive tokens of one sequence's
+  KV, across *all* attention layers (a page is the unit of residency and of
+  tier movement, like the paper's posix-file cache lines).
+- **tier 1**: a fixed pool of page slots in device HBM (``pool1``); states
+  (tags/valid/dirty/freq/ts) mirror §III exactly and are stored separately
+  from data, like the paper keeps states in CPU RAM and data on NVMe.
+- **tier 2**: the full backing pool (``pool2``). On real TPUs this is
+  pinned host memory (``memory_kind='pinned_host'``); here it is a second
+  device array (CPU backend has one memory space — noted in DESIGN.md).
+  The cache is *inclusive* and *write-back*: dirty tier-1 pages are copied
+  down on eviction.
+- **mapping policy**: pages are distributed over the page-shard axes of the
+  mesh by ``core.mapping.page_to_shard`` (block / cyclic / random /
+  round-robin). Decode attention is computed *in place* per shard
+  (flash-decoding partials + a tiny combine psum), so a remote "hit" costs
+  O(B·H·hd) collective bytes instead of moving the page — the TPU-native
+  replacement for the paper's RPC'd remote hits.
+- **OL eviction**: `core.online_learning` runs verbatim over the page
+  metadata: every eviction records all experts' proposals; a tier-2 read of
+  a recently evicted page is a misprediction; weights adjust per epoch.
+
+All state is a pytree (``PagedKV``) carried through jitted steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import online_learning as ol
+from repro.core.mapping import page_to_shard
+from repro.distributed.axes import Axes
+from repro.storage.cache_state import CacheState, init_cache
+
+__all__ = ["KVSpec", "PagedKV", "init_paged_kv", "paged_kv_structs",
+           "alloc_step", "write_token_kv", "read_pages", "promote_pages",
+           "n_attn_layers"]
+
+_F32 = jnp.float32
+
+
+def n_attn_layers(cfg: ModelConfig) -> tuple[int, ...]:
+    """Indices of attention positions within the block pattern."""
+    return tuple(
+        i for i, k in enumerate(cfg.block_pattern) if k.startswith("attn")
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class KVSpec:
+    """Static geometry of the paged pool (per device)."""
+
+    b_local: int           # sequences on this device's batch shard
+    n_pages: int           # pages per sequence (max_seq / page_size)
+    page_size: int
+    n_kv: int
+    head_dim: int
+    layers_per_slot: int   # attention layers stored per page (stacked dim)
+    hbm_slots: int         # tier-1 capacity (pages)
+    t2_slots: int          # tier-2 capacity (>= owned pages)
+    n_shards: int          # page-shard group size (product of page axes)
+    mapping: str = "block_cyclic"
+    read_pages: int = 0    # pages visible to decode attention (0 = all)
+    window: int = 0        # sliding-window size in tokens (0 = full)
+    dtype: str = "bfloat16"  # "int8" => per-(token,k/v) scaled quantization
+
+    @property
+    def quantized(self) -> bool:
+        return self.dtype == "int8"
+
+    @property
+    def total_pages(self) -> int:
+        return self.b_local * self.n_pages
+
+    def flat_id(self, b, p):
+        return b * self.n_pages + p
+
+    def owner(self, flat_id):
+        return page_to_shard(
+            flat_id, self.n_shards, self.total_pages, self.mapping
+        )
+
+
+class PagedKV(NamedTuple):
+    """Device-local paged KV state (one pattern position's attention)."""
+
+    pool1: jnp.ndarray      # [hbm_slots, Lp, page, 2, KV, hd]
+    pool2: jnp.ndarray      # [t2_slots,  Lp, page, 2, KV, hd]
+    scale1: jnp.ndarray     # [hbm_slots, Lp, page, 2] f32 (int8 mode; else [1])
+    scale2: jnp.ndarray     # [t2_slots,  Lp, page, 2] f32
+    meta: CacheState        # over hbm_slots; tags = flat page id
+    page_slot: jnp.ndarray  # [B, n_pages] tier-1 slot or -1
+    t2_slot: jnp.ndarray    # [B, n_pages] tier-2 slot (-1 if not owned)
+    ols: ol.OLState
+    lengths: jnp.ndarray    # [B] int32 tokens present
+    t: jnp.ndarray          # int32[1] step counter
+    key: jax.Array          # PRNG for the Random expert
+    t2_reads: jnp.ndarray   # int32[1] stats: pages read from tier 2
+    t1_reads: jnp.ndarray   # int32[1] stats: pages read from tier 1
+
+
+def _t2_slot_table(spec: KVSpec, me: jnp.ndarray) -> jnp.ndarray:
+    """[B, n_pages] tier-2 slot for owned pages, -1 otherwise. Computed
+    in-graph (owner depends on the device's page-shard index)."""
+    flat = jnp.arange(spec.total_pages, dtype=jnp.int32)
+    mine = spec.owner(flat) == me
+    rank = jnp.cumsum(mine.astype(jnp.int32)) - 1
+    tbl = jnp.where(mine, rank, -1)
+    return tbl.reshape(spec.b_local, spec.n_pages)
+
+
+def init_paged_kv(spec: KVSpec, me: jnp.ndarray, seed: int = 0) -> PagedKV:
+    dt = jnp.dtype(spec.dtype)
+    # +1 scratch row on each pool (masked scatter target for prefill writes).
+    shape1 = (spec.hbm_slots + 1, spec.layers_per_slot, spec.page_size, 2,
+              spec.n_kv, spec.head_dim)
+    shape2 = (spec.t2_slots,) + shape1[1:]
+    if spec.quantized:
+        sc1 = jnp.ones(shape1[:4], jnp.float32)
+        sc2 = jnp.ones(shape2[:4], jnp.float32)
+    else:
+        sc1 = jnp.ones((1,), jnp.float32)
+        sc2 = jnp.ones((1,), jnp.float32)
+    return PagedKV(
+        pool1=jnp.zeros(shape1, dt),
+        pool2=jnp.zeros(shape2, dt),
+        scale1=sc1,
+        scale2=sc2,
+        meta=init_cache(spec.hbm_slots),
+        page_slot=jnp.full((spec.b_local, spec.n_pages), -1, jnp.int32),
+        t2_slot=_t2_slot_table(spec, me),
+        ols=ol.init_ol(ol.OLConfig()),
+        lengths=jnp.zeros((spec.b_local,), jnp.int32),
+        t=jnp.zeros((1,), jnp.int32),
+        key=jax.random.PRNGKey(seed),
+        t2_reads=jnp.zeros((1,), jnp.int32),
+        t1_reads=jnp.zeros((1,), jnp.int32),
+    )
+
+
+def paged_kv_structs(spec: KVSpec) -> PagedKV:
+    """ShapeDtypeStruct skeleton (dry-run, no allocation)."""
+    dt = jnp.dtype(spec.dtype)
+    shape1 = (spec.hbm_slots + 1, spec.layers_per_slot, spec.page_size, 2,
+              spec.n_kv, spec.head_dim)
+    shape2 = (spec.t2_slots,) + shape1[1:]
+    S = jax.ShapeDtypeStruct
+    i32 = jnp.int32
+    sc1_shape = shape1[:4] if spec.quantized else (1,)
+    sc2_shape = shape2[:4] if spec.quantized else (1,)
+    return PagedKV(
+        pool1=S(shape1, dt),
+        pool2=S(shape2, dt),
+        scale1=S(sc1_shape, jnp.float32),
+        scale2=S(sc2_shape, jnp.float32),
+        meta=CacheState(
+            tags=S((spec.hbm_slots,), i32), valid=S((spec.hbm_slots,), bool),
+            dirty=S((spec.hbm_slots,), bool), freq=S((spec.hbm_slots,), i32),
+            ts=S((spec.hbm_slots,), i32),
+        ),
+        page_slot=S((spec.b_local, spec.n_pages), i32),
+        t2_slot=S((spec.b_local, spec.n_pages), i32),
+        ols=ol.OLState(
+            weights=S((ol.N_EXPERTS,), jnp.float32),
+            pred=S((ol.N_EXPERTS, ol.OLConfig().pred_cap), i32),
+            pred_n=S((ol.N_EXPERTS,), i32),
+            mispred=S((ol.N_EXPERTS,), i32),
+            epoch_misses=S((1,), i32),
+            chosen=S((1,), i32),
+        ),
+        lengths=S((spec.b_local,), i32),
+        t=S((1,), i32),
+        key=S((2,), jnp.uint32),
+        t2_reads=S((1,), i32),
+        t1_reads=S((1,), i32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Metadata phase: allocation + OL eviction decisions (once per decode step,
+# shared by every attention layer). Returns the plan the layer scan executes.
+# ---------------------------------------------------------------------------
+
+
+class AllocPlan(NamedTuple):
+    cur_slot: jnp.ndarray   # [B] tier-1 slot of each sequence's current page
+    evict_slot: jnp.ndarray  # [B] slot evicted to make room (-1 = none)
+    evict_t2: jnp.ndarray    # [B] tier-2 slot of the evicted page (-1 = none)
+    writeback: jnp.ndarray   # [B] bool — evicted page dirty?
+    write_here: jnp.ndarray  # [B] bool — this shard owns the current page
+
+
+def alloc_step(kv: PagedKV, spec: KVSpec, me: jnp.ndarray, cfg_ol: ol.OLConfig
+               ) -> tuple[PagedKV, AllocPlan]:
+    """Allocate tier-1 slots for each sequence's current page; evict via the
+    OL policy when full; update LRU/LFU metadata and the OL learner."""
+    B = spec.b_local
+    page_idx = kv.lengths // spec.page_size           # [B]
+    flat = kv.lengths // spec.page_size + jnp.arange(B) * spec.n_pages
+    boundary = (kv.lengths % spec.page_size) == 0
+    mine = spec.owner(flat) == me
+
+    meta, ols, key = kv.meta, kv.ols, kv.key
+    page_slot = kv.page_slot
+
+    cur_slot = jnp.zeros((B,), jnp.int32)
+    evict_slot = jnp.full((B,), -1, jnp.int32)
+    evict_t2 = jnp.full((B,), -1, jnp.int32)
+    writeback = jnp.zeros((B,), bool)
+
+    # Pin every sequence's current page (single-writer: in-flight lines are
+    # not eviction candidates).
+    cur_flat = jnp.arange(B) * spec.n_pages + page_idx
+    pinned = jnp.isin(meta.tags, cur_flat) & meta.valid
+
+    for b in range(B):  # B is small; bounded per-sequence allocation
+        need = boundary[b] & mine[b]
+        have = page_slot[b, page_idx[b]] >= 0
+        do_alloc = need & ~have
+        key, vkey = jax.random.split(key)
+
+        free = ~meta.valid
+        has_free = jnp.any(free)
+        free_idx = jnp.argmax(free).astype(jnp.int32)
+        proposals = ol.propose_victims(meta, vkey, pinned)
+        victim_pages = meta.tags[proposals]
+        chosen = ol.choose_expert(ols)
+        victim = proposals[chosen]
+        slot = jnp.where(has_free, free_idx, victim)
+        evicting = do_alloc & ~has_free
+
+        # Record predictions + chosen expert on a real eviction.
+        ols_pred = ol.record_predictions(ols, cfg_ol, victim_pages)
+        ols = jax.tree.map(
+            lambda new, old: jnp.where(evicting, new, old), ols_pred, ols
+        )
+        # Evicted page bookkeeping.
+        v_flat = meta.tags[slot]
+        v_b = v_flat // spec.n_pages
+        v_p = v_flat % spec.n_pages
+        page_slot = jnp.where(
+            evicting,
+            page_slot.at[v_b, v_p].set(-1),
+            page_slot,
+        )
+        evict_slot = evict_slot.at[b].set(jnp.where(evicting, slot, -1))
+        evict_t2 = evict_t2.at[b].set(
+            jnp.where(evicting, kv.t2_slot[v_b, v_p], -1)
+        )
+        writeback = writeback.at[b].set(evicting & meta.dirty[slot])
+
+        # Insert the new page.
+        meta = CacheState(
+            tags=jnp.where(do_alloc, meta.tags.at[slot].set(flat[b]), meta.tags),
+            valid=jnp.where(do_alloc, meta.valid.at[slot].set(True), meta.valid),
+            dirty=jnp.where(do_alloc, meta.dirty.at[slot].set(True), meta.dirty),
+            freq=jnp.where(do_alloc, meta.freq.at[slot].set(1), meta.freq),
+            ts=jnp.where(do_alloc, meta.ts.at[slot].set(kv.t[0]), meta.ts),
+        )
+        page_slot = jnp.where(
+            do_alloc, page_slot.at[b, page_idx[b]].set(slot), page_slot
+        )
+        cur_slot = cur_slot.at[b].set(page_slot[b, page_idx[b]])
+        # Newly allocated current pages are pinned for the rest of the step.
+        pinned = pinned.at[slot].set(pinned[slot] | do_alloc)
+
+    # The current page receives this step's token KV (write-back cache: mark
+    # dirty so eviction copies it down to tier 2).
+    wrote = (cur_slot >= 0) & mine                      # [B]
+    meta = meta._replace(
+        dirty=meta.dirty.at[jnp.clip(cur_slot, 0)].max(wrote)
+    )
+
+    # Touch resident pages read this step (LRU ts / LFU freq) + count tier-2
+    # reads as misses for the OL learner.
+    read_lo = _read_window_start(kv.lengths, spec)
+    p_range = jnp.arange(spec.n_pages)[None, :]
+    readable = (p_range * spec.page_size < kv.lengths[:, None]) & (
+        p_range >= read_lo[:, None]
+    )
+    owned = kv.t2_slot >= 0
+    resident = page_slot >= 0
+    read_res = readable & resident & owned
+    read_miss = readable & ~resident & owned
+    slot_hit = jnp.zeros((spec.hbm_slots,), bool).at[
+        jnp.clip(page_slot, 0, spec.hbm_slots - 1)
+    ].max(read_res)
+    meta = meta._replace(
+        freq=meta.freq + slot_hit.astype(jnp.int32),
+        ts=jnp.where(slot_hit, kv.t[0], meta.ts),
+    )
+    n_miss = jnp.sum(read_miss).astype(jnp.int32)
+    # OL miss accounting: count once per missed page (prediction check).
+    miss_flat = jnp.where(
+        read_miss, p_range + jnp.arange(B)[:, None] * spec.n_pages, -1
+    ).reshape(-1)
+    hit_pred = jax.vmap(
+        lambda page: jnp.any(ols.pred == page, axis=1) & (page >= 0)
+    )(miss_flat).sum(axis=0)
+    ols = ols._replace(
+        mispred=ols.mispred + hit_pred.astype(jnp.int32),
+        epoch_misses=ols.epoch_misses + n_miss,
+    )
+    # Epoch boundary weight adjust.
+    epoch_end = (kv.t[0] + 1) % cfg_ol.epoch_width == 0
+    ols_adj = ol.weight_adjust(ols, cfg_ol)
+    ols = jax.tree.map(lambda new, old: jnp.where(epoch_end, new, old), ols_adj, ols)
+
+    kv = kv._replace(
+        meta=meta, ols=ols, key=key, page_slot=page_slot,
+        t2_reads=kv.t2_reads + n_miss,
+        t1_reads=kv.t1_reads + jnp.sum(read_res).astype(jnp.int32),
+    )
+    plan = AllocPlan(
+        cur_slot=cur_slot, evict_slot=evict_slot, evict_t2=evict_t2,
+        writeback=writeback, write_here=mine,
+    )
+    return kv, plan
+
+
+def _read_window_start(lengths: jnp.ndarray, spec: KVSpec) -> jnp.ndarray:
+    if spec.read_pages <= 0:
+        return jnp.zeros_like(lengths)
+    first = lengths // spec.page_size - (spec.read_pages - 1)
+    return jnp.maximum(first, 0)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer data phase, executed inside the layer scan.
+# ---------------------------------------------------------------------------
+
+
+def write_token_kv(
+    pools,  # (pool1, pool2) or (pool1, pool2, scale1, scale2) in int8 mode
+    plan: AllocPlan,
+    kv_slot_data,  # k_new, v_new: [B, KV, hd]
+    lengths: jnp.ndarray,
+    spec: KVSpec,
+    li: jnp.ndarray,  # layer index within the slot stack
+):
+    """Execute the alloc plan for one attention layer: write-back the evicted
+    page slice, then write the new token's K/V into the current page.
+
+    int8 mode quantizes the token's K and V with per-(token, k/v) scales."""
+    quant = spec.quantized
+    if quant:
+        pool1, pool2, scale1, scale2 = pools
+    else:
+        pool1, pool2 = pools
+        scale1 = scale2 = None
+    k_new, v_new = kv_slot_data
+    B = spec.b_local
+    offset = lengths % spec.page_size
+    new = jnp.stack([k_new, v_new], axis=1)  # [B, 2, KV, hd]
+    if quant:
+        amax = jnp.max(jnp.abs(new.astype(jnp.float32)), axis=(2, 3))  # [B,2]
+        sc = jnp.maximum(amax, 1e-30) / 127.0
+        new_q = jnp.clip(jnp.round(new.astype(jnp.float32) / sc[..., None, None]),
+                         -127, 127).astype(jnp.int8)
+    else:
+        new_q = new.astype(pool1.dtype)
+    for b in range(B):
+        # Write-back of the evicted page's slice for this layer.
+        src = pool1[jnp.clip(plan.evict_slot[b], 0), li]
+        do_wb = plan.writeback[b] & (plan.evict_slot[b] >= 0)
+        t2 = jnp.clip(plan.evict_t2[b], 0)
+        pool2 = jnp.where(do_wb, pool2.at[t2, li].set(src), pool2)
+        if quant:
+            src_sc = scale1[jnp.clip(plan.evict_slot[b], 0), li]
+            scale2 = jnp.where(do_wb, scale2.at[t2, li].set(src_sc), scale2)
+        # Append the token KV.
+        do_w = plan.write_here[b]
+        s = jnp.clip(plan.cur_slot[b], 0)
+        pool1 = jnp.where(
+            do_w, pool1.at[s, li, offset[b]].set(new_q[b]), pool1
+        )
+        if quant:
+            scale1 = jnp.where(
+                do_w, scale1.at[s, li, offset[b]].set(sc[b]), scale1
+            )
+    if quant:
+        return pool1, pool2, scale1, scale2
+    return pool1, pool2
+
+
+def read_pages(
+    pools,
+    kv: PagedKV,
+    spec: KVSpec,
+    li: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Gather this device's readable KV for one layer.
+
+    Returns (k, v, valid): [B, R*page, KV, hd] with a validity mask marking
+    live tokens of owned pages (resident pages come from tier-1 slots,
+    non-resident from their tier-2 home — the "page miss serviced by tier 2"
+    path whose bytes the roofline charges to the host link).
+    """
+    quant = spec.quantized
+    if quant:
+        pool1, pool2, scale1, scale2 = pools
+    else:
+        pool1, pool2 = pools
+    B = spec.b_local
+    R = spec.read_pages if spec.read_pages > 0 else spec.n_pages
+    lo = _read_window_start(kv.lengths, spec)                     # [B]
+    p_idx = lo[:, None] + jnp.arange(R)[None, :]                  # [B, R]
+    p_idx = jnp.clip(p_idx, 0, spec.n_pages - 1)
+    slot = jnp.take_along_axis(kv.page_slot, p_idx, axis=1)       # [B, R]
+    t2 = jnp.take_along_axis(kv.t2_slot, p_idx, axis=1)
+    owned = t2 >= 0
+    resident = slot >= 0
+
+    from1 = pool1[jnp.clip(slot, 0), li]   # [B, R, page, 2, KV, hd]
+    from2 = pool2[jnp.clip(t2, 0), li]
+    sel = resident[..., None, None, None, None]
+    data = jnp.where(sel, from1, from2)
+    if quant:
+        sc1 = scale1[jnp.clip(slot, 0), li]    # [B, R, page, 2]
+        sc2 = scale2[jnp.clip(t2, 0), li]
+        sc = jnp.where(resident[..., None, None], sc1, sc2)
+        data = data.astype(jnp.float32) * sc[..., None, None]
+        data = data.astype(jnp.bfloat16)
+    k = data[..., 0, :, :].reshape(B, R * spec.page_size, spec.n_kv,
+                                   spec.head_dim)
+    v = data[..., 1, :, :].reshape(B, R * spec.page_size, spec.n_kv,
+                                   spec.head_dim)
+    tok_pos = (p_idx[:, :, None] * spec.page_size
+               + jnp.arange(spec.page_size)[None, None, :])       # [B,R,page]
+    live = tok_pos <= kv.lengths[:, None, None]  # include the just-written token
+    if spec.window > 0:  # sliding-window mask (q position == lengths)
+        live &= tok_pos > (kv.lengths[:, None, None] - spec.window)
+    valid = (owned[:, :, None] & live).reshape(B, R * spec.page_size)
+    return k, v, valid
+
+
+# ---------------------------------------------------------------------------
+# Prefill: residency init + bulk page writes.
+# ---------------------------------------------------------------------------
+
+
+def prefill_residency(
+    kv: PagedKV, spec: KVSpec, prompt_len: jnp.ndarray
+) -> PagedKV:
+    """Initialize tier-1 residency after a prefill of ``prompt_len`` tokens:
+    the most recent owned pages become resident (LRU-friendly warm start),
+    older pages live only in tier 2. Returns kv with meta/page_slot/lengths
+    set (pool writes happen per layer via :func:`prefill_write`)."""
+    B, NP = spec.b_local, spec.n_pages
+    p_range = jnp.arange(NP)[None, :]
+    in_prompt = p_range * spec.page_size < prompt_len[:, None]
+    owned = kv.t2_slot >= 0
+    cand = (in_prompt & owned).reshape(-1)
+    # Recency key: later pages first (ties broken by batch index).
+    key = (p_range * B + jnp.arange(B)[:, None]).reshape(-1)
+    sort_key = jnp.where(cand, -key, jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(sort_key)  # resident candidates first, newest first
+    n_res = min(spec.hbm_slots, B * NP)
+    chosen = order[:n_res]
+    is_cand = cand[chosen]
+    slots = jnp.arange(n_res, dtype=jnp.int32)
+    page_slot = jnp.full((B * NP,), -1, jnp.int32).at[chosen].set(
+        jnp.where(is_cand, slots, -1)
+    ).reshape(B, NP)
+    flat_ids = chosen.astype(jnp.int32)
+    p_of = flat_ids % NP
+    meta = CacheState(
+        tags=jnp.full((spec.hbm_slots,), -1, jnp.int32).at[slots].set(
+            jnp.where(is_cand, flat_ids, -1)
+        ),
+        valid=jnp.zeros((spec.hbm_slots,), bool).at[slots].set(is_cand),
+        dirty=jnp.zeros((spec.hbm_slots,), bool),  # write-through at prefill
+        freq=jnp.zeros((spec.hbm_slots,), jnp.int32).at[slots].set(
+            is_cand.astype(jnp.int32)
+        ),
+        ts=jnp.zeros((spec.hbm_slots,), jnp.int32).at[slots].set(
+            jnp.where(is_cand, p_of, 0)
+        ),
+    )
+    return kv._replace(meta=meta, page_slot=page_slot, lengths=prompt_len,
+                       t=jnp.zeros((1,), jnp.int32))
+
+
+def prefill_write(
+    pools,
+    kv: PagedKV,
+    spec: KVSpec,
+    li: jnp.ndarray,
+    k: jnp.ndarray,  # [B, S, KV, hd] (S padded to a page multiple)
+    v: jnp.ndarray,
+):
+    """Write one layer's prefill KV into both pools (owned pages only;
+    resident pages also land in tier 1). Scratch rows absorb masked writes."""
+    quant = spec.quantized
+    if quant:
+        pool1, pool2, scale1, scale2 = pools
+    else:
+        pool1, pool2 = pools
+    B = spec.b_local
+    S = k.shape[1]
+    npg = S // spec.page_size
+    data = jnp.stack([k, v], axis=2)  # [B, S, 2, KV, hd]
+    data = data.reshape(B * npg, spec.page_size, 2, spec.n_kv, spec.head_dim)
+    if quant:
+        amax = jnp.max(jnp.abs(data.astype(jnp.float32)), axis=(3, 4))
+        sc = jnp.maximum(amax, 1e-30) / 127.0     # [B*npg, page, 2]
+        data = jnp.clip(jnp.round(data.astype(jnp.float32) / sc[..., None, None]),
+                        -127, 127).astype(jnp.int8)
+    else:
+        data = data.astype(pool1.dtype)
+    t2 = kv.t2_slot[:, :npg].reshape(-1)
+    slot1 = kv.page_slot[:, :npg].reshape(-1)
+    idx2 = jnp.where(t2 >= 0, t2, spec.t2_slots - 1)          # scratch last row
+    idx1 = jnp.where(slot1 >= 0, slot1, spec.hbm_slots)       # scratch row
+    pool2 = pool2.at[idx2, li].set(data)
+    pool1 = pool1.at[idx1, li].set(data)
+    if quant:
+        scale2 = scale2.at[idx2, li].set(sc)
+        scale1 = scale1.at[idx1, li].set(sc)
+        return pool1, pool2, scale1, scale2
+    return pool1, pool2
+
+
+# ---------------------------------------------------------------------------
+# IO-thread analog: promotion of hot tier-2 pages between decode steps.
+# ---------------------------------------------------------------------------
+
+
+def promote_pages(kv: PagedKV, spec: KVSpec, n_promote: int = 2) -> PagedKV:
+    """Promote up to ``n_promote`` readable-but-nonresident owned pages into
+    free tier-1 slots (the paper's prefetch-on-idle IO thread; "prefetching
+    is performed only if there are empty slots")."""
+    p_range = jnp.arange(spec.n_pages)[None, :]
+    lo = _read_window_start(kv.lengths, spec)
+    readable = (p_range * spec.page_size < kv.lengths[:, None]) & (
+        p_range >= lo[:, None]
+    )
+    cand = readable & (kv.page_slot < 0) & (kv.t2_slot >= 0)
+    flat_cand = cand.reshape(-1)
+    meta, page_slot, pool1, scale1 = kv.meta, kv.page_slot, kv.pool1, kv.scale1
+
+    def body(i, carry):
+        meta, page_slot, pool1, scale1 = carry
+        free = ~meta.valid
+        has_free = jnp.any(free)
+        slot = jnp.argmax(free).astype(jnp.int32)
+        nxt = jnp.argmax(flat_cand & (page_slot.reshape(-1) < 0))
+        do = has_free & flat_cand[nxt] & (page_slot.reshape(-1)[nxt] < 0)
+        b, p = nxt // spec.n_pages, nxt % spec.n_pages
+        t2 = jnp.clip(kv.t2_slot[b, p], 0)
+        pool1 = jnp.where(do, pool1.at[slot].set(kv.pool2[t2]), pool1)
+        if spec.quantized:
+            scale1 = jnp.where(do, scale1.at[slot].set(kv.scale2[t2]), scale1)
+        meta = CacheState(
+            tags=jnp.where(do, meta.tags.at[slot].set(nxt), meta.tags),
+            valid=jnp.where(do, meta.valid.at[slot].set(True), meta.valid),
+            dirty=jnp.where(do, meta.dirty.at[slot].set(False), meta.dirty),
+            freq=jnp.where(do, meta.freq.at[slot].set(1), meta.freq),
+            ts=jnp.where(do, meta.ts.at[slot].set(kv.t[0]), meta.ts),
+        )
+        page_slot = jnp.where(
+            do, page_slot.at[b, p].set(slot), page_slot
+        )
+        return meta, page_slot, pool1, scale1
+
+    meta, page_slot, pool1, scale1 = jax.lax.fori_loop(
+        0, n_promote, body, (meta, page_slot, pool1, scale1)
+    )
+    return kv._replace(meta=meta, page_slot=page_slot, pool1=pool1,
+                       scale1=scale1)

@@ -1,0 +1,4 @@
+"""Two-tier storage substrate: tier-1 cache engine, tier-2 simulator, and
+the paged pools used by serving (KV) and training (data shards).
+"""
+from repro.storage import cache_state, tier2, tiered_store  # noqa: F401

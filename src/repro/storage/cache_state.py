@@ -1,0 +1,54 @@
+"""Tier-1 cache state (paper §III).
+
+Each cache line carries ``index, tag, valid and dirty bits`` plus the
+``frequency counter and timestamp fields`` used by the eviction experts.
+The paper stores cache *states* in CPU memory and *data* on NVMe; here the
+state is a pure pytree (all decisions are derivable from it, as required by
+the low-overhead experts of §III-A) and data lives in a separate page pool
+(see :mod:`repro.storage.kvpool` / :mod:`repro.storage.datacache`).
+
+The cache is demand-driven, fully-associative, write-back, single-copy
+(no replication => no coherency protocol), exactly as in the paper.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+__all__ = ["CacheState", "init_cache", "lookup"]
+
+
+class CacheState(NamedTuple):
+    """Fully-associative tier-1 cache metadata (one shard)."""
+
+    tags: jnp.ndarray   # int32[N] page number per line; -1 = empty
+    valid: jnp.ndarray  # bool[N]
+    dirty: jnp.ndarray  # bool[N]
+    freq: jnp.ndarray   # int32[N]  LFU frequency counter
+    ts: jnp.ndarray     # int32[N]  LRU last-access timestamp
+
+    @property
+    def n_lines(self) -> int:
+        return self.tags.shape[-1]
+
+
+def init_cache(n_lines: int) -> CacheState:
+    return CacheState(
+        tags=jnp.full((n_lines,), -1, dtype=jnp.int32),
+        valid=jnp.zeros((n_lines,), dtype=bool),
+        dirty=jnp.zeros((n_lines,), dtype=bool),
+        freq=jnp.zeros((n_lines,), dtype=jnp.int32),
+        ts=jnp.zeros((n_lines,), dtype=jnp.int32),
+    )
+
+
+def lookup(cache: CacheState, page: jnp.ndarray):
+    """Fully-associative lookup. Returns ``(hit, line_idx)``.
+
+    ``line_idx`` is arbitrary when ``hit`` is False.
+    """
+    match = cache.valid & (cache.tags == page)
+    hit = jnp.any(match)
+    idx = jnp.argmax(match).astype(jnp.int32)
+    return hit, idx

@@ -1,0 +1,290 @@
+"""The two-tier storage engine (paper §III), as a jitted ``lax.scan``.
+
+Semantics per request (page, is_write), faithful to the paper:
+
+1. **Lookup** in the fully-associative tier-1 cache. A hit updates the
+   timestamp (LRU), frequency counter (LFU) and dirty bit.
+2. A **miss** first probes the prefetch buffer; a buffered page is promoted
+   to the cache without a tier-2 access. Otherwise the page is fetched from
+   tier 2 (one tier-2 read).
+3. Insertion uses a free line if one exists; otherwise **GetVictim**
+   (Algorithm 1) selects the eviction expert by probability, every expert's
+   proposal is recorded in its prediction vector, and the chosen victim is
+   evicted (a dirty victim costs one tier-2 write-back).
+4. The **stream identifier** observes the miss stream and issues prefetches
+   into free buffer slots ("page misses are prioritized over prefetches").
+5. Every ``epoch_width`` iterations, **WeightAdjust** (Algorithm 2) runs and
+   prediction vectors are cleared.
+
+The engine is branchless (computed-both-paths + select) so it vmaps across
+distributed cache shards (paper's per-process caches). Tier-2 is counted
+here (reads / write-backs); converting counts to time is the queuing and
+device-model layer (:mod:`repro.core.queuing`, :mod:`repro.core.device_models`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import online_learning as ol
+from repro.core import prefetch as pfm
+from repro.core.mapping import page_to_shard
+from repro.storage.cache_state import CacheState, init_cache
+
+__all__ = ["StoreConfig", "StoreState", "StreamStats", "run_stream", "run_distributed"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreConfig:
+    n_lines: int = 64
+    policy: str = "ws"  # ws | lru | lfu | random
+    epoch_width: int = 4
+    alpha: float = 0.5
+    beta: float = 0.7
+    threshold: float = 0.25
+    pred_cap: int = 64
+    prefetch: bool = False
+    prefetch_width: int = 4
+    prefetch_buf: int = 16
+
+    def ol_config(self) -> ol.OLConfig:
+        return ol.OLConfig(
+            epoch_width=self.epoch_width,
+            alpha=self.alpha,
+            beta=self.beta,
+            threshold=self.threshold,
+            pred_cap=self.pred_cap,
+        )
+
+    def policy_idx(self) -> Optional[int]:
+        if self.policy == "ws":
+            return None
+        return ol.EXPERTS.index(self.policy)
+
+
+class StoreState(NamedTuple):
+    cache: CacheState
+    ols: ol.OLState
+    pf: pfm.PrefetchState
+    t: jnp.ndarray          # int32 iteration counter
+    key: jax.Array          # PRNG for the Random expert
+
+
+class StreamStats(NamedTuple):
+    """Aggregated counters for a processed request stream."""
+
+    requests: jnp.ndarray
+    hits: jnp.ndarray
+    misses: jnp.ndarray
+    prefetch_hits: jnp.ndarray   # misses serviced from the prefetch buffer
+    tier2_reads: jnp.ndarray     # demand fetches + prefetch fetches
+    tier2_writes: jnp.ndarray    # dirty write-backs
+    evictions: jnp.ndarray
+    expert_use: jnp.ndarray      # int32[E] evictions issued per expert
+    final_weights: jnp.ndarray   # f32[E]
+
+    @property
+    def miss_rate(self):
+        return self.misses / jnp.maximum(self.requests, 1)
+
+
+def init_store(cfg: StoreConfig, seed: int = 0) -> StoreState:
+    return StoreState(
+        cache=init_cache(cfg.n_lines),
+        ols=ol.init_ol(cfg.ol_config()),
+        pf=pfm.init_prefetch(cfg.prefetch_buf),
+        t=jnp.zeros((), jnp.int32),
+        key=jax.random.PRNGKey(seed),
+    )
+
+
+def _step(cfg: StoreConfig, state: StoreState, req):
+    page, is_write = req
+    page = page.astype(jnp.int32)
+    cache, ols, pf = state.cache, state.ols, state.pf
+    t = state.t
+    key, vkey = jax.random.split(state.key)
+
+    # --- 1. lookup -------------------------------------------------------
+    match = cache.valid & (cache.tags == page)
+    hit = jnp.any(match)
+    hit_idx = jnp.argmax(match).astype(jnp.int32)
+
+    # Hit path metadata updates.
+    ts_hit = cache.ts.at[hit_idx].set(t)
+    freq_hit = cache.freq.at[hit_idx].add(1)
+    dirty_hit = cache.dirty.at[hit_idx].set(cache.dirty[hit_idx] | is_write)
+
+    # --- 2/3. miss path ---------------------------------------------------
+    miss = ~hit
+    ols = jax.tree.map(
+        lambda new, old: jnp.where(miss, new, old), ol.note_miss(ols, page), ols
+    )
+    # Prefetch buffer probe (only meaningful on a miss).
+    pf_probed, in_buf = pfm.probe_and_promote(pf, page)
+    pf = jax.tree.map(lambda new, old: jnp.where(miss, new, old), pf_probed, pf)
+    promoted = miss & in_buf
+
+    free = ~cache.valid
+    has_free = jnp.any(free)
+    free_idx = jnp.argmax(free).astype(jnp.int32)
+
+    # GetVictim: every expert proposes; chosen expert's proposal is used.
+    proposals = ol.propose_victims(cache, vkey)          # int32[E] line idx
+    victim_pages = cache.tags[proposals]                  # int32[E]
+    chosen = ol.choose_expert(ols, cfg.policy_idx())
+    victim_idx = proposals[chosen]
+
+    evict = miss & ~has_free
+    slot = jnp.where(has_free, free_idx, victim_idx)
+    writeback = evict & cache.dirty[slot]
+
+    # Record prediction vectors only when an eviction actually happens.
+    ols_pred = ol.record_predictions(ols, cfg.ol_config(), victim_pages)
+    ols = jax.tree.map(lambda new, old: jnp.where(evict, new, old), ols_pred, ols)
+    ols = ols._replace(chosen=jnp.where(evict, chosen, ols.chosen[0])[None])
+
+    # Insert the missed page.
+    tags_miss = cache.tags.at[slot].set(page)
+    valid_miss = cache.valid.at[slot].set(True)
+    dirty_miss = cache.dirty.at[slot].set(is_write)
+    freq_miss = cache.freq.at[slot].set(1)
+    ts_miss = cache.ts.at[slot].set(t)
+
+    cache = CacheState(
+        tags=jnp.where(miss, tags_miss, cache.tags),
+        valid=jnp.where(miss, valid_miss, cache.valid),
+        dirty=jnp.where(miss, dirty_miss, jnp.where(hit, dirty_hit, cache.dirty)),
+        freq=jnp.where(miss, freq_miss, jnp.where(hit, freq_hit, cache.freq)),
+        ts=jnp.where(miss, ts_miss, jnp.where(hit, ts_hit, cache.ts)),
+    )
+
+    # --- 4. stream identifier + prefetch issue ----------------------------
+    if cfg.prefetch:
+        pf_obs = pfm.observe_miss(pf, page)
+        pf = jax.tree.map(lambda new, old: jnp.where(miss, new, old), pf_obs, pf)
+        n_before = pf.issued
+        pf_issued = pfm.issue_prefetches(
+            pf, page, cache.tags, cache.valid, cfg.prefetch_width
+        )
+        pf = jax.tree.map(lambda new, old: jnp.where(miss, new, old), pf_issued, pf)
+        prefetch_fetches = jnp.where(miss, pf.issued - n_before, 0)
+    else:
+        prefetch_fetches = jnp.zeros((), jnp.int32)
+
+    # --- 5. epoch boundary -------------------------------------------------
+    epoch_end = (t + 1) % cfg.epoch_width == 0
+    if cfg.policy == "ws":
+        ols_adj = ol.weight_adjust(ols, cfg.ol_config())
+        ols = jax.tree.map(
+            lambda new, old: jnp.where(epoch_end, new, old), ols_adj, ols
+        )
+
+    out = dict(
+        hit=hit,
+        miss=miss,
+        prefetch_hit=promoted,
+        tier2_read=(miss & ~promoted).astype(jnp.int32) + prefetch_fetches,
+        tier2_write=writeback.astype(jnp.int32),
+        evict=evict,
+        chosen=jnp.where(evict, chosen, -1),
+    )
+    return StoreState(cache=cache, ols=ols, pf=pf, t=t + 1, key=key), out
+
+
+def _aggregate(outs, final: StoreState) -> StreamStats:
+    expert_use = jnp.stack(
+        [jnp.sum(outs["chosen"] == e) for e in range(ol.N_EXPERTS)]
+    ).astype(jnp.int32)
+    return StreamStats(
+        requests=outs["hit"].shape[0] + jnp.zeros((), jnp.int32),
+        hits=jnp.sum(outs["hit"]).astype(jnp.int32),
+        misses=jnp.sum(outs["miss"]).astype(jnp.int32),
+        prefetch_hits=jnp.sum(outs["prefetch_hit"]).astype(jnp.int32),
+        tier2_reads=jnp.sum(outs["tier2_read"]).astype(jnp.int32),
+        tier2_writes=jnp.sum(outs["tier2_write"]).astype(jnp.int32),
+        evictions=jnp.sum(outs["evict"]).astype(jnp.int32),
+        expert_use=expert_use,
+        final_weights=final.ols.weights,
+    )
+
+
+def run_stream(
+    cfg: StoreConfig,
+    pages: jnp.ndarray,
+    is_write: jnp.ndarray,
+    *,
+    seed: int = 0,
+) -> StreamStats:
+    """Process a request stream through one tier-1 shard. Jitted scan."""
+
+    pages = jnp.asarray(pages, jnp.int32)
+    is_write = jnp.asarray(is_write, bool)
+
+    def scan_fn(state, req):
+        return _step(cfg, state, req)
+
+    state0 = init_store(cfg, seed)
+    final, outs = jax.lax.scan(scan_fn, state0, (pages, is_write))
+    return _aggregate(outs, final)
+
+
+run_stream_jit = jax.jit(run_stream, static_argnums=0, static_argnames=("seed",))
+
+
+def run_distributed(
+    cfg: StoreConfig,
+    pages: np.ndarray,
+    is_write: np.ndarray,
+    *,
+    n_shards: int,
+    mapping: str = "block",
+    n_pages: Optional[int] = None,
+    seed: int = 0,
+):
+    """Distributed tier-1 cache: requests partitioned to per-shard caches by
+    the §III mapping policy, shards processed by ``vmap`` (the paper's
+    per-process caches are independent — no replication, no migration).
+
+    Returns ``(per_shard_stats, shard_request_counts)``; per-shard stats are
+    padded streams, so counters are exact but ``requests`` reflects real
+    (unpadded) request counts.
+    """
+    n_pages = int(n_pages if n_pages is not None else (pages.max() + 1))
+    owner = np.asarray(
+        page_to_shard(jnp.asarray(pages), n_shards, n_pages, mapping)
+    )
+    counts = np.bincount(owner, minlength=n_shards)
+    cap = int(counts.max()) if counts.size else 0
+    # Pad each shard's substream with repeats of its own last page (a pure
+    # hit, so stats beyond `requests` are unaffected).
+    sh_pages = np.zeros((n_shards, max(cap, 1)), np.int32)
+    sh_writes = np.zeros((n_shards, max(cap, 1)), bool)
+    sh_mask = np.zeros((n_shards, max(cap, 1)), bool)
+    for s in range(n_shards):
+        sel = owner == s
+        k = int(sel.sum())
+        if k:
+            sh_pages[s, :k] = pages[sel]
+            sh_writes[s, :k] = is_write[sel]
+            sh_pages[s, k:] = pages[sel][-1]
+            sh_mask[s, :k] = True
+
+    def one(p, w, s):
+        return run_stream(cfg, p, w, seed=0)
+
+    stats = jax.vmap(lambda p, w: run_stream(cfg, p, w))(
+        jnp.asarray(sh_pages), jnp.asarray(sh_writes)
+    )
+    # Correct the hit/request counts for padding (padded reqs are all hits on
+    # the final page — subtract them).
+    pad = jnp.asarray(max(cap, 1) - counts, jnp.int32)
+    stats = stats._replace(
+        requests=jnp.asarray(counts, jnp.int32),
+        hits=jnp.maximum(stats.hits - pad, 0),
+    )
+    return stats, counts

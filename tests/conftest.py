@@ -1,0 +1,10 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see 1 device
+(the 512-device override belongs only to launch/dryrun.py and subprocess
+tests)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

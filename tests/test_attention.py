@@ -1,0 +1,68 @@
+"""Blockwise XLA attention (production path) vs naive reference, and the
+distributed-partial combine identity."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ref import attention_ref
+from repro.models.attention import (
+    attention_partial, blockwise_attention,
+)
+
+
+@pytest.mark.parametrize("S,H,KV,hd,causal,window,prefix", [
+    (64, 4, 2, 16, True, None, 0),
+    (100, 4, 1, 8, True, 16, 0),
+    (64, 8, 8, 16, False, None, 0),
+    (96, 4, 2, 16, True, None, 24),
+])
+def test_blockwise_matches_naive(S, H, KV, hd, causal, window, prefix, rng):
+    B = 2
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    out = blockwise_attention(q, k, v, causal=causal, window=window,
+                              prefix_len=prefix, block_q=32, block_kv=16)
+    # naive ref in [B,H,S,hd] layout
+    ref = attention_ref(
+        jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1), jnp.moveaxis(v, 2, 1),
+        causal=causal, window=window,
+    )
+    if prefix:  # prefix-LM not in kernel ref; recompute with mask manually
+        import math
+        KVh = KV
+        G = H // KVh
+        qf = np.asarray(q, np.float64).reshape(B, S, KVh, G, hd)
+        s = np.einsum("bqkgh,bskh->bkgqs", qf, np.asarray(k, np.float64))
+        s /= math.sqrt(hd)
+        qpos = np.arange(S)[:, None]
+        kpos = np.arange(S)[None, :]
+        m = (qpos >= kpos) | (kpos < prefix)
+        s = np.where(m[None, None, None], s, -1e30)
+        p = np.exp(s - s.max(-1, keepdims=True))
+        p /= p.sum(-1, keepdims=True)
+        o = np.einsum("bkgqs,bskh->bqkgh", p, np.asarray(v, np.float64))
+        expected = o.reshape(B, S, H, hd)
+    else:
+        expected = np.moveaxis(np.asarray(ref), 1, 2)
+    np.testing.assert_allclose(np.asarray(out), expected, atol=3e-5)
+
+
+def test_two_partials_combine_to_full(rng):
+    B, H, KV, hd, T = 3, 8, 4, 16, 40
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, KV, hd)), jnp.float32)
+    valid = jnp.ones((B, T), bool)
+    p1 = attention_partial(q, k[:, :25], v[:, :25], valid[:, :25])
+    p2 = attention_partial(q, k[:, 25:], v[:, 25:], valid[:, 25:])
+    m = jnp.maximum(p1.m, p2.m)
+    l = p1.l * jnp.exp(p1.m - m) + p2.l * jnp.exp(p2.m - m)
+    acc = (p1.acc * jnp.exp(p1.m - m)[..., None]
+           + p2.acc * jnp.exp(p2.m - m)[..., None])
+    out = (acc / l[..., None]).reshape(B, H, hd)
+    ref = attention_ref(
+        q[:, :, None], jnp.moveaxis(k, 2, 1), jnp.moveaxis(v, 2, 1),
+        causal=False,
+    )[:, :, 0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)

@@ -1,0 +1,90 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode, shape/dtype sweeps)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("B,H,KV,S,hd,causal,window", [
+    (2, 4, 2, 128, 32, True, None),
+    (1, 4, 1, 256, 16, True, 64),
+    (2, 2, 2, 128, 32, False, None),
+    (1, 8, 8, 128, 64, True, None),
+])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_flash_attention(B, H, KV, S, hd, causal, window, dtype, rng):
+    dt = jnp.dtype(dtype)
+    q = jnp.asarray(rng.normal(size=(B, H, S, hd)), dt)
+    k = jnp.asarray(rng.normal(size=(B, KV, S, hd)), dt)
+    v = jnp.asarray(rng.normal(size=(B, KV, S, hd)), dt)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=64, block_kv=64, interpret=True)
+    expected = ref.attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == "float32" else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expected, np.float32),
+        atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,H,KV,hd,page,n_pages,slots", [
+    (2, 4, 2, 16, 8, 6, 8),
+    (1, 8, 8, 32, 16, 4, 4),
+    (3, 4, 1, 16, 8, 5, 16),
+])
+def test_paged_attention(B, H, KV, hd, page, n_pages, slots, rng):
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+    pool = jnp.asarray(rng.normal(size=(slots, page, 2, KV, hd)), jnp.float32)
+    ps = jnp.asarray(rng.integers(-1, slots, size=(B, n_pages)), jnp.int32)
+    lengths = jnp.asarray(rng.integers(1, page * n_pages, size=(B,)), jnp.int32)
+    acc, m, l = ops.paged_attention(q, pool, ps, lengths, interpret=True)
+    racc, rm, rl = ref.paged_attention_ref(q, pool, ps, lengths)
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(racc).reshape(B, H, hd),
+                               atol=3e-5, rtol=3e-5)
+    np.testing.assert_allclose(np.asarray(l), np.asarray(rl).reshape(B, H),
+                               atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("Sd,Ss,R,C,N", [(6, 9, 4, 32, 5), (3, 3, 8, 16, 2)])
+def test_page_copy(Sd, Ss, R, C, N, rng):
+    dst = jnp.asarray(rng.normal(size=(Sd, R, C)), jnp.float32)
+    src = jnp.asarray(rng.normal(size=(Ss, R, C)), jnp.float32)
+    di = rng.integers(-1, Sd, size=(N,)).astype(np.int32)
+    si = rng.integers(-1, Ss, size=(N,)).astype(np.int32)
+    seen = set()
+    for i in range(N):  # unique dst rows (copy order is unspecified)
+        if di[i] in seen:
+            di[i] = -1
+        seen.add(di[i])
+    out = ops.page_copy(dst, src, jnp.asarray(di), jnp.asarray(si),
+                        interpret=True)
+    expected = ref.page_copy_ref(dst, src, jnp.asarray(di), jnp.asarray(si))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expected))
+
+
+@pytest.mark.parametrize("B,S,W,bw,ch", [(2, 64, 32, 16, 16),
+                                         (1, 128, 64, 64, 32)])
+def test_rglru_scan(B, S, W, bw, ch, rng):
+    u = jnp.asarray(rng.normal(size=(B, S, W)), jnp.float32)
+    ps = [jnp.asarray(rng.normal(size=(W,)) * 0.5, jnp.float32)
+          for _ in range(5)]
+    out = ops.rglru_scan(u, *ps, block_w=bw, chunk=ch, interpret=True)
+    expected = ref.rglru_ref(u, *ps)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected), atol=1e-5)
+
+
+@pytest.mark.parametrize("B,S,H,P,N,Q", [(2, 64, 3, 8, 16, 16),
+                                         (1, 128, 2, 16, 8, 32)])
+def test_ssd_scan(B, S, H, P, N, Q, rng):
+    x = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(size=(B, S, H))) * 0.5 + 0.01,
+                     jnp.float32)
+    A = jnp.asarray(-np.abs(rng.normal(size=(H,))), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    out = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=Q, interpret=True)
+    expected = ref.ssd_ref(x, dt, A, Bm, Cm)
+    rel = float(jnp.abs(out - expected).max() / (jnp.abs(expected).max()))
+    assert rel < 1e-5

@@ -1,0 +1,51 @@
+"""Page->shard mapping policies (§III): hypothesis property tests."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.mapping import MAPPING_POLICIES, page_to_shard, shard_load
+
+
+@given(
+    policy=st.sampled_from(sorted(MAPPING_POLICIES)),
+    n_shards=st.integers(1, 16),
+    n_pages=st.integers(1, 512),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=60, deadline=None)
+def test_owner_in_range_and_deterministic(policy, n_shards, n_pages, seed):
+    rng = np.random.default_rng(seed)
+    pages = jnp.asarray(rng.integers(0, n_pages, 64), jnp.int32)
+    o1 = np.asarray(page_to_shard(pages, n_shards, n_pages, policy))
+    o2 = np.asarray(page_to_shard(pages, n_shards, n_pages, policy))
+    assert (o1 >= 0).all() and (o1 < n_shards).all()
+    np.testing.assert_array_equal(o1, o2)
+
+
+def test_round_robin_perfectly_balanced():
+    pages = jnp.arange(1024, dtype=jnp.int32)
+    load = np.asarray(shard_load(pages, 8, 1024, "round_robin"))
+    assert load.min() == load.max() == 128
+
+
+def test_block_is_contiguous():
+    pages = jnp.arange(100, dtype=jnp.int32)
+    owner = np.asarray(page_to_shard(pages, 4, 100, "block"))
+    assert (np.diff(owner) >= 0).all()  # monotone => contiguous ranges
+
+
+def test_block_cyclic_blocks():
+    pages = jnp.arange(64, dtype=jnp.int32)
+    owner = np.asarray(page_to_shard(pages, 4, 64, "block_cyclic", block=8))
+    for b in range(8):
+        blk = owner[b * 8:(b + 1) * 8]
+        assert (blk == blk[0]).all()
+
+
+def test_random_balances_hot_set():
+    """Paper §III: random mapping load-balances shared page sets."""
+    pages = jnp.asarray(np.random.default_rng(0).integers(0, 4096, 8192),
+                        jnp.int32)
+    load = np.asarray(shard_load(pages, 8, 4096, "random"))
+    assert load.max() < 2.0 * load.mean()

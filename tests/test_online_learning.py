@@ -1,0 +1,89 @@
+"""Property tests (hypothesis) for the OL weight-sharing algorithm."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import online_learning as ol
+from repro.storage.cache_state import init_cache
+
+
+@given(
+    mispred=st.lists(st.integers(0, 20), min_size=3, max_size=3),
+    misses=st.integers(1, 64),
+)
+@settings(max_examples=50, deadline=None)
+def test_weight_adjust_properties(mispred, misses):
+    cfg = ol.OLConfig()
+    s = ol.init_ol(cfg)
+    s = s._replace(
+        mispred=jnp.asarray(mispred, jnp.int32),
+        epoch_misses=jnp.asarray([misses], jnp.int32),
+    )
+    out = ol.weight_adjust(s, cfg)
+    w = np.asarray(out.weights)
+    # normalized simplex
+    assert abs(w.sum() - 1.0) < 1e-5
+    assert (w > 0).all()
+    # epoch state cleared
+    assert int(out.epoch_misses[0]) == 0
+    assert (np.asarray(out.pred) == -1).all()
+
+
+def test_penalized_expert_loses_weight():
+    cfg = ol.OLConfig()
+    s = ol.init_ol(cfg)
+    s = s._replace(
+        mispred=jnp.asarray([10, 0, 0], jnp.int32),
+        epoch_misses=jnp.asarray([10], jnp.int32),
+    )
+    out = ol.weight_adjust(s, cfg)
+    w = np.asarray(out.weights)
+    assert w[0] < w[1] and w[0] < w[2]
+
+
+def test_below_threshold_ignored():
+    """Paper: mispredictions < THRESHOLD*miss_count are ignored."""
+    cfg = ol.OLConfig(threshold=0.25)
+    s = ol.init_ol(cfg)
+    s = s._replace(
+        mispred=jnp.asarray([1, 0, 0], jnp.int32),  # 1 < 0.25*100
+        epoch_misses=jnp.asarray([100], jnp.int32),
+    )
+    out = ol.weight_adjust(s, cfg)
+    w = np.asarray(out.weights)
+    np.testing.assert_allclose(w, np.ones(3) / 3, atol=1e-6)
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 32))
+@settings(max_examples=30, deadline=None)
+def test_victim_proposals_valid(seed, n):
+    cache = init_cache(n)
+    # fill half the lines
+    k = max(1, n // 2)
+    cache = cache._replace(
+        valid=cache.valid.at[:k].set(True),
+        tags=cache.tags.at[:k].set(jnp.arange(k)),
+        ts=cache.ts.at[:k].set(jnp.arange(k)),
+        freq=cache.freq.at[:k].set(jnp.arange(k) + 1),
+    )
+    props = ol.propose_victims(cache, jax.random.PRNGKey(seed))
+    p = np.asarray(props)
+    assert (p >= 0).all() and (p < n).all()
+    assert (p < k).all()  # only valid lines
+    assert p[0] == 0      # LRU = oldest ts
+    assert p[1] == 0      # LFU = lowest freq
+
+
+def test_pinned_lines_never_proposed():
+    cache = init_cache(8)
+    cache = cache._replace(
+        valid=cache.valid.at[:].set(True),
+        ts=cache.ts.at[:].set(jnp.arange(8)),
+        freq=cache.freq.at[:].set(jnp.arange(8) + 1),
+    )
+    pinned = jnp.zeros(8, bool).at[0].set(True).at[1].set(True)
+    for seed in range(5):
+        p = np.asarray(ol.propose_victims(cache, jax.random.PRNGKey(seed), pinned))
+        assert (p >= 2).all()

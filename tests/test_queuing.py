@@ -1,0 +1,77 @@
+"""Queuing network (eqs. 1-7): worked example + structural properties."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.queuing import (
+    TwoTierModel, mgk_queue, mm1_queue, mmk_queue, service_time_model,
+    system_service_rate,
+)
+
+
+def test_paper_worked_example():
+    """§V: lam=100, mu1=1000, mu2=33, p12=0.2 => lam_eff=86.6,
+    rho1=0.0866, rho2~0.6, T=28.8s, response=2.5s."""
+    m = TwoTierModel(lam=100, mu1=1000, mu2=33, p12=0.2, k=1)
+    r = m.analyze()
+    s = r.summary()
+    assert abs(s["lam_eff"] - 86.6) < 1e-9
+    assert abs(s["rho1"] - 0.0866) < 1e-4
+    assert abs(s["rho2"] - 20 / 33) < 1e-9
+    assert r.equilibrium
+    assert s["L1"] < 0.01  # "expected length of the tier 1 queue is almost 0"
+    t = m.time_for(2500)
+    assert abs(t["arrival_window_s"] - 2500 / 86.6) < 1e-9
+    assert abs(t["response_time_s"] - 2.5) < 1e-12
+
+
+def test_service_time_model_eq1_to_4():
+    st_ = service_time_model(
+        n_read=[1000, 2000], n_write=[0, 0], n_miss=[100, 50],
+        mu1_read=1000.0, mu1_write=500.0, mu2=25.0,
+    )
+    assert st_.t_hit[0] == 1.0 and st_.t_hit[1] == 2.0
+    assert st_.t_miss[0] == 4.0 and st_.t_miss[1] == 2.0
+    assert st_.t_proc[0] == 4.0  # miss-bound (paper workload1 regime)
+    assert st_.t_total == 4.0
+
+
+def test_mmk_reduces_to_mm1():
+    a = mm1_queue(3.0, 5.0)
+    b = mmk_queue(3.0, 5.0, 1)
+    assert abs(a.lq - b.lq) < 1e-9
+    assert abs(a.wq - b.wq) < 1e-9
+
+
+def test_mgk_exponential_matches_mmk():
+    lam, mu, k = 5.0, 2.0, 4
+    mean_s = 1.0 / mu
+    exp_var = mean_s**2  # exponential service: C_s^2 = 1
+    a = mgk_queue(lam, mean_s, exp_var, k)
+    b = mmk_queue(lam, mu, k)
+    assert abs(a.lq - b.lq) < 1e-9
+
+
+@given(lam=st.floats(0.1, 50), mu=st.floats(0.1, 50))
+@settings(max_examples=50, deadline=None)
+def test_mm1_littles_law(lam, mu):
+    q = mm1_queue(lam, mu)
+    if q.stable:
+        # Little's law: L = lam * W
+        assert abs(q.l - lam * q.w) < 1e-6 * max(1.0, q.l)
+        assert q.rho < 1.0
+    else:
+        assert lam >= mu
+
+
+def test_overload_flagged_unstable():
+    m = TwoTierModel(lam=100, mu1=1000, mu2=10, p12=0.5, k=1)
+    assert not m.analyze().equilibrium  # miss queue overloaded (50 > 10)
+
+
+def test_system_rate_harmonic_bounds():
+    mu = system_service_rate(1000.0, 33.0, 0.2)
+    assert 33.0 < mu < 1000.0

@@ -1,0 +1,22 @@
+"""Multi-device SPMD equivalence, run in a subprocess (needs the
+xla_force_host_platform_device_count flag before jax import)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "spmd_eq_script.py")
+
+
+@pytest.mark.slow
+def test_sharded_train_matches_single_device():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    out = subprocess.run(
+        [sys.executable, SCRIPT], env=env, capture_output=True, text=True,
+        timeout=1800,
+    )
+    assert out.returncode == 0, out.stdout[-3000:] + out.stderr[-3000:]
+    assert "SPMD EQUIVALENCE OK" in out.stdout

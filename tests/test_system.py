@@ -1,0 +1,84 @@
+"""End-to-end behaviour: train a tiny model for real steps (loss falls),
+fault-injection restart drill, checkpoint round-trip, configurator."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.launch.train import run_training
+from repro.training.checkpoint import CheckpointConfig
+
+
+def test_train_loss_decreases(tmp_path):
+    ck = CheckpointConfig(
+        dir_tier1=str(tmp_path / "fast"), dir_tier2=str(tmp_path / "durable"),
+        tier1_every=1000, tier2_every=1000,
+    )
+    out = run_training(
+        arch="stablelm-3b", steps=40, batch=4, seq=64,
+        data_dir=str(tmp_path / "data"), ckpt=ck, resume=False, log_every=100,
+        lr=1e-3,
+    )
+    losses = out["losses"]
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+    assert out["cache_hits"] + out["cache_misses"] > 0
+
+
+def test_fault_injection_and_restart(tmp_path):
+    ck = CheckpointConfig(
+        dir_tier1=str(tmp_path / "fast"), dir_tier2=str(tmp_path / "durable"),
+        tier1_every=5, tier2_every=100,
+    )
+    out1 = run_training(arch="stablelm-3b", steps=20, batch=2, seq=32,
+                        data_dir=str(tmp_path / "data"), ckpt=ck, kill_at=12,
+                        log_every=100)
+    assert out1["killed_at"] == 12
+    out2 = run_training(arch="stablelm-3b", steps=20, batch=2, seq=32,
+                        data_dir=str(tmp_path / "data"), ckpt=ck,
+                        log_every=100)
+    # resumed: fewer than 20 fresh steps were run
+    assert len(out2["losses"]) <= 12
+
+
+def test_checkpoint_roundtrip_and_corruption(tmp_path):
+    import jax.numpy as jnp
+
+    from repro.training.checkpoint import (
+        restore_checkpoint, save_checkpoint,
+    )
+
+    ck = CheckpointConfig(dir_tier1=str(tmp_path / "f"),
+                          dir_tier2=str(tmp_path / "d"),
+                          tier1_every=1, tier2_every=2)
+    state = {"a": jnp.arange(8, dtype=jnp.float32),
+             "b": {"c": jnp.ones((3, 3), jnp.bfloat16)}}
+    save_checkpoint(state, 2, ck)
+    got, step = restore_checkpoint(state, ck)
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.arange(8))
+    # corrupt the newest tier-1 copy: restore falls back to tier-2
+    import glob
+    leaf = sorted(glob.glob(str(tmp_path / "f" / "step_*" / "leaf_*.npy")))[0]
+    with open(leaf, "r+b") as f:
+        f.seek(200)
+        f.write(b"\x00" * 8)
+    got2, step2 = restore_checkpoint(state, ck)
+    assert step2 == 2  # durable copy still valid
+
+
+def test_configurator_prefers_equilibrium():
+    from repro.core.configurator import configure
+    from repro.core.traffic import TrafficSpec
+
+    spec = TrafficSpec(kind="poisson", n_requests=600, n_pages=128)
+    cands = configure(spec, arrival_rate=100.0, cache_sizes=(16, 64),
+                      k_threads=(1, 16))
+    assert cands, "no candidates"
+    best = cands[0]
+    assert best.equilibrium
+    # bigger cache => lower (or equal) miss rate among candidates
+    by_size = {}
+    for c in cands:
+        by_size.setdefault(c.n_lines, c.miss_rate)
+    assert by_size[64] <= by_size[16] + 1e-9
