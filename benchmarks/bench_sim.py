@@ -1,0 +1,129 @@
+"""End-to-end simulator benchmark: §V worked example + a 3-axis sweep.
+
+  PYTHONPATH=src python benchmarks/bench_sim.py
+
+Produces ``benchmarks/results/bench_sim.json`` with:
+
+- ``worked_example``: the full simulate() pipeline (traffic -> distributed
+  tier 1 -> queuing) run with the §V constants and p12 = 0.2, for both flow
+  conventions. Accuracy gate: λ_eff within 1% of the published 86.6.
+- ``sweep``: a cache-size x shard-count x policy x traffic grid (the
+  ROADMAP capacity-planning scenario), with per-point wall time for the
+  batched vs. unbatched engine.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.traffic import TrafficSpec  # noqa: E402
+from repro.sim import RateSpec, SimSpec, simulate, sweep  # noqa: E402
+from repro.storage.tiered_store import StoreConfig  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+PUBLISHED_LAM_EFF = 86.6  # §V worked example
+
+
+def bench_worked_example() -> dict:
+    spec = SimSpec(
+        traffic=TrafficSpec(
+            kind="irm", n_requests=4000, n_pages=1024,
+            write_fraction=0.3, seed=7,
+        ),
+        store=StoreConfig(n_lines=128, policy="ws"),
+        n_shards=4,
+        lam=100.0,
+        k_servers=1,
+        rates=RateSpec(source="paper"),
+        p12_override=0.2,
+    )
+    out = {}
+    for flow in ("paper", "conserving"):
+        t0 = time.perf_counter()
+        rep = simulate(spec.replace(flow=flow))
+        dt = time.perf_counter() - t0
+        out[flow] = {
+            "wall_s": round(dt, 3),
+            "lam_eff": rep.lam_eff,
+            "rho1": rep.rho1,
+            "rho2": rep.rho2,
+            "w1_s": rep.w1,
+            "w2_s": rep.w2,
+            "response_s": rep.response_s,
+            "mu_system": rep.mu_system,
+            "measured_miss_rate": rep.miss_rate,
+            "t_total_s": rep.t_total_s,
+        }
+    err = abs(out["paper"]["lam_eff"] - PUBLISHED_LAM_EFF) / PUBLISHED_LAM_EFF
+    out["lam_eff_published"] = PUBLISHED_LAM_EFF
+    out["lam_eff_rel_err"] = err
+    out["ok"] = err < 0.01
+    return out
+
+
+def bench_sweep() -> dict:
+    base = SimSpec(
+        traffic=TrafficSpec(
+            kind="irm", n_requests=3000, n_pages=1024,
+            write_fraction=0.2, seed=3,
+        ),
+        store=StoreConfig(n_lines=64, policy="ws"),
+        n_shards=4,
+        lam=50.0,
+        rates=RateSpec(source="paper"),
+    )
+    axes = {
+        "store.n_lines": [16, 64, 256],
+        "n_shards": [2, 4],
+        "store.policy": ["lru", "lfu", "ws"],
+        "traffic.kind": ["irm", "poisson"],
+    }
+    t0 = time.perf_counter()
+    res = sweep(base, axes, batch=True)
+    t_batched = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sweep(base, axes, batch=False)
+    t_unbatched = time.perf_counter() - t0
+
+    best = min(res.rows(), key=lambda r: r["miss_rate"])
+    return {
+        "axes": {k: list(v) for k, v in axes.items()},
+        "n_points": len(res.points),
+        "wall_s_batched": round(t_batched, 3),
+        "wall_s_unbatched": round(t_unbatched, 3),
+        "best_point": {
+            k: best[k]
+            for k in (*map(str, axes), "miss_rate", "response_s", "lam_eff")
+        },
+        "points": res.rows(),
+    }
+
+
+def main() -> None:
+    artifact = {
+        "worked_example": bench_worked_example(),
+        "sweep": bench_sweep(),
+    }
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "bench_sim.json")
+    with open(path, "w") as f:
+        json.dump(artifact, f, indent=1)
+    we = artifact["worked_example"]
+    sw = artifact["sweep"]
+    print(f"worked_example: lam_eff={we['paper']['lam_eff']:.1f} "
+          f"(published {PUBLISHED_LAM_EFF}, rel_err={we['lam_eff_rel_err']:.2e}) "
+          f"ok={we['ok']}")
+    print(f"sweep: {sw['n_points']} points over {len(sw['axes'])} axes, "
+          f"batched={sw['wall_s_batched']}s unbatched={sw['wall_s_unbatched']}s")
+    print(f"best point: {sw['best_point']}")
+    print(f"artifact: {path}")
+    if not we["ok"]:
+        raise SystemExit("worked example outside 1% of published lam_eff")
+
+
+if __name__ == "__main__":
+    main()

@@ -94,6 +94,8 @@ class QueueMetrics(NamedTuple):
 
 def mm1_queue(lam: float, mu: float) -> QueueMetrics:
     """M/M/1 (paper eq. 7 uses Lq = rho^2/(1-rho))."""
+    if lam <= 0.0:  # no arrivals: empty queue, residence = pure service
+        return QueueMetrics(0.0, 1.0, 0.0, 0.0, 0.0, 1.0 / mu, True)
     rho = lam / mu
     if rho >= 1.0:
         return QueueMetrics(rho, 0.0, math.inf, math.inf, math.inf, math.inf, False)
@@ -111,6 +113,8 @@ def _mmk_p0(a: float, k: int) -> float:
 
 def mmk_queue(lam: float, mu: float, k: int) -> QueueMetrics:
     """M/M/k. Paper eq. 6: L1 = P0 * a^(k+1) / ((k-1)! (k-a)^2), a = lam/mu."""
+    if lam <= 0.0:
+        return QueueMetrics(0.0, 1.0, 0.0, 0.0, 0.0, 1.0 / mu, True)
     a = lam / mu
     rho = a / k
     if rho >= 1.0:
@@ -130,7 +134,7 @@ def mgk_queue(lam: float, mean_s: float, var_s: float, k: int) -> QueueMetrics:
     """
     mu = 1.0 / mean_s
     base = mmk_queue(lam, mu, k)
-    if not base.stable:
+    if not base.stable or lam <= 0.0:
         return base
     cs2 = var_s / (mean_s * mean_s)
     scale = (1.0 + cs2) / 2.0

@@ -28,7 +28,71 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-__all__ = ["Axes", "SINGLE", "pvary_like", "vma_of"]
+__all__ = ["Axes", "SINGLE", "pvary_like", "vma_of", "HAS_VMA", "pvary_entry"]
+
+# Whether this jax has the varying-manual-axes system (jax >= 0.6). Pre-vma
+# jax transposes collectives differently inside shard_map: transpose(psum)
+# is psum (double-counting a replicated cotangent) and there is no implicit
+# replicated->varying promotion whose transpose sums partial gradients. The
+# two custom_vjp wrappers below restore the vma AD semantics on old jax so
+# sharded gradients match the single-device reference bit-for-bit-ish.
+HAS_VMA = hasattr(lax, "pvary")
+
+if not HAS_VMA:
+    from functools import partial as _partial
+
+    @_partial(jax.custom_vjp, nondiff_argnums=(1,))
+    def _psum_rep(x, names: tuple):
+        return lax.psum(x, names)
+
+    def _psum_rep_fwd(x, names: tuple):
+        return lax.psum(x, names), None
+
+    def _psum_rep_bwd(names, _, ct):
+        # vma semantics: psum output is replicated, so its (replicated)
+        # cotangent flows through unchanged.
+        return (ct,)
+
+    _psum_rep.defvjp(_psum_rep_fwd, _psum_rep_bwd)
+
+    @_partial(jax.custom_vjp, nondiff_argnums=(1,))
+    def _pvary_compat(x, names: tuple):
+        return x
+
+    def _pvary_compat_fwd(x, names: tuple):
+        return x, None
+
+    def _pvary_compat_bwd(names, _, ct):
+        # vma semantics: transpose of replicated->varying promotion sums the
+        # per-shard partial gradients.
+        return (lax.psum(ct, names),)
+
+    _pvary_compat.defvjp(_pvary_compat_fwd, _pvary_compat_bwd)
+
+
+def _psum_replicated_ct(x, names: tuple):
+    """psum whose output stays replicated over ``names`` until the loss.
+
+    On vma jax this is plain psum. On old jax the default transpose(psum) =
+    psum would re-sum the already-replicated cotangent (an axis-size
+    inflation), so the custom_vjp identity-transpose version is used.
+    Reductions whose output is consumed by *varying* compute (TP partial
+    sums) must NOT use this: for those the old default transpose is the
+    correct cross-shard cotangent sum.
+    """
+    if HAS_VMA:
+        return lax.psum(x, names)
+    return _psum_rep(x, names)
+
+
+def pvary_entry(x, names: Sequence[str]):
+    """Mark a replicated value as consumed shard-locally, so its partial
+    gradients are psum'ed over ``names``. Identity on vma jax (the implicit
+    promotion already transposes to psum); custom_vjp shim on old jax."""
+    names = tuple(n for n in names if n)
+    if HAS_VMA or not names:
+        return x
+    return _pvary_compat(x, names)
 
 
 def vma_of(x) -> frozenset:
@@ -59,6 +123,8 @@ def pvary_tree(tree, names: Sequence[str]):
     declare full device variance even when the initial values are constants.
     """
     names = tuple(n for n in names if n)
+    if not HAS_VMA:  # pre-vma jax: nothing to promote
+        return tree
 
     def one(x):
         want = tuple(sorted(set(names) - vma_of(x)))
@@ -77,7 +143,9 @@ class Axes:
     def size(self, name: Optional[str]) -> int:
         if name is None:
             return 1
-        return lax.axis_size(name)
+        if hasattr(lax, "axis_size"):
+            return lax.axis_size(name)
+        return lax.psum(1, name)  # constant-folded to int on pre-0.6 jax
 
     def index(self, name: Optional[str]) -> jnp.ndarray:
         if name is None:
@@ -102,10 +170,20 @@ class Axes:
 
     # -- collectives (identity when the axis is absent) ----------------------
     def psum(self, x, name: Optional[str]):
+        """Partial-sum reduction consumed by shard-varying compute (TP)."""
         return x if name is None else lax.psum(x, name)
 
+    def psum_rep(self, x, name: Optional[str]):
+        """Reduction whose output stays replicated into the loss (softmax
+        statistics, global losses) — AD-safe on pre-vma jax."""
+        return x if name is None else _psum_replicated_ct(x, (name,))
+
     def pmean(self, x, name: Optional[str]):
-        return x if name is None else lax.pmean(x, name)
+        """Mean whose output stays replicated into the loss (loss/metric
+        averaging); see psum_rep for the pre-vma AD caveat."""
+        if name is None:
+            return x
+        return _psum_replicated_ct(x, (name,)) / self.size(name)
 
     def pmax(self, x, name: Optional[str]):
         return x if name is None else lax.pmax(x, name)

@@ -135,13 +135,13 @@ def unembed_loss(
     )  # [B,S,V_local] f32
     m_loc = jnp.max(logits, axis=-1)
     m = ax.pmax(jax.lax.stop_gradient(m_loc), ax.model)
-    se = ax.psum(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1), ax.model)
+    se = ax.psum_rep(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1), ax.model)
     start = ax.index(ax.model) * v_local if ax.model is not None else 0
     local = labels - start
     ok = (local >= 0) & (local < v_local)
     safe = jnp.clip(local, 0, v_local - 1)
     ll_loc = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
-    label_logit = ax.psum(jnp.where(ok, ll_loc, 0.0), ax.model)
+    label_logit = ax.psum_rep(jnp.where(ok, ll_loc, 0.0), ax.model)
     nll = jnp.log(se) + m - label_logit  # [B,S]
     if mask is not None:
         nll = nll * mask

@@ -1,0 +1,30 @@
+"""End-to-end tiered-storage simulator (paper §V composed end to end).
+
+``simulate(SimSpec)`` runs workload -> distributed tier-1 cache -> queuing
+network -> report; ``sweep()`` evaluates grids of scenarios with shared
+cache runs batched under vmap. This is the integration surface for new
+device models, replacement policies and traffic generators.
+"""
+from repro.sim.engine import (  # noqa: F401
+    ShardReport,
+    SimReport,
+    Tier1Counters,
+    report_from_counters,
+    simulate,
+    tier1_counters,
+)
+from repro.sim.spec import (  # noqa: F401
+    PAPER_MU1,
+    PAPER_MU2,
+    RateSpec,
+    ResolvedRates,
+    SimSpec,
+)
+from repro.sim.sweep import SweepResult, expand_grid, sweep  # noqa: F401
+
+__all__ = [
+    "SimSpec", "RateSpec", "ResolvedRates", "PAPER_MU1", "PAPER_MU2",
+    "SimReport", "ShardReport", "Tier1Counters",
+    "simulate", "tier1_counters", "report_from_counters",
+    "sweep", "expand_grid", "SweepResult",
+]

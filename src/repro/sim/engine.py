@@ -1,0 +1,310 @@
+"""End-to-end two-tier simulator: traffic -> tier-1 shards -> queuing.
+
+This is the composition the paper's §V builds by hand for one worked
+example, as a subsystem: :func:`simulate` generates (or accepts) a request
+stream, pushes it through the distributed tier-1 cache engine
+(:func:`repro.storage.tiered_store.run_distributed`), converts the
+resulting counters into queuing-network inputs (λ, p12, μ1, μ2), and
+reports per-shard and aggregate latency / throughput / utilization plus
+the minimum-time model (eqs. 1-4).
+
+The counters -> queuing mapping:
+
+=====================  ====================================================
+counter                queuing-network input
+=====================  ====================================================
+``misses/requests``    p12, the tier-2 branch probability (per shard and
+                       pooled; ``SimSpec.p12_override`` pins it instead)
+``requests - writes``  n_read_i in eq. 1 (hit service at μ1_read)
+``writes``             n_write_i in eq. 1 (hit service at μ1_write)
+``misses``             n_miss_i in eq. 2 (miss service at μ2)
+``tier2_reads/writes`` reported as device traffic (prefetch fetches and
+                       dirty write-backs ride the same IO thread)
+=====================  ====================================================
+
+Service rates come from :class:`repro.sim.spec.RateSpec` (fitted device
+models or the §V paper constants).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+from repro.core.mapping import page_to_shard
+from repro.core.queuing import ServiceTimes, TwoTierModel, service_time_model
+from repro.core.traffic import make_stream
+from repro.sim.spec import ResolvedRates, SimSpec
+from repro.storage.tiered_store import correct_padded_stats, run_distributed
+import jax.numpy as jnp
+
+__all__ = ["Tier1Counters", "ShardReport", "SimReport", "tier1_counters",
+           "report_from_counters", "simulate"]
+
+
+class Tier1Counters(NamedTuple):
+    """Per-shard int64 counter arrays measured by the tier-1 engine."""
+
+    requests: np.ndarray
+    reads: np.ndarray
+    writes: np.ndarray
+    hits: np.ndarray
+    misses: np.ndarray
+    prefetch_hits: np.ndarray
+    tier2_reads: np.ndarray
+    tier2_writes: np.ndarray
+    evictions: np.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardReport:
+    """One tier-1 shard: measured counters + its queuing-network solution."""
+
+    shard: int
+    requests: int
+    reads: int
+    writes: int
+    hits: int
+    misses: int
+    prefetch_hits: int
+    tier2_reads: int
+    tier2_writes: int
+    evictions: int
+    p12: float           # miss fraction used by the queue model
+    lam_eff: float       # effective arrival rate at the k-server queue
+    rho1: float          # tier-1 offered load (a = lam_eff/mu1)
+    rho2: float          # tier-2 utilization
+    w1: float            # tier-1 residence time (s)
+    w2: float            # tier-2 residence time (s)
+    response_s: float    # expected response: w1 + p12 * w2
+    equilibrium: bool
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimReport:
+    """Aggregate + per-shard results for one :class:`SimSpec` scenario."""
+
+    spec: SimSpec
+    rates: ResolvedRates
+    shards: tuple
+    # aggregate counters
+    requests: int
+    hits: int
+    misses: int
+    prefetch_hits: int
+    tier2_reads: int
+    tier2_writes: int
+    evictions: int
+    miss_rate: float        # measured: misses / requests
+    p12: float              # miss fraction used by the queue model
+    # aggregate queuing network (pooled p12, per-process λ)
+    lam_eff: float
+    rho1: float
+    rho2: float
+    w1: float
+    w2: float
+    response_s: float       # expected response time: w1 + p12 * w2
+    mu_system: float        # eq. 5 composed service rate
+    rho_system: float
+    equilibrium: bool
+    throughput_rps: float   # equilibrium throughput across all shards
+    # minimum-time model (eqs. 1-4)
+    min_time: ServiceTimes
+    t_total_s: float        # eq. 4: max over shards
+    min_time_throughput_rps: float  # total requests / t_total
+
+    def to_dict(self) -> dict:
+        d = {
+            f.name: getattr(self, f.name)
+            for f in dataclasses.fields(self)
+            if f.name not in ("spec", "rates", "shards", "min_time")
+        }
+        d["rates"] = dataclasses.asdict(self.rates)
+        d["spec"] = {
+            "traffic": dataclasses.asdict(self.spec.traffic),
+            "store": dataclasses.asdict(self.spec.store),
+            "n_shards": self.spec.n_shards,
+            "mapping": self.spec.mapping,
+            "lam": self.spec.lam,
+            "k_servers": self.spec.k_servers,
+            "flow": self.spec.flow,
+            "p12_override": self.spec.p12_override,
+        }
+        d["min_time"] = {
+            "t_hit": [float(v) for v in np.atleast_1d(self.min_time.t_hit)],
+            "t_miss": [float(v) for v in np.atleast_1d(self.min_time.t_miss)],
+            "t_proc": [float(v) for v in np.atleast_1d(self.min_time.t_proc)],
+            "t_total": float(self.min_time.t_total),
+        }
+        d["shards"] = [s.to_dict() for s in self.shards]
+        return d
+
+
+def sim_n_pages(spec: SimSpec, pages: np.ndarray) -> int:
+    """Page-space size for the §III mapping: the declared traffic page
+    space, widened if the stream outgrew it (IRM page ids are unbounded —
+    expired pages are replaced by fresh ids)."""
+    return max(spec.traffic.n_pages, int(pages.max()) + 1)
+
+
+def tier1_counters(spec: SimSpec, trace=None) -> Tier1Counters:
+    """Run the workload through the distributed tier-1 cache
+    (:func:`repro.storage.tiered_store.run_distributed`) and return exact
+    per-shard counters. ``trace`` overrides the generated stream with a
+    user-provided ``(pages, is_write)`` pair (mapped over its own observed
+    page space)."""
+    if trace is not None:
+        pages, is_write = np.asarray(trace[0]), np.asarray(trace[1], bool)
+        n_pages = int(pages.max()) + 1
+    else:
+        pages, is_write = make_stream(spec.traffic)
+        n_pages = sim_n_pages(spec, pages)
+    stats, counts = run_distributed(
+        spec.store, pages, is_write,
+        n_shards=spec.n_shards, mapping=spec.mapping, n_pages=n_pages,
+    )
+    owner = np.asarray(
+        page_to_shard(jnp.asarray(pages), spec.n_shards, n_pages, spec.mapping)
+    )
+    writes = np.bincount(owner[is_write], minlength=spec.n_shards)
+    return _assemble_counters(stats, counts, writes)
+
+
+def _assemble_counters(corrected_stats, counts, writes) -> Tier1Counters:
+    """Build :class:`Tier1Counters` from padding-corrected StreamStats."""
+    counts = np.asarray(counts, np.int64)
+    s = corrected_stats
+    return Tier1Counters(
+        requests=counts,
+        reads=counts - np.asarray(writes, np.int64),
+        writes=np.asarray(writes, np.int64),
+        hits=np.asarray(s.hits, np.int64),
+        misses=np.asarray(s.misses, np.int64),
+        prefetch_hits=np.asarray(s.prefetch_hits, np.int64),
+        tier2_reads=np.asarray(s.tier2_reads, np.int64),
+        tier2_writes=np.asarray(s.tier2_writes, np.int64),
+        evictions=np.asarray(s.evictions, np.int64),
+    )
+
+
+def counters_from_stats(stats, counts, writes, *, cap: int) -> Tier1Counters:
+    """Assemble :class:`Tier1Counters` from *padded* per-shard StreamStats
+    (the sweep engine's batched path), delegating the padding/phantom-miss
+    correction to :func:`repro.storage.tiered_store.correct_padded_stats`."""
+    return _assemble_counters(
+        correct_padded_stats(stats, counts, cap), counts, writes
+    )
+
+
+def _response(w1: float, w2: float, p12: float) -> float:
+    """Expected response time w1 + p12*w2, avoiding inf*0 -> nan when the
+    tier-1 queue saturates while p12 = 0."""
+    return float(w1 + (p12 * w2 if p12 > 0.0 else 0.0))
+
+
+def _queue_summary(spec: SimSpec, rates: ResolvedRates, p12: float):
+    model = TwoTierModel(
+        lam=spec.lam,
+        mu1=rates.mu1,
+        mu2=rates.mu2,
+        p12=p12,
+        k=spec.k_servers,
+        flow=spec.flow,  # type: ignore[arg-type]
+    )
+    rep = model.analyze()
+    s = rep.summary()
+    w1 = s["W1"] + 1.0 / rates.mu1          # waiting + service at tier 1
+    w2 = s["W2"] + 1.0 / rates.mu2          # waiting + service at tier 2
+    if not rep.equilibrium:
+        w1 = w2 = float("inf")
+    return rep, s, w1, w2
+
+
+def report_from_counters(spec: SimSpec, ctr: Tier1Counters) -> SimReport:
+    """Solve the queuing network for measured counters (no traffic rerun)."""
+    rates = spec.rates.resolve()
+
+    shard_reports = []
+    for i in range(spec.n_shards):
+        req = int(ctr.requests[i])
+        p12 = (
+            spec.p12_override
+            if spec.p12_override is not None
+            else (int(ctr.misses[i]) / req if req else 0.0)
+        )
+        rep, s, w1, w2 = _queue_summary(spec, rates, p12)
+        shard_reports.append(ShardReport(
+            shard=i,
+            requests=req,
+            reads=int(ctr.reads[i]),
+            writes=int(ctr.writes[i]),
+            hits=int(ctr.hits[i]),
+            misses=int(ctr.misses[i]),
+            prefetch_hits=int(ctr.prefetch_hits[i]),
+            tier2_reads=int(ctr.tier2_reads[i]),
+            tier2_writes=int(ctr.tier2_writes[i]),
+            evictions=int(ctr.evictions[i]),
+            p12=float(p12),
+            lam_eff=float(s["lam_eff"]),
+            rho1=float(s["rho1"]),
+            rho2=float(s["rho2"]),
+            w1=float(w1),
+            w2=float(w2),
+            response_s=_response(w1, w2, p12),
+            equilibrium=bool(rep.equilibrium),
+        ))
+
+    total_req = int(ctr.requests.sum())
+    total_miss = int(ctr.misses.sum())
+    miss_rate = total_miss / total_req if total_req else 0.0
+    p12 = spec.p12_override if spec.p12_override is not None else miss_rate
+    rep, s, w1, w2 = _queue_summary(spec, rates, p12)
+
+    # Minimum-time model (eqs. 1-4) over the per-shard counters: eq. 1 at
+    # the read/write device rates, eq. 2 at the miss rate, eq. 4 = max.
+    mt = service_time_model(
+        ctr.reads, ctr.writes, ctr.misses,
+        rates.mu1_read, rates.mu1_write, rates.mu2,
+    )
+    t_total = float(mt.t_total)
+
+    equilibrium = bool(rep.equilibrium) and all(
+        sr.equilibrium for sr in shard_reports
+    )
+    return SimReport(
+        spec=spec,
+        rates=rates,
+        shards=tuple(shard_reports),
+        requests=total_req,
+        hits=int(ctr.hits.sum()),
+        misses=total_miss,
+        prefetch_hits=int(ctr.prefetch_hits.sum()),
+        tier2_reads=int(ctr.tier2_reads.sum()),
+        tier2_writes=int(ctr.tier2_writes.sum()),
+        evictions=int(ctr.evictions.sum()),
+        miss_rate=float(miss_rate),
+        p12=float(p12),
+        lam_eff=float(s["lam_eff"]),
+        rho1=float(s["rho1"]),
+        rho2=float(s["rho2"]),
+        w1=float(w1),
+        w2=float(w2),
+        response_s=_response(w1, w2, p12),
+        mu_system=float(s["mu_system"]),
+        rho_system=float(s["rho_system"]),
+        equilibrium=equilibrium,
+        throughput_rps=float(spec.lam * spec.n_shards) if equilibrium
+        else float(s["mu_system"]) * spec.n_shards,
+        min_time=mt,
+        t_total_s=t_total,
+        min_time_throughput_rps=total_req / t_total if t_total > 0 else 0.0,
+    )
+
+
+def simulate(spec: SimSpec, trace=None) -> SimReport:
+    """The end-to-end model: workload -> distributed tier 1 -> queuing."""
+    return report_from_counters(spec, tier1_counters(spec, trace))

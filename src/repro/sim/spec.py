@@ -1,0 +1,142 @@
+"""Declarative specs for the end-to-end two-tier simulator.
+
+A :class:`SimSpec` names everything the paper's end-to-end model needs in
+one object: the workload (:class:`repro.core.traffic.TrafficSpec`), the
+distributed tier-1 cache (:class:`repro.storage.tiered_store.StoreConfig`
+plus shard count / mapping policy), and the queuing-network parameters
+(§V, Fig. 5). :class:`RateSpec` decides where the service rates μ1/μ2 come
+from:
+
+- ``source="devices"``: fitted behavioral device models (§V-A/B) via
+  :class:`repro.storage.tier2.Tier1Sim` / ``Tier2Sim`` — the paper's
+  "behavioral models feed the queuing network" composition;
+- ``source="paper"``: the §V worked-example constants (μ1=1000, μ2=33);
+- explicit ``mu1``/``mu2`` overrides win over either source.
+
+Specs are frozen dataclasses so they hash/compare — the sweep engine uses
+equality of sub-specs to dedupe expensive cache simulations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.traffic import TrafficSpec
+from repro.storage.tier2 import Tier1Sim, Tier2Sim
+from repro.storage.tiered_store import StoreConfig
+
+__all__ = ["RateSpec", "ResolvedRates", "SimSpec", "PAPER_MU1", "PAPER_MU2"]
+
+# §V worked example constants: "μ1 = 1000 requests/sec, μ2 = 33 stripes/sec".
+PAPER_MU1 = 1000.0
+PAPER_MU2 = 33.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedRates:
+    """Concrete service rates handed to the queuing network (req/s)."""
+
+    mu1: float        # tier-1 service rate used by the queue model
+    mu2: float        # tier-2 (miss) service rate
+    mu1_read: float   # read/write split for the minimum-time model (eqs 1-4)
+    mu1_write: float
+
+
+@dataclasses.dataclass(frozen=True)
+class RateSpec:
+    """Where μ1/μ2 come from. Explicit values override the chosen source."""
+
+    source: str = "devices"  # devices | paper
+    mu1: Optional[float] = None
+    mu2: Optional[float] = None
+    mu1_read: Optional[float] = None
+    mu1_write: Optional[float] = None
+    # Device-model operating points (used when source="devices").
+    tier1: Tier1Sim = Tier1Sim()
+    tier2: Tier2Sim = Tier2Sim()
+    n_requests_op: float = 1e5   # NVMe operating point (x4) for μ1
+    n_stripes_op: float = 1024.0  # HDD operating point for μ2
+
+    def resolve(self) -> ResolvedRates:
+        if self.source == "paper":
+            mu1_r = mu1_w = PAPER_MU1
+            mu2 = PAPER_MU2
+        elif self.source == "devices":
+            mu1_r = self.tier1.mu1(read=True, n_requests=self.n_requests_op)
+            mu1_w = self.tier1.mu1(read=False, n_requests=self.n_requests_op)
+            mu2 = self.tier2.mu2(read=True, n_stripes=self.n_stripes_op)
+        else:
+            raise ValueError(f"unknown rate source: {self.source!r}")
+        mu1_r = self.mu1_read if self.mu1_read is not None else mu1_r
+        mu1_w = self.mu1_write if self.mu1_write is not None else mu1_w
+        mu1 = self.mu1 if self.mu1 is not None else mu1_r
+        mu2 = self.mu2 if self.mu2 is not None else mu2
+        if min(mu1, mu2, mu1_r, mu1_w) <= 0:
+            raise ValueError("service rates must be positive")
+        return ResolvedRates(mu1=mu1, mu2=mu2, mu1_read=mu1_r, mu1_write=mu1_w)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimSpec:
+    """One end-to-end scenario: traffic -> distributed tier 1 -> queuing."""
+
+    traffic: TrafficSpec
+    store: StoreConfig = StoreConfig()
+    n_shards: int = 4
+    mapping: str = "block"       # §III page->shard policy
+    lam: float = 100.0           # offered arrival rate per process (req/s)
+    k_servers: int = 1           # RPC service threads per process (M/G/k k)
+    flow: str = "paper"          # paper | conserving (see core.queuing)
+    rates: RateSpec = RateSpec()
+    # When set, the queuing network uses this miss fraction instead of the
+    # measured one (the §V worked example fixes p12 = 0.2).
+    p12_override: Optional[float] = None
+
+    def __post_init__(self):
+        if self.n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        if self.flow not in ("paper", "conserving"):
+            raise ValueError(f"unknown flow convention: {self.flow!r}")
+        if self.p12_override is not None and not 0.0 <= self.p12_override <= 1.0:
+            raise ValueError("p12_override must be in [0, 1]")
+
+    # -- sweep support -------------------------------------------------------
+    def replace(self, **updates) -> "SimSpec":
+        """dataclasses.replace with dotted-path support:
+        ``spec.replace(**{"store.n_lines": 128, "traffic.kind": "irm"})``.
+        """
+        direct: dict = {}
+        nested: dict[str, dict] = {}
+        for key, val in updates.items():
+            if "." in key:
+                head, rest = key.split(".", 1)
+                nested.setdefault(head, {})[rest] = val
+            else:
+                direct[key] = val
+        spec = dataclasses.replace(self, **direct) if direct else self
+        for head, sub in nested.items():
+            child = getattr(spec, head)
+            new_child = (
+                child.replace(**sub)
+                if isinstance(child, SimSpec)
+                else _replace_nested(child, sub)
+            )
+            spec = dataclasses.replace(spec, **{head: new_child})
+        return spec
+
+    def cache_signature(self) -> tuple:
+        """Everything the tier-1 counter simulation depends on. Sweep points
+        sharing a signature reuse one cache run (queuing params are free)."""
+        return (self.traffic, self.store, self.n_shards, self.mapping)
+
+
+def _replace_nested(obj, updates: dict):
+    direct = {k: v for k, v in updates.items() if "." not in k}
+    out = dataclasses.replace(obj, **direct)
+    for key, val in updates.items():
+        if "." in key:
+            head, rest = key.split(".", 1)
+            out = dataclasses.replace(
+                out, **{head: _replace_nested(getattr(out, head), {rest: val})}
+            )
+    return out

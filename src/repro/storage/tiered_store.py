@@ -35,7 +35,15 @@ from repro.core import prefetch as pfm
 from repro.core.mapping import page_to_shard
 from repro.storage.cache_state import CacheState, init_cache
 
-__all__ = ["StoreConfig", "StoreState", "StreamStats", "run_stream", "run_distributed"]
+__all__ = [
+    "StoreConfig",
+    "StoreState",
+    "StreamStats",
+    "run_stream",
+    "run_distributed",
+    "partition_streams",
+    "correct_padded_stats",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -236,6 +244,65 @@ def run_stream(
 run_stream_jit = jax.jit(run_stream, static_argnums=0, static_argnames=("seed",))
 
 
+def partition_streams(
+    pages: np.ndarray,
+    is_write: np.ndarray,
+    *,
+    n_shards: int,
+    mapping: str = "block",
+    n_pages: Optional[int] = None,
+    cap: Optional[int] = None,
+):
+    """Partition a request stream into per-shard substreams (§III mapping).
+
+    Each shard's substream is padded to ``cap`` (default: the max shard load)
+    with repeats of its own last page — pure hits, so every counter except
+    ``requests``/``hits`` is unaffected and those two are correctable from
+    the pad length. Returns ``(sh_pages [S, cap], sh_writes [S, cap],
+    counts [S], owner [n])``.
+    """
+    pages = np.asarray(pages)
+    is_write = np.asarray(is_write, bool)
+    n_pages = int(n_pages if n_pages is not None else (pages.max() + 1))
+    owner = np.asarray(
+        page_to_shard(jnp.asarray(pages), n_shards, n_pages, mapping)
+    )
+    counts = np.bincount(owner, minlength=n_shards)
+    cap = int(cap if cap is not None else max(int(counts.max()), 1))
+    if cap < counts.max():
+        raise ValueError(f"cap={cap} < max shard load {int(counts.max())}")
+    sh_pages = np.zeros((n_shards, cap), np.int32)
+    sh_writes = np.zeros((n_shards, cap), bool)
+    for s in range(n_shards):
+        sel = owner == s
+        k = int(sel.sum())
+        if k:
+            sh_pages[s, :k] = pages[sel]
+            sh_writes[s, :k] = is_write[sel]
+            sh_pages[s, k:] = pages[sel][-1]
+    return sh_pages, sh_writes, counts, owner
+
+
+def correct_padded_stats(stats: StreamStats, counts, cap: int) -> StreamStats:
+    """Undo padding artifacts in per-shard stats from padded substreams
+    (see :func:`partition_streams`): padded requests are pure hits on each
+    shard's last page (subtracted from ``hits``), and a shard with no real
+    requests ran a pure-padding stream whose first access is a phantom
+    miss (all its counters are zeroed)."""
+    pad = jnp.asarray(cap - np.asarray(counts), jnp.int32)
+    nonempty = jnp.asarray(np.asarray(counts) > 0)
+    zero = jnp.zeros((), jnp.int32)
+    return stats._replace(
+        requests=jnp.asarray(counts, jnp.int32),
+        hits=jnp.maximum(stats.hits - pad, 0),
+        misses=jnp.where(nonempty, stats.misses, zero),
+        prefetch_hits=jnp.where(nonempty, stats.prefetch_hits, zero),
+        tier2_reads=jnp.where(nonempty, stats.tier2_reads, zero),
+        tier2_writes=jnp.where(nonempty, stats.tier2_writes, zero),
+        evictions=jnp.where(nonempty, stats.evictions, zero),
+    )
+
+
 def run_distributed(
     cfg: StoreConfig,
     pages: np.ndarray,
@@ -254,37 +321,10 @@ def run_distributed(
     padded streams, so counters are exact but ``requests`` reflects real
     (unpadded) request counts.
     """
-    n_pages = int(n_pages if n_pages is not None else (pages.max() + 1))
-    owner = np.asarray(
-        page_to_shard(jnp.asarray(pages), n_shards, n_pages, mapping)
+    sh_pages, sh_writes, counts, _ = partition_streams(
+        pages, is_write, n_shards=n_shards, mapping=mapping, n_pages=n_pages
     )
-    counts = np.bincount(owner, minlength=n_shards)
-    cap = int(counts.max()) if counts.size else 0
-    # Pad each shard's substream with repeats of its own last page (a pure
-    # hit, so stats beyond `requests` are unaffected).
-    sh_pages = np.zeros((n_shards, max(cap, 1)), np.int32)
-    sh_writes = np.zeros((n_shards, max(cap, 1)), bool)
-    sh_mask = np.zeros((n_shards, max(cap, 1)), bool)
-    for s in range(n_shards):
-        sel = owner == s
-        k = int(sel.sum())
-        if k:
-            sh_pages[s, :k] = pages[sel]
-            sh_writes[s, :k] = is_write[sel]
-            sh_pages[s, k:] = pages[sel][-1]
-            sh_mask[s, :k] = True
-
-    def one(p, w, s):
-        return run_stream(cfg, p, w, seed=0)
-
-    stats = jax.vmap(lambda p, w: run_stream(cfg, p, w))(
+    stats = jax.vmap(lambda p, w: run_stream(cfg, p, w, seed=seed))(
         jnp.asarray(sh_pages), jnp.asarray(sh_writes)
     )
-    # Correct the hit/request counts for padding (padded reqs are all hits on
-    # the final page — subtract them).
-    pad = jnp.asarray(max(cap, 1) - counts, jnp.int32)
-    stats = stats._replace(
-        requests=jnp.asarray(counts, jnp.int32),
-        hits=jnp.maximum(stats.hits - pad, 0),
-    )
-    return stats, counts
+    return correct_padded_stats(stats, counts, sh_pages.shape[1]), counts

@@ -73,9 +73,26 @@ def make_loss_and_grads(cfg: ModelConfig, ax: Axes, ms: pm.MeshSizes, hyper: Tra
     accumulation when hyper.accum_steps > 1."""
     gs_tree = pm.grad_sync(cfg, ms)
 
+    def promote(params):
+        """Replicated leaves consumed shard-locally need their partial grads
+        psum'ed (implicit on vma jax, pvary_entry shim on old jax)."""
+        from repro.distributed.axes import pvary_entry
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_s = treedef.flatten_up_to(gs_tree)
+        out = []
+        for p, s in zip(flat_p, flat_s):
+            names = []
+            if s["data"] and ax.data is not None:
+                names.append(ax.data)
+            if s["model"] and ax.model is not None:
+                names.append(ax.model)
+            out.append(pvary_entry(p, names))
+        return jax.tree.unflatten(treedef, out)
+
     def loss_fn(params, batch):
         loss, metrics = fwd_train(
-            params, batch, cfg, ax, ms=ms, aux_weight=hyper.aux_weight
+            promote(params), batch, cfg, ax, ms=ms, aux_weight=hyper.aux_weight
         )
         return loss, metrics
 

@@ -2,19 +2,21 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
+
+try:  # hypothesis fuzz tests are optional (requirements-dev.txt)
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import online_learning as ol
 from repro.storage.cache_state import init_cache
 
 
-@given(
-    mispred=st.lists(st.integers(0, 20), min_size=3, max_size=3),
-    misses=st.integers(1, 64),
-)
-@settings(max_examples=50, deadline=None)
-def test_weight_adjust_properties(mispred, misses):
+def _check_weight_adjust(mispred, misses):
     cfg = ol.OLConfig()
     s = ol.init_ol(cfg)
     s = s._replace(
@@ -29,6 +31,22 @@ def test_weight_adjust_properties(mispred, misses):
     # epoch state cleared
     assert int(out.epoch_misses[0]) == 0
     assert (np.asarray(out.pred) == -1).all()
+
+
+@pytest.mark.parametrize("mispred", [[0, 0, 0], [5, 1, 0], [20, 20, 20]])
+def test_weight_adjust_properties(mispred):
+    _check_weight_adjust(mispred, misses=16)
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(
+        mispred=st.lists(st.integers(0, 20), min_size=3, max_size=3),
+        misses=st.integers(1, 64),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_weight_adjust_properties_fuzz(mispred, misses):
+        _check_weight_adjust(mispred, misses)
 
 
 def test_penalized_expert_loses_weight():
@@ -56,9 +74,7 @@ def test_below_threshold_ignored():
     np.testing.assert_allclose(w, np.ones(3) / 3, atol=1e-6)
 
 
-@given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 32))
-@settings(max_examples=30, deadline=None)
-def test_victim_proposals_valid(seed, n):
+def _check_victim_proposals(seed, n):
     cache = init_cache(n)
     # fill half the lines
     k = max(1, n // 2)
@@ -74,6 +90,19 @@ def test_victim_proposals_valid(seed, n):
     assert (p < k).all()  # only valid lines
     assert p[0] == 0      # LRU = oldest ts
     assert p[1] == 0      # LFU = lowest freq
+
+
+@pytest.mark.parametrize("seed,n", [(0, 2), (3, 8), (11, 32)])
+def test_victim_proposals_valid(seed, n):
+    _check_victim_proposals(seed, n)
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 32))
+    @settings(max_examples=30, deadline=None)
+    def test_victim_proposals_valid_fuzz(seed, n):
+        _check_victim_proposals(seed, n)
 
 
 def test_pinned_lines_never_proposed():

@@ -3,8 +3,14 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:  # hypothesis fuzz tests are optional (requirements-dev.txt)
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.queuing import (
     TwoTierModel, mgk_queue, mm1_queue, mmk_queue, service_time_model,
@@ -55,16 +61,18 @@ def test_mgk_exponential_matches_mmk():
     assert abs(a.lq - b.lq) < 1e-9
 
 
-@given(lam=st.floats(0.1, 50), mu=st.floats(0.1, 50))
-@settings(max_examples=50, deadline=None)
-def test_mm1_littles_law(lam, mu):
-    q = mm1_queue(lam, mu)
-    if q.stable:
-        # Little's law: L = lam * W
-        assert abs(q.l - lam * q.w) < 1e-6 * max(1.0, q.l)
-        assert q.rho < 1.0
-    else:
-        assert lam >= mu
+if HAVE_HYPOTHESIS:
+
+    @given(lam=st.floats(0.1, 50), mu=st.floats(0.1, 50))
+    @settings(max_examples=50, deadline=None)
+    def test_mm1_littles_law(lam, mu):
+        q = mm1_queue(lam, mu)
+        if q.stable:
+            # Little's law: L = lam * W
+            assert abs(q.l - lam * q.w) < 1e-6 * max(1.0, q.l)
+            assert q.rho < 1.0
+        else:
+            assert lam >= mu
 
 
 def test_overload_flagged_unstable():

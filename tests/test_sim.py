@@ -1,0 +1,226 @@
+"""End-to-end simulator (repro.sim): §V golden numbers + sweep behavior."""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.traffic import TrafficSpec
+from repro.sim import (
+    PAPER_MU1,
+    PAPER_MU2,
+    RateSpec,
+    SimSpec,
+    expand_grid,
+    simulate,
+    sweep,
+    tier1_counters,
+    report_from_counters,
+)
+from repro.storage.tiered_store import StoreConfig
+
+WORKED = SimSpec(
+    traffic=TrafficSpec(kind="irm", n_requests=1500, n_pages=512,
+                        write_fraction=0.3, seed=7),
+    store=StoreConfig(n_lines=64, policy="ws"),
+    n_shards=4,
+    lam=100.0,
+    k_servers=1,
+    rates=RateSpec(source="paper"),
+    p12_override=0.2,  # the §V worked example fixes the miss fraction
+)
+
+
+def test_worked_example_paper_flow():
+    """§V: lam=100, mu1=1000, mu2=33, p12=0.2 through the full pipeline."""
+    rep = simulate(WORKED.replace(flow="paper"))
+    assert abs(rep.lam_eff - 86.6) < 1e-9
+    assert abs(rep.rho1 - 0.0866) < 1e-4
+    assert abs(rep.rho2 - 20 / 33) < 1e-9
+    # Eq. 5 composed service rate: 1 / (0.8/1000 + 0.2/33).
+    assert abs(rep.mu_system - 1.0 / (0.8 / PAPER_MU1 + 0.2 / PAPER_MU2)) < 1e-9
+    # Residence times: W = Wq + 1/mu for each queue.
+    lam_miss = 0.2 * 100.0
+    rho2 = lam_miss / PAPER_MU2
+    wq2 = (rho2 * rho2 / (1 - rho2)) / lam_miss
+    assert abs(rep.w2 - (wq2 + 1 / PAPER_MU2)) < 1e-12
+    rho1 = 86.6 / PAPER_MU1
+    wq1 = (rho1 * rho1 / (1 - rho1)) / 86.6
+    assert abs(rep.w1 - (wq1 + 1 / PAPER_MU1)) < 1e-12
+    assert rep.equilibrium
+    # Every shard uses the pinned p12 => identical queue solutions.
+    assert all(abs(s.lam_eff - 86.6) < 1e-9 for s in rep.shards)
+    # "The expected length of the tier 1 queue is almost 0."
+    assert rep.response_s < 0.1
+
+
+def test_worked_example_conserving_flow():
+    rep = simulate(WORKED.replace(flow="conserving"))
+    assert abs(rep.lam_eff - 100.0) < 1e-9
+    assert abs(rep.rho1 - 0.1) < 1e-9
+    assert abs(rep.rho2 - 20 / 33) < 1e-9  # miss queue identical
+    assert rep.equilibrium
+
+
+def test_measured_p12_and_counter_mapping():
+    """Without the override, p12 is the measured miss rate and the counter
+    -> queuing mapping is exact."""
+    spec = WORKED.replace(p12_override=None)
+    ctr = tier1_counters(spec)
+    rep = report_from_counters(spec, ctr)
+    assert rep.requests == spec.traffic.n_requests
+    assert rep.hits + rep.misses == rep.requests
+    assert abs(rep.p12 - rep.misses / rep.requests) < 1e-12
+    # Per-shard read/write split feeds eq. 1.
+    reads = sum(s.reads for s in rep.shards)
+    writes = sum(s.writes for s in rep.shards)
+    assert reads + writes == rep.requests
+    assert writes > 0  # write_fraction=0.3
+    # Eqs. 1-4: T is the max over per-shard service times.
+    t_proc = np.asarray(rep.min_time.t_proc)
+    assert rep.t_total_s == pytest.approx(float(t_proc.max()))
+    assert rep.min_time_throughput_rps == pytest.approx(
+        rep.requests / rep.t_total_s)
+
+
+def test_device_model_rates():
+    """source="devices" wires the fitted NVMe/HDD behavioral models in."""
+    rep = simulate(WORKED.replace(
+        p12_override=None, rates=RateSpec(source="devices")))
+    assert rep.rates.mu1 > 0 and rep.rates.mu2 > 0
+    assert rep.rates.mu1 > rep.rates.mu2  # NVMe tier is faster than HDD tier
+    assert math.isfinite(rep.response_s)
+
+
+def test_report_json_round_trip():
+    rep = simulate(WORKED)
+    d = rep.to_dict()
+    text = json.dumps(d)
+    back = json.loads(text)
+    assert back["lam_eff"] == pytest.approx(86.6)
+    assert len(back["shards"]) == 4
+    assert back["spec"]["flow"] == "paper"
+    assert back["min_time"]["t_total"] == pytest.approx(rep.t_total_s)
+
+
+def test_expand_grid():
+    pts = expand_grid({"a": [1, 2], "b": ["x", "y", "z"]})
+    assert len(pts) == 6
+    assert {"a": 1, "b": "z"} in pts
+    assert expand_grid({}) == [{}]
+
+
+def test_sweep_miss_rate_monotonic_in_cache_size():
+    """Smoke test: on an IRM stream, a bigger tier-1 cache never misses
+    more (single shard, LRU to keep replacement deterministic)."""
+    base = SimSpec(
+        traffic=TrafficSpec(kind="irm", n_requests=1200, n_pages=256, seed=3),
+        store=StoreConfig(n_lines=8, policy="lru"),
+        n_shards=1,
+        lam=10.0,
+        rates=RateSpec(source="paper"),
+    )
+    sizes = [8, 32, 128, 256]
+    res = sweep(base, {"store.n_lines": sizes})
+    rates = [rep.miss_rate for rep in res.reports]
+    assert all(a >= b - 1e-12 for a, b in zip(rates, rates[1:])), rates
+    assert rates[0] > rates[-1]  # the sweep axis actually matters
+
+
+def test_sweep_batched_matches_unbatched():
+    base = SimSpec(
+        traffic=TrafficSpec(kind="irm", n_requests=600, n_pages=128, seed=1),
+        store=StoreConfig(n_lines=16, policy="ws"),
+        n_shards=2,
+        rates=RateSpec(source="paper"),
+    )
+    axes = {"store.policy": ["lru", "ws"], "traffic.kind": ["irm", "markov"]}
+    a = sweep(base, axes, batch=True)
+    b = sweep(base, axes, batch=False)
+    for ra, rb in zip(a.reports, b.reports):
+        assert ra.misses == rb.misses
+        assert ra.hits == rb.hits
+        assert ra.p12 == pytest.approx(rb.p12)
+
+
+def test_sweep_dedupes_cache_runs():
+    """Queuing-only axes (lam, flow) must reuse one tier-1 run."""
+    base = SimSpec(
+        traffic=TrafficSpec(kind="irm", n_requests=400, n_pages=64, seed=1),
+        store=StoreConfig(n_lines=16, policy="lru"),
+        n_shards=2,
+        rates=RateSpec(source="paper"),
+    )
+    res = sweep(base, {"lam": [10.0, 50.0], "flow": ["paper", "conserving"]})
+    assert len(res.reports) == 4
+    sigs = {base.replace(**pt).cache_signature() for pt in res.points}
+    assert len(sigs) == 1  # one cache simulation for all four points
+    assert len({rep.misses for rep in res.reports}) == 1
+    assert len({rep.lam_eff for rep in res.reports}) == 4
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        SimSpec(traffic=WORKED.traffic, flow="bogus")
+    with pytest.raises(ValueError):
+        SimSpec(traffic=WORKED.traffic, p12_override=1.5)
+    with pytest.raises(ValueError):
+        RateSpec(source="nope").resolve()
+    with pytest.raises(ValueError):
+        RateSpec(source="paper", mu2=-1.0).resolve()
+
+
+def test_block_mapping_uses_declared_page_space():
+    """The §III block mapping must partition the *declared* traffic page
+    space, not the data-inferred max page id (regression)."""
+    spec = SimSpec(
+        traffic=TrafficSpec(kind="poisson", n_requests=400, n_pages=1024,
+                            seed=0),
+        store=StoreConfig(n_lines=16, policy="lru"),
+        n_shards=4,
+        mapping="block",
+        rates=RateSpec(source="paper"),
+    )
+    ctr = tier1_counters(spec)
+    # Poisson traffic touches only low page ids; over the declared
+    # 1024-page space, blocks of 256 put every request on shard 0.
+    assert ctr.requests[0] == 400
+    assert ctr.requests[1:].sum() == 0
+
+
+def test_zero_miss_shard_does_not_crash():
+    """p12 = 0 (no misses) must give an empty, stable miss queue, not a
+    division by zero (regression: mm1_queue(lam=0))."""
+    rep = simulate(WORKED.replace(p12_override=0.0))
+    assert rep.equilibrium
+    assert rep.w2 == pytest.approx(1 / PAPER_MU2)  # pure service time
+    # A 1-request workload leaves most shards empty (p12 = 0, stable and
+    # finite); the one loaded shard has p12 = 1, which at lam=100 > mu2=33
+    # correctly reports a saturated (non-equilibrium) miss queue.
+    tiny = simulate(WORKED.replace(
+        p12_override=None, **{"traffic.n_requests": 1}))
+    assert tiny.requests == 1
+    for s in tiny.shards:
+        if s.requests == 0:
+            assert s.equilibrium and math.isfinite(s.response_s)
+        else:
+            assert s.p12 == 1.0 and not s.equilibrium
+    assert not tiny.equilibrium
+
+
+def test_saturated_tier1_with_zero_p12_is_inf_not_nan():
+    """inf + 0*inf must not poison response_s (regression)."""
+    rep = simulate(WORKED.replace(lam=2000.0, p12_override=0.0))
+    assert not rep.equilibrium
+    assert math.isinf(rep.response_s)
+    assert all(math.isinf(s.response_s) for s in rep.shards)
+
+
+def test_user_trace_input():
+    """simulate() accepts a user-provided trace instead of TrafficSpec."""
+    pages = np.tile(np.arange(8, dtype=np.int32), 50)
+    writes = np.zeros_like(pages, dtype=bool)
+    rep = simulate(WORKED.replace(p12_override=None, n_shards=2),
+                   trace=(pages, writes))
+    assert rep.requests == 400
+    assert rep.misses == 8  # cold misses only: working set fits

@@ -1,0 +1,124 @@
+"""Property-based invariants for the tier-1 store across policies and
+traffic generators (ISSUE 2 satellite).
+
+The parametrized grid below always runs (no extra deps); when hypothesis
+is installed an additional fuzz pass explores random generator settings.
+"""
+import numpy as np
+import pytest
+
+from repro.core.traffic import (
+    irm_stream,
+    markov_stream,
+    poisson_stream,
+    strided_stream,
+)
+from repro.storage.tiered_store import (
+    StoreConfig,
+    partition_streams,
+    run_distributed,
+    run_stream,
+)
+
+POLICIES = ("ws", "lru", "lfu", "random")
+GENERATORS = {
+    "poisson": poisson_stream,
+    "irm": irm_stream,
+    "strided": strided_stream,
+    "markov": markov_stream,
+}
+N, N_PAGES = 400, 128
+
+
+def check_stream_invariants(st, n_requests: int):
+    hits, misses = int(st.hits), int(st.misses)
+    assert hits >= 0 and misses >= 0
+    assert hits + misses == n_requests
+    assert int(st.tier2_reads) >= misses - int(st.prefetch_hits)
+    assert int(st.evictions) <= misses
+    assert int(st.tier2_writes) <= int(st.evictions)
+    assert int(st.prefetch_hits) <= misses
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("kind", sorted(GENERATORS))
+def test_single_shard_invariants(policy, kind):
+    pages, writes = GENERATORS[kind](N, N_PAGES, seed=5, write_fraction=0.25)
+    cfg = StoreConfig(n_lines=32, policy=policy, prefetch=(kind == "strided"))
+    st = run_stream(cfg, pages, writes)
+    check_stream_invariants(st, N)
+    if kind == "strided" and policy == "lru":
+        # The stream identifier must convert some misses into buffer hits.
+        assert int(st.prefetch_hits) > 0
+
+
+@pytest.mark.parametrize("policy", ("ws", "lru"))
+@pytest.mark.parametrize("kind", sorted(GENERATORS))
+@pytest.mark.parametrize("mapping", ("block", "random"))
+def test_distributed_invariants(policy, kind, mapping):
+    """Padding correction never yields negative/impossible per-shard stats."""
+    pages, writes = GENERATORS[kind](N, N_PAGES, seed=9, write_fraction=0.25)
+    n_shards = 4
+    stats, counts = run_distributed(
+        StoreConfig(n_lines=16, policy=policy),
+        pages, writes, n_shards=n_shards, mapping=mapping, n_pages=N_PAGES,
+    )
+    hits = np.asarray(stats.hits)
+    misses = np.asarray(stats.misses)
+    assert int(counts.sum()) == N
+    assert (hits >= 0).all()
+    assert (misses >= 0).all()
+    # Padded requests are pure hits: after correction the per-shard
+    # counters balance exactly against the real request counts.
+    np.testing.assert_array_equal(hits + misses, counts)
+    assert (np.asarray(stats.evictions) <= misses).all()
+    assert (np.asarray(stats.tier2_writes) <= np.asarray(stats.evictions)).all()
+    assert (np.asarray(stats.tier2_reads)
+            >= misses - np.asarray(stats.prefetch_hits)).all()
+
+
+def test_partition_streams_exact():
+    pages, writes = irm_stream(N, N_PAGES, seed=2, write_fraction=0.5)
+    sh_pages, sh_writes, counts, owner = partition_streams(
+        pages, writes, n_shards=4, mapping="block", n_pages=N_PAGES
+    )
+    assert sh_pages.shape == sh_writes.shape == (4, counts.max())
+    assert counts.sum() == N
+    # Every request lands on its owner shard, order preserved.
+    for s in range(4):
+        sel = owner == s
+        np.testing.assert_array_equal(sh_pages[s, : counts[s]], pages[sel])
+        np.testing.assert_array_equal(sh_writes[s, : counts[s]], writes[sel])
+        # Padding repeats the last page (a guaranteed hit).
+        if counts[s] and counts[s] < sh_pages.shape[1]:
+            assert (sh_pages[s, counts[s]:] == pages[sel][-1]).all()
+
+
+def test_partition_streams_cap_too_small():
+    pages, writes = irm_stream(N, N_PAGES, seed=2)
+    with pytest.raises(ValueError):
+        partition_streams(pages, writes, n_shards=2, n_pages=N_PAGES, cap=1)
+
+
+# --- optional hypothesis fuzz over generator/engine settings ---------------
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @given(
+        policy=st.sampled_from(POLICIES),
+        kind=st.sampled_from(sorted(GENERATORS)),
+        n_lines=st.sampled_from([8, 32, 64]),
+        write_fraction=st.floats(0.0, 1.0),
+        seed=st.integers(0, 100),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_invariants_fuzz(policy, kind, n_lines, write_fraction, seed):
+        pages, writes = GENERATORS[kind](
+            200, 64, seed=seed, write_fraction=write_fraction
+        )
+        cfg = StoreConfig(n_lines=n_lines, policy=policy, prefetch=True)
+        check_stream_invariants(run_stream(cfg, pages, writes), 200)
+
+except ImportError:  # covered by the parametrized grid above
+    pass
