@@ -1,0 +1,313 @@
+"""Megabatch sweep benchmark: compile count, points/sec, §V gate.
+
+  PYTHONPATH=src python benchmarks/bench_sweep.py [--smoke]
+
+Measures the one-compile sweep engine (traced hyperparameters + bucketed
+padding + device sharding, see ``repro.sim.sweep``) against a faithful
+reimplementation of the pre-PR batching strategy, and writes a
+``BENCH_sweep.json`` artifact at the repo root so later PRs have a perf
+trajectory.
+
+Gates:
+
+- **compile gate** — a sweep whose axes cover only traced knobs
+  (``store.alpha``/``beta``/``threshold``/``policy``) compiles the engine at
+  most :data:`COMPILE_LIMIT` times (the pre-PR engine compiled once per
+  policy x hyperparameter combination).
+- **§V worked example** — λ_eff through the new batching path matches
+  ``simulate()`` bit-exactly and stays within 1% of the published 86.6.
+- **speedup** (full mode only) — ≥ :data:`MIN_SPEEDUP`x points/sec over the
+  pre-PR reference on a ≥200-point grid spanning policy, hyperparameter,
+  cache-size and traffic axes.
+
+``--smoke`` runs reduced grids for CI (compile + bit-exactness gates only).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+# Shard sweep points across forced host devices (must precede jax import).
+_FLAG = "--xla_force_host_platform_device_count"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    _n_dev = max(1, min(os.cpu_count() or 1, 8))
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + f" {_FLAG}={_n_dev}"
+    ).strip()
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.traffic import TrafficSpec, make_stream  # noqa: E402
+from repro.sim import (  # noqa: E402
+    RateSpec,
+    SimSpec,
+    report_from_counters,
+    simulate,
+    sweep,
+)
+from repro.sim.engine import counters_from_stats, sim_n_pages  # noqa: E402
+from repro.sim.sweep import (  # noqa: E402
+    engine_compile_count,
+    reset_engine_compile_count,
+)
+from repro.storage.tiered_store import (  # noqa: E402
+    StoreConfig,
+    partition_streams,
+    run_stream,
+)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARTIFACT = os.path.join(ROOT, "BENCH_sweep.json")
+PUBLISHED_LAM_EFF = 86.6  # §V worked example
+COMPILE_LIMIT = 2         # traced-only grid must stay within this
+MIN_SPEEDUP = 3.0         # full-mode points/sec gate vs the pre-PR path
+
+BASE = SimSpec(
+    traffic=TrafficSpec(kind="irm", n_requests=1200, n_pages=256,
+                        write_fraction=0.2, seed=3),
+    store=StoreConfig(n_lines=64, policy="ws"),
+    n_shards=4,
+    lam=50.0,
+    rates=RateSpec(source="paper"),
+)
+
+
+# ---------------------------------------------------------------------------
+# Pre-PR reference path. Faithful reimplementation of the old sweep batching:
+# one group per *full* (StoreConfig, n_shards, mapping) — so every policy or
+# hyperparameter value splits the jit cache — padded to the group-wide max
+# shard load, run on a single device by an unjitted doubly-vmapped engine.
+# ---------------------------------------------------------------------------
+
+
+def _legacy_run_group(specs):
+    store, n_shards = specs[0].store, specs[0].n_shards
+    partitioned = []
+    for spec in specs:
+        pages, is_write = make_stream(spec.traffic)
+        sh_p, sh_w, counts, owner = partition_streams(
+            pages, is_write, n_shards=n_shards, mapping=spec.mapping,
+            n_pages=sim_n_pages(spec, pages),
+        )
+        partitioned.append((sh_p, sh_w, counts, owner, is_write))
+
+    cap = max(p[0].shape[1] for p in partitioned)
+    sh_pages = np.zeros((len(specs), n_shards, cap), np.int32)
+    sh_writes = np.zeros((len(specs), n_shards, cap), bool)
+    for i, (sh_p, sh_w, _, _, _) in enumerate(partitioned):
+        w = sh_p.shape[1]
+        sh_pages[i, :, :w] = sh_p
+        sh_pages[i, :, w:] = sh_p[:, -1:]
+        sh_writes[i, :, :w] = sh_w
+
+    run = jax.vmap(jax.vmap(lambda p, w: run_stream(store, p, w)))
+    stacked = run(jnp.asarray(sh_pages), jnp.asarray(sh_writes))
+    stacked = jax.tree.map(np.asarray, stacked)
+
+    out = []
+    for i, (_, _, counts, owner, is_write) in enumerate(partitioned):
+        stats_i = jax.tree.map(lambda a: a[i], stacked)
+        writes = np.bincount(owner[is_write], minlength=n_shards)
+        out.append(counters_from_stats(stats_i, counts, writes, cap=cap))
+    return out
+
+
+def legacy_sweep(base: SimSpec, points: list[dict]) -> list:
+    """The pre-PR sweep loop: dedup by cache signature, then one engine
+    (re)build per full-config group, groups sequential."""
+    specs = [base.replace(**pt) for pt in points]
+    sig_of = [spec.cache_signature() for spec in specs]
+    unique = {}
+    for spec, sig in zip(specs, sig_of):
+        unique.setdefault(sig, spec)
+    groups = {}
+    for sig, spec in unique.items():
+        groups.setdefault((spec.store, spec.n_shards, spec.mapping), []).append(sig)
+    counters = {}
+    for _, sigs in groups.items():
+        for sig, ctr in zip(sigs, _legacy_run_group([unique[s] for s in sigs])):
+            counters[sig] = ctr
+    return [report_from_counters(spec, counters[sig])
+            for spec, sig in zip(specs, sig_of)]
+
+
+# ---------------------------------------------------------------------------
+# Benchmark stages.
+# ---------------------------------------------------------------------------
+
+
+def bench_compile_gate(smoke: bool) -> dict:
+    """Traced-knob-only grid must compile the engine at most COMPILE_LIMIT
+    times (one compile serves every policy x hyperparameter combination)."""
+    axes = {
+        "store.policy": ["lru", "lfu", "ws", "random"],
+        "store.alpha": [0.3, 0.5, 0.7],
+        "store.beta": [0.5, 0.7, 0.9],
+        "store.threshold": [0.1, 0.25],
+    }
+    if smoke:
+        axes = {
+            "store.policy": ["lru", "ws"],
+            "store.alpha": [0.3, 0.7],
+            "store.beta": [0.5, 0.9],
+        }
+    reset_engine_compile_count()
+    t0 = time.perf_counter()
+    res = sweep(BASE, axes)
+    wall = time.perf_counter() - t0
+    compiles = engine_compile_count()
+    return {
+        "axes": {k: list(v) for k, v in axes.items()},
+        "n_points": len(res.points),
+        "wall_s": round(wall, 3),
+        "points_per_sec": round(len(res.points) / wall, 3),
+        "compiles": compiles,
+        "compile_limit": COMPILE_LIMIT,
+        "ok": compiles <= COMPILE_LIMIT,
+    }
+
+
+def bench_reference_grid(smoke: bool) -> dict:
+    """The ≥200-point grid spanning policy, hyperparameter, cache-size and
+    traffic axes; new engine on the full grid, pre-PR reference timed on a
+    subset (it pays a compile per config, so full-grid legacy runs are
+    prohibitively slow — exactly the point) and scaled to points/sec."""
+    axes = {
+        "store.policy": ["lru", "lfu", "ws", "random"],
+        "store.alpha": [0.3, 0.5, 0.7],
+        "store.beta": [0.5, 0.7, 0.9],
+        "store.threshold": [0.1, 0.25],
+        "store.n_lines": [32, 64],
+        "traffic.kind": ["irm", "markov"],
+    }
+    if smoke:
+        axes = {
+            "store.policy": ["lru", "ws"],
+            "store.alpha": [0.3, 0.7],
+            "store.n_lines": [32, 64],
+            "traffic.kind": ["irm", "markov"],
+        }
+
+    reset_engine_compile_count()
+    t0 = time.perf_counter()
+    res = sweep(BASE, axes)
+    wall_new = time.perf_counter() - t0
+    pps_new = len(res.points) / wall_new
+
+    # Legacy reference on a stratified subset: one point per
+    # policy x cache-size x traffic combination (hyperparameter values
+    # subsampled), so every structurally distinct engine is represented.
+    strata = ("store.policy", "store.n_lines", "traffic.kind")
+    subset_by_combo = {}
+    for pt in res.points:
+        subset_by_combo.setdefault(tuple(pt[k] for k in strata), pt)
+    subset = list(subset_by_combo.values())
+    t0 = time.perf_counter()
+    legacy_reports = legacy_sweep(BASE, subset)
+    wall_legacy = time.perf_counter() - t0
+    pps_legacy = len(subset) / wall_legacy
+
+    # Cross-check: legacy and megabatch paths agree on the subset's counters.
+    by_point = {tuple(sorted(pt.items())): rep
+                for pt, rep in zip(res.points, res.reports)}
+    mismatches = sum(
+        1
+        for pt, lrep in zip(subset, legacy_reports)
+        if (by_point[tuple(sorted(pt.items()))].misses != lrep.misses
+            or by_point[tuple(sorted(pt.items()))].hits != lrep.hits)
+    )
+
+    speedup = pps_new / pps_legacy
+    return {
+        "axes": {k: list(v) for k, v in axes.items()},
+        "n_points": len(res.points),
+        "compiles": engine_compile_count(),
+        "wall_s": round(wall_new, 3),
+        "points_per_sec": round(pps_new, 3),
+        "legacy_n_points": len(subset),
+        "legacy_wall_s": round(wall_legacy, 3),
+        "legacy_points_per_sec": round(pps_legacy, 3),
+        "legacy_counter_mismatches": mismatches,
+        "speedup": round(speedup, 2),
+        "min_speedup": MIN_SPEEDUP,
+        "ok": mismatches == 0 and (smoke or speedup >= MIN_SPEEDUP),
+    }
+
+
+def bench_worked_example() -> dict:
+    """§V worked example (λ_eff ≈ 86.6) through the megabatch path,
+    bit-exact against the unbatched simulate()."""
+    spec = SimSpec(
+        traffic=TrafficSpec(kind="irm", n_requests=1500, n_pages=512,
+                            write_fraction=0.3, seed=7),
+        store=StoreConfig(n_lines=64, policy="ws"),
+        n_shards=4,
+        lam=100.0,
+        k_servers=1,
+        rates=RateSpec(source="paper"),
+        p12_override=0.2,
+    )
+    res = sweep(spec, {"store.alpha": [0.3, 0.5], "store.policy": ["ws", "lru"]})
+    batched = next(
+        rep for pt, rep in zip(res.points, res.reports)
+        if pt == {"store.alpha": 0.5, "store.policy": "ws"}
+    )
+    direct = simulate(spec)
+    rel_err = abs(batched.lam_eff - PUBLISHED_LAM_EFF) / PUBLISHED_LAM_EFF
+    bit_exact = (
+        batched.lam_eff == direct.lam_eff
+        and batched.misses == direct.misses
+        and batched.hits == direct.hits
+        and batched.tier2_reads == direct.tier2_reads
+        and batched.tier2_writes == direct.tier2_writes
+    )
+    return {
+        "lam_eff": batched.lam_eff,
+        "lam_eff_published": PUBLISHED_LAM_EFF,
+        "lam_eff_rel_err": rel_err,
+        "bit_exact_vs_simulate": bit_exact,
+        "ok": bit_exact and rel_err < 0.01,
+    }
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    artifact = {
+        "mode": "smoke" if smoke else "full",
+        "devices": jax.local_device_count(),
+        "compile_gate": bench_compile_gate(smoke),
+        "reference_grid": bench_reference_grid(smoke),
+        "worked_example": bench_worked_example(),
+    }
+    with open(ARTIFACT, "w") as f:
+        json.dump(artifact, f, indent=1)
+        f.write("\n")
+
+    cg, rg, we = (artifact["compile_gate"], artifact["reference_grid"],
+                  artifact["worked_example"])
+    print(f"devices: {artifact['devices']}")
+    print(f"compile gate: {cg['n_points']} traced-only points -> "
+          f"{cg['compiles']} compiles (limit {COMPILE_LIMIT}) ok={cg['ok']}")
+    print(f"reference grid: {rg['n_points']} points in {rg['wall_s']}s "
+          f"({rg['points_per_sec']} pts/s, {rg['compiles']} compiles) vs "
+          f"legacy {rg['legacy_points_per_sec']} pts/s -> "
+          f"speedup {rg['speedup']}x ok={rg['ok']}")
+    print(f"worked example: lam_eff={we['lam_eff']:.1f} "
+          f"(rel_err={we['lam_eff_rel_err']:.2e}) "
+          f"bit_exact={we['bit_exact_vs_simulate']} ok={we['ok']}")
+    print(f"artifact: {ARTIFACT}")
+    failures = [k for k in ("compile_gate", "reference_grid", "worked_example")
+                if not artifact[k]["ok"]]
+    if failures:
+        raise SystemExit(f"bench_sweep gates failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -52,6 +52,12 @@ N_EXPERTS = len(EXPERTS)
 
 
 class OLConfig(NamedTuple):
+    """Online-learning knobs. ``epoch_width`` and ``pred_cap`` are structural
+    (they shape arrays / the scan) and must be concrete; ``alpha``, ``beta``
+    and ``threshold`` are plain scalars that may also be jax tracers, so one
+    compiled engine can serve a whole grid of hyperparameter settings (the
+    sweep engine stacks them on a vmap axis)."""
+
     epoch_width: int = 4      # iterations per epoch (paper §III-A)
     alpha: float = 0.5        # weight-share rate
     beta: float = 0.7         # multiplicative penalty base (< 1)
@@ -107,12 +113,19 @@ def propose_victims(cache, key: jax.Array, pinned=None) -> jnp.ndarray:
     return jnp.stack([lru, lfu, rnd])
 
 
-def choose_expert(ol: OLState, policy_idx: int | None = None) -> jnp.ndarray:
+def choose_expert(ol: OLState, policy_idx=None) -> jnp.ndarray:
     """Algorithm 1: highest-probability expert (or a fixed expert when the
-    store is configured with a single policy for baseline runs)."""
-    if policy_idx is not None:
-        return jnp.asarray(policy_idx, jnp.int32)
-    return jnp.argmax(probabilities(ol.weights)).astype(jnp.int32)
+    store is configured with a single policy for baseline runs).
+
+    ``policy_idx`` may be ``None`` (online learning), a concrete int, or a
+    traced int32 scalar where ``-1`` means online learning — the traced form
+    lets one compiled engine switch policies per sweep point.
+    """
+    learned = jnp.argmax(probabilities(ol.weights)).astype(jnp.int32)
+    if policy_idx is None:
+        return learned
+    idx = jnp.asarray(policy_idx, jnp.int32)
+    return jnp.where(idx >= 0, jnp.clip(idx, 0, N_EXPERTS - 1), learned)
 
 
 def record_predictions(ol: OLState, cfg: OLConfig, victim_pages: jnp.ndarray) -> OLState:
@@ -133,15 +146,17 @@ def note_miss(ol: OLState, page: jnp.ndarray) -> OLState:
 
 
 def weight_adjust(ol: OLState, cfg: OLConfig) -> OLState:
-    """Algorithm 2 epoch-boundary update (see module docstring)."""
-    thresh = cfg.threshold * ol.epoch_misses[0].astype(jnp.float32)
+    """Algorithm 2 epoch-boundary update (see module docstring). ``alpha``,
+    ``beta`` and ``threshold`` may be traced scalars (see :class:`OLConfig`)."""
+    threshold = jnp.asarray(cfg.threshold, jnp.float32)
+    thresh = threshold * ol.epoch_misses[0].astype(jnp.float32)
     losses = jnp.where(
         ol.mispred.astype(jnp.float32) >= thresh, ol.mispred, 0
     ).astype(jnp.float32)
     prev = ol.weights
-    w = prev * jnp.power(jnp.float32(cfg.beta), losses)
+    w = prev * jnp.power(jnp.asarray(cfg.beta, jnp.float32), losses)
     shared = jnp.mean(prev - w)  # total lost weight / n
-    w = w + jnp.float32(cfg.alpha) * shared
+    w = w + jnp.asarray(cfg.alpha, jnp.float32) * shared
     # Guard against total collapse, then renormalize.
     w = jnp.maximum(w, 1e-8)
     w = w / jnp.sum(w)

@@ -1,0 +1,47 @@
+"""Version-agnostic jax SPMD compat shims.
+
+Small, dependency-free home for the cross-version wrappers used by both the
+heavyweight launch layer (:mod:`repro.launch.spmd`) and light consumers like
+the sweep engine (:mod:`repro.sim.sweep`), which must not drag the model /
+training stack into their import graph.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+try:  # jax >= 0.6: top-level export, replication check spelled check_vma
+    from jax import shard_map as _shard_map
+
+    _CHECK_KW = "check_vma"
+except ImportError:  # jax <= 0.4.x: experimental module, kwarg is check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KW = "check_rep"
+
+__all__ = ["shard_map", "device_mesh"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Version-agnostic shard_map: translates ``check_vma`` to the kwarg the
+    installed jax understands. Pre-vma jax's ``check_rep`` inference cannot
+    prove replication through our psum/all_gather patterns (it rejects specs
+    the vma system accepts), so there the check is disabled outright."""
+    check = check_vma if _CHECK_KW == "check_vma" else False
+    return _shard_map(
+        f,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        **{_CHECK_KW: check},
+    )
+
+
+def device_mesh(axis_name: str, devices=None) -> Mesh:
+    """A 1-D mesh over ``devices`` (default: all *local* devices, so callers
+    that pad host-side batches to ``jax.local_device_count()`` agree with the
+    mesh size even under multi-process jax)."""
+    devs = list(jax.local_devices() if devices is None else devices)
+    return Mesh(np.asarray(devs), (axis_name,))

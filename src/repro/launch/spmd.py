@@ -13,29 +13,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-try:  # jax >= 0.6: top-level export, replication check spelled check_vma
-    from jax import shard_map as _shard_map
-
-    _CHECK_KW = "check_vma"
-except ImportError:  # jax <= 0.4.x: experimental module, kwarg is check_rep
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-    _CHECK_KW = "check_rep"
-
-
-def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
-    """Version-agnostic shard_map: translates ``check_vma`` to the kwarg the
-    installed jax understands. Pre-vma jax's ``check_rep`` inference cannot
-    prove replication through our psum/all_gather patterns (it rejects specs
-    the vma system accepts), so there the check is disabled outright."""
-    check = check_vma if _CHECK_KW == "check_vma" else False
-    return _shard_map(
-        f,
-        mesh=mesh,
-        in_specs=in_specs,
-        out_specs=out_specs,
-        **{_CHECK_KW: check},
-    )
+# The version-agnostic shard_map shim lives in repro.launch.compat so light
+# consumers (the sweep engine) can share it without importing this module's
+# model/training dependency tree; re-exported here for existing callers.
+from repro.launch.compat import shard_map  # noqa: F401
 
 from repro.configs.base import ModelConfig
 from repro.distributed.axes import Axes

@@ -20,11 +20,18 @@ from repro.sim.spec import (  # noqa: F401
     ResolvedRates,
     SimSpec,
 )
-from repro.sim.sweep import SweepResult, expand_grid, sweep  # noqa: F401
+from repro.sim.sweep import (  # noqa: F401
+    SweepResult,
+    engine_compile_count,
+    expand_grid,
+    reset_engine_compile_count,
+    sweep,
+)
 
 __all__ = [
     "SimSpec", "RateSpec", "ResolvedRates", "PAPER_MU1", "PAPER_MU2",
     "SimReport", "ShardReport", "Tier1Counters",
     "simulate", "tier1_counters", "report_from_counters",
     "sweep", "expand_grid", "SweepResult",
+    "engine_compile_count", "reset_engine_compile_count",
 ]

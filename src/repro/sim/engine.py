@@ -225,8 +225,16 @@ def _queue_summary(spec: SimSpec, rates: ResolvedRates, p12: float):
 
 
 def report_from_counters(spec: SimSpec, ctr: Tier1Counters) -> SimReport:
-    """Solve the queuing network for measured counters (no traffic rerun)."""
+    """Solve the queuing network for measured counters (no traffic rerun).
+
+    Per-shard service-rate heterogeneity (``RateSpec.mu1_shards`` /
+    ``mu2_shards``, the paper's Tables VII–IX strong-scaling sweeps) is
+    honored here: each shard's queue is solved at its own μ1/μ2 and the
+    minimum-time model (eqs. 1–4) uses the per-shard rate vectors; the
+    aggregate/pooled queue uses the scalar (mean) rates.
+    """
     rates = spec.rates.resolve()
+    # (mu*_shards length vs n_shards is enforced by SimSpec.__post_init__.)
 
     shard_reports = []
     for i in range(spec.n_shards):
@@ -236,7 +244,7 @@ def report_from_counters(spec: SimSpec, ctr: Tier1Counters) -> SimReport:
             if spec.p12_override is not None
             else (int(ctr.misses[i]) / req if req else 0.0)
         )
-        rep, s, w1, w2 = _queue_summary(spec, rates, p12)
+        rep, s, w1, w2 = _queue_summary(spec, rates.for_shard(i), p12)
         shard_reports.append(ShardReport(
             shard=i,
             requests=req,
@@ -266,9 +274,10 @@ def report_from_counters(spec: SimSpec, ctr: Tier1Counters) -> SimReport:
 
     # Minimum-time model (eqs. 1-4) over the per-shard counters: eq. 1 at
     # the read/write device rates, eq. 2 at the miss rate, eq. 4 = max.
+    # Heterogeneous rate specs feed per-shard μ vectors into eqs. 1-2.
+    mu1_read_v, mu1_write_v, mu2_v = rates.shard_vectors(spec.n_shards)
     mt = service_time_model(
-        ctr.reads, ctr.writes, ctr.misses,
-        rates.mu1_read, rates.mu1_write, rates.mu2,
+        ctr.reads, ctr.writes, ctr.misses, mu1_read_v, mu1_write_v, mu2_v,
     )
     t_total = float(mt.t_total)
 

@@ -21,6 +21,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+import numpy as np
+
 from repro.core.traffic import TrafficSpec
 from repro.storage.tier2 import Tier1Sim, Tier2Sim
 from repro.storage.tiered_store import StoreConfig
@@ -34,12 +36,45 @@ PAPER_MU2 = 33.0
 
 @dataclasses.dataclass(frozen=True)
 class ResolvedRates:
-    """Concrete service rates handed to the queuing network (req/s)."""
+    """Concrete service rates handed to the queuing network (req/s).
+
+    ``mu1_shards``/``mu2_shards`` carry optional per-shard rate vectors (the
+    paper's Tables VII–IX strong-scaling runs, where the tier-1 device count
+    X1 — and hence each process's service rate — varies). When set, the
+    scalar fields hold the across-shard means used by the pooled/aggregate
+    queue solve; :meth:`for_shard` yields each shard's own rates.
+    """
 
     mu1: float        # tier-1 service rate used by the queue model
     mu2: float        # tier-2 (miss) service rate
     mu1_read: float   # read/write split for the minimum-time model (eqs 1-4)
     mu1_write: float
+    mu1_shards: Optional[tuple] = None  # per-shard μ1 overrides
+    mu2_shards: Optional[tuple] = None  # per-shard μ2 overrides
+
+    def for_shard(self, i: int) -> "ResolvedRates":
+        """Shard ``i``'s rates. Per-shard μ1 scales the read/write split
+        proportionally, preserving the base source's read:write ratio."""
+        if self.mu1_shards is None and self.mu2_shards is None:
+            return self
+        mu1 = float(self.mu1_shards[i]) if self.mu1_shards else self.mu1
+        mu2 = float(self.mu2_shards[i]) if self.mu2_shards else self.mu2
+        scale = mu1 / self.mu1
+        return ResolvedRates(
+            mu1=mu1,
+            mu2=mu2,
+            mu1_read=self.mu1_read * scale,
+            mu1_write=self.mu1_write * scale,
+        )
+
+    def shard_vectors(self, n_shards: int):
+        """(mu1_read[n], mu1_write[n], mu2[n]) arrays for eqs. 1–4."""
+        per = [self.for_shard(i) for i in range(n_shards)]
+        return (
+            np.asarray([r.mu1_read for r in per]),
+            np.asarray([r.mu1_write for r in per]),
+            np.asarray([r.mu2 for r in per]),
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +86,12 @@ class RateSpec:
     mu2: Optional[float] = None
     mu1_read: Optional[float] = None
     mu1_write: Optional[float] = None
+    # Per-shard heterogeneous rates (paper Tables VII–IX: X1 varies per
+    # process). Tuples so the spec stays hashable; length must equal the
+    # SimSpec's n_shards. When set, the scalar mu1/mu2 (explicit or the
+    # across-shard mean) feed the pooled queue solve.
+    mu1_shards: Optional[tuple] = None
+    mu2_shards: Optional[tuple] = None
     # Device-model operating points (used when source="devices").
     tier1: Tier1Sim = Tier1Sim()
     tier2: Tier2Sim = Tier2Sim()
@@ -67,13 +108,34 @@ class RateSpec:
             mu2 = self.tier2.mu2(read=True, n_stripes=self.n_stripes_op)
         else:
             raise ValueError(f"unknown rate source: {self.source!r}")
+        for name, vec in (("mu1_shards", self.mu1_shards),
+                          ("mu2_shards", self.mu2_shards)):
+            if vec is not None and (len(vec) == 0 or min(vec) <= 0):
+                raise ValueError(f"{name} must be a non-empty tuple of "
+                                 "positive rates")
         mu1_r = self.mu1_read if self.mu1_read is not None else mu1_r
         mu1_w = self.mu1_write if self.mu1_write is not None else mu1_w
         mu1 = self.mu1 if self.mu1 is not None else mu1_r
         mu2 = self.mu2 if self.mu2 is not None else mu2
+        if self.mu1_shards is not None and self.mu1 is None:
+            # Scalar μ1 becomes the across-shard mean; the read/write split
+            # rescales with it so for_shard(i) lands exactly on mu1_shards[i]
+            # while preserving the source's read:write ratio.
+            new_mu1 = sum(self.mu1_shards) / len(self.mu1_shards)
+            mu1_r *= new_mu1 / mu1
+            mu1_w *= new_mu1 / mu1
+            mu1 = new_mu1
+        if self.mu2_shards is not None and self.mu2 is None:
+            mu2 = sum(self.mu2_shards) / len(self.mu2_shards)
         if min(mu1, mu2, mu1_r, mu1_w) <= 0:
             raise ValueError("service rates must be positive")
-        return ResolvedRates(mu1=mu1, mu2=mu2, mu1_read=mu1_r, mu1_write=mu1_w)
+        return ResolvedRates(
+            mu1=mu1, mu2=mu2, mu1_read=mu1_r, mu1_write=mu1_w,
+            mu1_shards=(tuple(float(v) for v in self.mu1_shards)
+                        if self.mu1_shards is not None else None),
+            mu2_shards=(tuple(float(v) for v in self.mu2_shards)
+                        if self.mu2_shards is not None else None),
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +159,13 @@ class SimSpec:
             raise ValueError("n_shards must be >= 1")
         if self.flow not in ("paper", "conserving"):
             raise ValueError(f"unknown flow convention: {self.flow!r}")
+        for name in ("mu1_shards", "mu2_shards"):
+            vec = getattr(self.rates, name)
+            if vec is not None and len(vec) != self.n_shards:
+                raise ValueError(
+                    f"rates.{name} has {len(vec)} entries but n_shards="
+                    f"{self.n_shards}"
+                )
         if self.p12_override is not None and not 0.0 <= self.p12_override <= 1.0:
             raise ValueError("p12_override must be in [0, 1]")
 

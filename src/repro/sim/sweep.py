@@ -5,32 +5,50 @@ over a base :class:`SimSpec` (e.g. ``{"store.n_lines": [16, 64, 256],
 "n_shards": [2, 4], "store.policy": ["ws", "lru"]}``) and returns one
 :class:`SimReport` per point.
 
-Two levels of work sharing make wide sweeps cheap:
+Four levels of work sharing make wide sweeps cheap:
 
 1. **Cache-run dedup** — points that differ only in queuing-side knobs
    (λ, k, flow, rates, p12_override) share a
    :meth:`SimSpec.cache_signature`; the expensive tier-1 counter
    simulation runs once per signature.
-2. **vmap batching** — signatures whose jitted engine is identical (same
-   ``StoreConfig``, shard count, mapping) differ only in stream *data*, so
-   their padded per-shard streams stack into one ``[point, shard, len]``
-   batch processed by a single doubly-vmapped ``run_stream`` call (one
-   compile instead of one per point). Traffic generation (host-side numpy)
-   and queuing solves run host-side per point.
+2. **Megabatch vmap** — signatures whose *structural* engine is identical
+   (same ``StoreConfig.static_config()``, shard count, mapping) stack into
+   one ``[point, shard, len]`` batch processed by a single triply-batched
+   ``run_stream`` call. The scalar learning knobs (``alpha``, ``beta``,
+   ``threshold`` and the policy selector) ride along as **traced**
+   :class:`~repro.storage.tiered_store.StoreHyper` operands on the point
+   axis, so a whole hyperparameter/policy grid compiles the engine **once**
+   instead of once per combination.
+3. **Bucketed padding** — each point is padded to the next power-of-two
+   length bucket of *its own* max shard load (floor :data:`MIN_BUCKET`)
+   rather than the group-wide max, so short streams stop paying for the
+   longest one; buckets dispatch as separate stacked calls.
+4. **Device sharding + async dispatch** — the point axis of every stacked
+   call is sharded across all local devices (``shard_map`` via the
+   :mod:`repro.launch.compat` shims) and calls are dispatched
+   asynchronously: host-side traffic generation, padding and queuing
+   solves for later groups overlap device compute for earlier ones.
+
+Compiles of the batched engine are observable via
+:func:`engine_compile_count` (a trace-time counter used by
+``benchmarks/bench_sweep.py`` to gate compile-cache behavior).
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
 import json
-from typing import Mapping, Optional, Sequence
+import logging
+from typing import Callable, Mapping, NamedTuple, Optional, Sequence
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec
 
 from repro.core.traffic import make_stream
+from repro.launch.compat import device_mesh, shard_map
 from repro.sim.engine import (
     SimReport,
     Tier1Counters,
@@ -40,9 +58,42 @@ from repro.sim.engine import (
     tier1_counters,
 )
 from repro.sim.spec import SimSpec
-from repro.storage.tiered_store import partition_streams, run_stream
+from repro.storage.tiered_store import (
+    StoreConfig,
+    StoreHyper,
+    partition_streams,
+    run_stream,
+)
 
-__all__ = ["expand_grid", "sweep", "SweepResult"]
+__all__ = [
+    "expand_grid",
+    "sweep",
+    "SweepResult",
+    "engine_compile_count",
+    "reset_engine_compile_count",
+]
+
+log = logging.getLogger(__name__)
+
+# Smallest padded stream-length bucket; lengths round up to powers of two so
+# ragged groups land in a handful of shapes instead of one shape per point.
+MIN_BUCKET = 16
+# Default lax.scan unroll for the batched engine (semantics-preserving).
+DEFAULT_UNROLL = 4
+
+# The batched engine is cached per (static store, unroll, n_devices); the
+# counter increments at trace time, i.e. exactly once per XLA compile.
+_ENGINE_CACHE: dict[tuple, Callable] = {}
+_ENGINE_COMPILES = [0]
+
+
+def engine_compile_count() -> int:
+    """Number of XLA compiles of the batched sweep engine so far."""
+    return _ENGINE_COMPILES[0]
+
+
+def reset_engine_compile_count() -> None:
+    _ENGINE_COMPILES[0] = 0
 
 
 def expand_grid(axes: Mapping[str, Sequence]) -> list[dict]:
@@ -90,55 +141,169 @@ class SweepResult:
 
 
 def _jsonify(obj):
-    if isinstance(obj, (np.integer,)):
-        return int(obj)
-    if isinstance(obj, (np.floating,)):
-        return float(obj)
     if isinstance(obj, np.ndarray):
         return obj.tolist()
+    if isinstance(obj, np.generic):  # any numpy scalar, incl. np.bool_
+        return obj.item()
     raise TypeError(f"not JSON serializable: {type(obj)!r}")
 
 
 def _batch_key(spec: SimSpec) -> tuple:
-    """Signatures with equal batch keys share one jitted engine."""
-    return (spec.store, spec.n_shards, spec.mapping)
+    """Signatures with equal batch keys share one compiled engine: only the
+    *structural* store config splits groups — the scalar learning knobs
+    (alpha/beta/threshold/policy) are traced operands and stack instead."""
+    return (spec.store.static_config(), spec.n_shards, spec.mapping)
 
 
-def _run_signature_group(specs: list[SimSpec]) -> list[Tier1Counters]:
-    """Run every unique cache signature in ``specs`` (all sharing a batch
-    key) as one stacked vmap over (point, shard)."""
-    store, n_shards = specs[0].store, specs[0].n_shards
-    partitioned = []
-    for spec in specs:
+def _bucket_cap(n: int) -> int:
+    """Next power-of-two length bucket (floor MIN_BUCKET) for a shard load."""
+    cap = MIN_BUCKET
+    while cap < n:
+        cap <<= 1
+    return cap
+
+
+def _stack_hypers(stores: Sequence[StoreConfig]) -> StoreHyper:
+    """Concrete [N]-leaf StoreHyper stack for a list of store configs."""
+    hypers = [s.hyper() for s in stores]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *hypers)
+
+
+def _batched_engine(store: StoreConfig, unroll: int, n_dev: int) -> Callable:
+    """The one-compile megabatch engine for a structural store config:
+    ``(hyper [N], pages [N, S, L], writes [N, S, L]) -> StreamStats [N, S]``,
+    point axis sharded over all local devices. Cached so repeated sweeps
+    reuse both the wrapper and jit's compile cache."""
+    key = (store, unroll, n_dev)
+    fn = _ENGINE_CACHE.get(key)
+    if fn is not None:
+        return fn
+
+    def body(hyper, sh_pages, sh_writes):
+        _ENGINE_COMPILES[0] += 1  # trace-time: fires once per XLA compile
+
+        def point(h, p, w):
+            return jax.vmap(
+                lambda pp, ww: run_stream(store, pp, ww, hyper=h,
+                                          unroll=unroll)
+            )(p, w)
+
+        return jax.vmap(point)(hyper, sh_pages, sh_writes)
+
+    if n_dev > 1:
+        spec = PartitionSpec("points")
+        fn = jax.jit(shard_map(
+            body,
+            mesh=device_mesh("points"),
+            in_specs=(spec, spec, spec),
+            out_specs=spec,
+            check_vma=True,
+        ))
+    else:
+        fn = jax.jit(body)
+    _ENGINE_CACHE[key] = fn
+    return fn
+
+
+class _Member(NamedTuple):
+    """One unique cache signature prepared for stacking."""
+
+    bucket: int          # power-of-two padded length for this point
+    sig: tuple           # cache signature
+    spec: SimSpec
+    sh_pages: np.ndarray  # [S, own_cap] partitioned stream
+    sh_writes: np.ndarray
+    counts: np.ndarray   # per-shard real request counts
+    shard_writes: np.ndarray  # per-shard write counts
+
+
+@dataclasses.dataclass
+class _PendingBucket:
+    """One dispatched stacked engine call awaiting materialization."""
+
+    sigs: list           # cache signature per real point
+    counts: list         # per-point per-shard real request counts
+    writes: list         # per-point per-shard write counts
+    cap: int             # padded stream length (bucket)
+    stats: object        # StreamStats of device arrays (async futures)
+
+    def gather(self) -> dict:
+        stacked = jax.tree.map(np.asarray, self.stats)  # blocks on device
+        out = {}
+        for i, sig in enumerate(self.sigs):
+            stats_i = jax.tree.map(lambda a: a[i], stacked)
+            out[sig] = counters_from_stats(
+                stats_i, self.counts[i], self.writes[i], cap=self.cap
+            )
+        return out
+
+
+def _dispatch_group(
+    specs: list[SimSpec], sigs: list, *, unroll: int
+) -> list[_PendingBucket]:
+    """Partition, bucket, pad and asynchronously dispatch every unique cache
+    signature of one batch-key group. Returns pending buckets; device compute
+    proceeds while the caller prepares and dispatches later groups."""
+    store_static = specs[0].store.static_config()
+    n_shards = specs[0].n_shards
+    n_dev = jax.local_device_count()
+
+    members = []
+    for spec, sig in zip(specs, sigs):
         pages, is_write = make_stream(spec.traffic)
         sh_p, sh_w, counts, owner = partition_streams(
             pages, is_write, n_shards=n_shards, mapping=spec.mapping,
             n_pages=sim_n_pages(spec, pages),
         )
-        partitioned.append((sh_p, sh_w, counts, owner, is_write))
+        members.append(_Member(
+            bucket=_bucket_cap(sh_p.shape[1]),
+            sig=sig,
+            spec=spec,
+            sh_pages=sh_p,
+            sh_writes=sh_w,
+            counts=counts,
+            shard_writes=np.bincount(owner[is_write], minlength=n_shards),
+        ))
 
-    # Widen every point to the group's max shard load so the stack is
-    # regular. Each row is already padded with its shard's last page, so
-    # edge-repeating that column keeps the padding a pure-hit stream.
-    cap = max(p[0].shape[1] for p in partitioned)
-    sh_pages = np.zeros((len(specs), n_shards, cap), np.int32)
-    sh_writes = np.zeros((len(specs), n_shards, cap), bool)
-    for i, (sh_p, sh_w, _, _, _) in enumerate(partitioned):
-        w = sh_p.shape[1]
-        sh_pages[i, :, :w] = sh_p
-        sh_pages[i, :, w:] = sh_p[:, -1:]
-        sh_writes[i, :, :w] = sh_w
+    buckets: dict[int, list[_Member]] = {}
+    for m in members:
+        buckets.setdefault(m.bucket, []).append(m)
 
-    run = jax.vmap(jax.vmap(lambda p, w: run_stream(store, p, w)))
-    stacked = run(jnp.asarray(sh_pages), jnp.asarray(sh_writes))
-    stacked = jax.tree.map(np.asarray, stacked)
+    pending = []
+    for cap, group in sorted(buckets.items()):
+        n = len(group)
+        n_pad = -(-n // n_dev) * n_dev  # point axis must split over devices
+        sh_pages = np.zeros((n_pad, n_shards, cap), np.int32)
+        sh_writes = np.zeros((n_pad, n_shards, cap), bool)
+        for i, m in enumerate(group):
+            w = m.sh_pages.shape[1]
+            # Rows come pre-padded with their shard's last page; extending
+            # that edge-repeat keeps the padding a pure-hit stream.
+            sh_pages[i, :, :w] = m.sh_pages
+            sh_pages[i, :, w:] = m.sh_pages[:, -1:]
+            sh_writes[i, :, :w] = m.sh_writes
+        sh_pages[n:] = sh_pages[0]  # padded points: discarded after gather
+        sh_writes[n:] = sh_writes[0]
 
-    out = []
-    for i, (_, _, counts, owner, is_write) in enumerate(partitioned):
-        stats_i = jax.tree.map(lambda a: a[i], stacked)
-        writes = np.bincount(owner[is_write], minlength=n_shards)
-        out.append(counters_from_stats(stats_i, counts, writes, cap=cap))
-    return out
+        stores = [m.spec.store for m in group]
+        stores += [stores[0]] * (n_pad - n)
+        hyper = _stack_hypers(stores)
+
+        engine = _batched_engine(store_static, unroll, n_dev)
+        log.info(
+            "sweep: dispatch %d points x %d shards @ len %d "
+            "(n_lines=%d, devices=%d)",
+            n, n_shards, cap, store_static.n_lines, n_dev,
+        )
+        stats = engine(hyper, jnp.asarray(sh_pages), jnp.asarray(sh_writes))
+        pending.append(_PendingBucket(
+            sigs=[m.sig for m in group],
+            counts=[m.counts for m in group],
+            writes=[m.shard_writes for m in group],
+            cap=cap,
+            stats=stats,
+        ))
+    return pending
 
 
 def sweep(
@@ -146,9 +311,23 @@ def sweep(
     axes: Mapping[str, Sequence],
     *,
     batch: bool = True,
+    unroll: int = DEFAULT_UNROLL,
     verbose: bool = False,
 ) -> SweepResult:
-    """Evaluate ``base`` at every point of the ``axes`` grid."""
+    """Evaluate ``base`` at every point of the ``axes`` grid.
+
+    ``batch=True`` runs the megabatched one-compile engine (see module
+    docstring); ``batch=False`` simulates every signature independently
+    (reference path, bit-identical counters). ``unroll`` chunks the
+    per-request scan of the batched engine.
+    """
+    if verbose:
+        # Convenience for interactive use: make this module's INFO progress
+        # lines visible regardless of how (or whether) the app configured
+        # logging. verbose=False leaves logging config entirely to the app.
+        log.setLevel(logging.INFO)
+        if not (log.handlers or logging.getLogger().handlers):
+            logging.basicConfig(level=logging.INFO)
     points = expand_grid(axes)
     specs = [base.replace(**pt) for pt in points]
 
@@ -163,17 +342,25 @@ def sweep(
         groups: dict[tuple, list[tuple]] = {}
         for sig, spec in unique.items():
             groups.setdefault(_batch_key(spec), []).append(sig)
+        # Dispatch everything first (async), then gather: traffic generation
+        # and padding for group k+1 overlap device compute for group k, and
+        # the queuing solves below overlap the tail of device compute.
+        pending: list[_PendingBucket] = []
         for key, sigs in groups.items():
-            if verbose:
-                print(f"sweep: batch {key[1]}x{len(sigs)} signatures "
-                      f"(policy={key[0].policy}, n_lines={key[0].n_lines})")
-            group_specs = [unique[s] for s in sigs]
-            for sig, ctr in zip(sigs, _run_signature_group(group_specs)):
-                counters[sig] = ctr
+            log.info(
+                "sweep: batch group n_shards=%d, %d signatures "
+                "(n_lines=%d, mapping=%s)",
+                key[1], len(sigs), key[0].n_lines, key[2],
+            )
+            pending.extend(
+                _dispatch_group([unique[s] for s in sigs], sigs,
+                                unroll=unroll)
+            )
+        for bucket in pending:
+            counters.update(bucket.gather())
     else:
         for sig, spec in unique.items():
-            if verbose:
-                print(f"sweep: run {sig}")
+            log.info("sweep: run %s", sig)
             counters[sig] = tier1_counters(spec)
 
     reports = [

@@ -37,6 +37,7 @@ from repro.storage.cache_state import CacheState, init_cache
 
 __all__ = [
     "StoreConfig",
+    "StoreHyper",
     "StoreState",
     "StreamStats",
     "run_stream",
@@ -44,6 +45,28 @@ __all__ = [
     "partition_streams",
     "correct_padded_stats",
 ]
+
+# Traced policy selector convention: ws (online learning) = -1, experts by
+# their index in ol.EXPERTS. Part of the public contract (sweep stacking).
+WS_POLICY_IDX = -1
+POLICY_TO_IDX = {"ws": WS_POLICY_IDX,
+                 **{name: i for i, name in enumerate(ol.EXPERTS)}}
+
+
+class StoreHyper(NamedTuple):
+    """The scalar online-learning knobs of a :class:`StoreConfig`, as traced
+    operands of the engine rather than compile-time constants.
+
+    Points of a sweep that differ only in these fields share one compiled
+    engine: the sweep stacks ``StoreHyper`` leaves on a vmap axis next to the
+    stream data instead of splitting per-config jit caches. ``policy_idx``
+    follows :data:`POLICY_TO_IDX` (``-1`` = weight-sharing online learning).
+    """
+
+    alpha: jnp.ndarray      # f32[] weight-share rate
+    beta: jnp.ndarray       # f32[] multiplicative penalty base
+    threshold: jnp.ndarray  # f32[] misprediction threshold fraction
+    policy_idx: jnp.ndarray  # i32[] expert index, -1 = online learning
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +95,34 @@ class StoreConfig:
         if self.policy == "ws":
             return None
         return ol.EXPERTS.index(self.policy)
+
+    def hyper(self) -> StoreHyper:
+        """This config's scalar knobs as concrete :class:`StoreHyper` leaves."""
+        try:
+            idx = POLICY_TO_IDX[self.policy]
+        except KeyError:
+            raise ValueError(
+                f"unknown policy {self.policy!r}; "
+                f"options: {sorted(POLICY_TO_IDX)}"
+            ) from None
+        return StoreHyper(
+            alpha=jnp.asarray(self.alpha, jnp.float32),
+            beta=jnp.asarray(self.beta, jnp.float32),
+            threshold=jnp.asarray(self.threshold, jnp.float32),
+            policy_idx=jnp.asarray(idx, jnp.int32),
+        )
+
+    def static_config(self) -> "StoreConfig":
+        """The structural residue of this config: every field that shapes the
+        compiled engine (array sizes, scan structure), with the traced knobs
+        (:class:`StoreHyper` fields) reset to class defaults. Two configs with
+        equal ``static_config()`` share one compiled engine."""
+        defaults = {
+            f.name: f.default
+            for f in dataclasses.fields(StoreConfig)
+            if f.name in ("alpha", "beta", "threshold", "policy")
+        }
+        return dataclasses.replace(self, **defaults)
 
 
 class StoreState(NamedTuple):
@@ -110,7 +161,17 @@ def init_store(cfg: StoreConfig, seed: int = 0) -> StoreState:
     )
 
 
-def _step(cfg: StoreConfig, state: StoreState, req):
+def _step(cfg: StoreConfig, hyper: StoreHyper, state: StoreState, req):
+    # ``cfg`` carries only structural knobs here (shapes, scan layout,
+    # prefetcher wiring); the scalar learning knobs come from ``hyper`` so
+    # they may be traced (one compile serves a grid of settings).
+    ol_cfg = ol.OLConfig(
+        epoch_width=cfg.epoch_width,
+        alpha=hyper.alpha,
+        beta=hyper.beta,
+        threshold=hyper.threshold,
+        pred_cap=cfg.pred_cap,
+    )
     page, is_write = req
     page = page.astype(jnp.int32)
     cache, ols, pf = state.cache, state.ols, state.pf
@@ -144,7 +205,7 @@ def _step(cfg: StoreConfig, state: StoreState, req):
     # GetVictim: every expert proposes; chosen expert's proposal is used.
     proposals = ol.propose_victims(cache, vkey)          # int32[E] line idx
     victim_pages = cache.tags[proposals]                  # int32[E]
-    chosen = ol.choose_expert(ols, cfg.policy_idx())
+    chosen = ol.choose_expert(ols, hyper.policy_idx)
     victim_idx = proposals[chosen]
 
     evict = miss & ~has_free
@@ -152,7 +213,7 @@ def _step(cfg: StoreConfig, state: StoreState, req):
     writeback = evict & cache.dirty[slot]
 
     # Record prediction vectors only when an eviction actually happens.
-    ols_pred = ol.record_predictions(ols, cfg.ol_config(), victim_pages)
+    ols_pred = ol.record_predictions(ols, ol_cfg, victim_pages)
     ols = jax.tree.map(lambda new, old: jnp.where(evict, new, old), ols_pred, ols)
     ols = ols._replace(chosen=jnp.where(evict, chosen, ols.chosen[0])[None])
 
@@ -185,12 +246,15 @@ def _step(cfg: StoreConfig, state: StoreState, req):
         prefetch_fetches = jnp.zeros((), jnp.int32)
 
     # --- 5. epoch boundary -------------------------------------------------
+    # WeightAdjust fires only for the weight-sharing policy (policy_idx < 0);
+    # fixed-expert baselines keep their initial weights, exactly as when the
+    # policy was a compile-time constant.
     epoch_end = (t + 1) % cfg.epoch_width == 0
-    if cfg.policy == "ws":
-        ols_adj = ol.weight_adjust(ols, cfg.ol_config())
-        ols = jax.tree.map(
-            lambda new, old: jnp.where(epoch_end, new, old), ols_adj, ols
-        )
+    is_ws = hyper.policy_idx < 0
+    ols_adj = ol.weight_adjust(ols, ol_cfg)
+    ols = jax.tree.map(
+        lambda new, old: jnp.where(epoch_end & is_ws, new, old), ols_adj, ols
+    )
 
     out = dict(
         hit=hit,
@@ -227,21 +291,36 @@ def run_stream(
     is_write: jnp.ndarray,
     *,
     seed: int = 0,
+    hyper: Optional[StoreHyper] = None,
+    unroll: int = 1,
 ) -> StreamStats:
-    """Process a request stream through one tier-1 shard. Jitted scan."""
+    """Process a request stream through one tier-1 shard. Jitted scan.
 
+    ``hyper`` overrides the scalar learning knobs of ``cfg`` with (possibly
+    traced) :class:`StoreHyper` operands — the sweep engine's third vmap
+    axis. When traced hypers are supplied, only ``cfg.static_config()``
+    shapes the computation. ``unroll`` chunks the per-request scan body
+    (semantics-preserving; larger values trade compile time for fewer loop
+    iterations on wide batches).
+    """
     pages = jnp.asarray(pages, jnp.int32)
     is_write = jnp.asarray(is_write, bool)
+    if hyper is None:
+        hyper = cfg.hyper()
 
     def scan_fn(state, req):
-        return _step(cfg, state, req)
+        return _step(cfg, hyper, state, req)
 
     state0 = init_store(cfg, seed)
-    final, outs = jax.lax.scan(scan_fn, state0, (pages, is_write))
+    final, outs = jax.lax.scan(
+        scan_fn, state0, (pages, is_write), unroll=unroll
+    )
     return _aggregate(outs, final)
 
 
-run_stream_jit = jax.jit(run_stream, static_argnums=0, static_argnames=("seed",))
+run_stream_jit = jax.jit(
+    run_stream, static_argnums=0, static_argnames=("seed", "unroll")
+)
 
 
 def partition_streams(

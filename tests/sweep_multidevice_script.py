@@ -1,0 +1,31 @@
+"""Subprocess body for the multi-device sweep equivalence test: with the
+point axis sharded over >1 (forced host) devices, the megabatched sweep must
+match the unbatched reference exactly. Run with XLA_FLAGS containing
+--xla_force_host_platform_device_count=2 (set by the pytest wrapper)."""
+import jax
+
+from repro.core.traffic import TrafficSpec
+from repro.sim import RateSpec, SimSpec, sweep
+from repro.storage.tiered_store import StoreConfig
+
+assert jax.local_device_count() > 1, "host device forcing did not take"
+
+base = SimSpec(
+    traffic=TrafficSpec(kind="irm", n_requests=400, n_pages=128,
+                        write_fraction=0.2, seed=9),
+    store=StoreConfig(n_lines=16, policy="ws"),
+    n_shards=2,
+    lam=20.0,
+    rates=RateSpec(source="paper"),
+)
+# 3 points: an odd count forces point-axis padding up to the device multiple.
+axes = {"store.policy": ["ws", "lru", "lfu"]}
+a = sweep(base, axes, batch=True)
+b = sweep(base, axes, batch=False)
+for pt, ra, rb in zip(a.points, a.reports, b.reports):
+    for name in ("requests", "hits", "misses", "tier2_reads",
+                 "tier2_writes", "evictions"):
+        av, bv = getattr(ra, name), getattr(rb, name)
+        assert av == bv, (pt, name, av, bv)
+
+print("MULTIDEVICE SWEEP OK")

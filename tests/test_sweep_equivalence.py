@@ -1,0 +1,119 @@
+"""Megabatch sweep equivalence: the one-compile engine (traced hypers,
+bucketed padding, device sharding) must reproduce the unbatched reference
+path counter-for-counter. Guards the bucketed-padding rewrite."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.mapping import MAPPING_POLICIES
+from repro.core.traffic import TrafficSpec
+from repro.sim import RateSpec, SimSpec, sweep
+from repro.sim.sweep import (
+    _bucket_cap,
+    engine_compile_count,
+    reset_engine_compile_count,
+)
+from repro.storage.tiered_store import POLICY_TO_IDX, StoreConfig
+
+BASE = SimSpec(
+    traffic=TrafficSpec(kind="poisson", n_requests=300, n_pages=96,
+                        write_fraction=0.25, seed=5),
+    store=StoreConfig(n_lines=16, policy="ws"),
+    n_shards=3,
+    lam=20.0,
+    rates=RateSpec(source="paper"),
+)
+
+ALL_POLICIES = sorted(POLICY_TO_IDX)          # lfu, lru, random, ws
+ALL_MAPPINGS = sorted(MAPPING_POLICIES)       # block, block_cyclic, ...
+
+
+def _assert_reports_equal(a, b, ctx):
+    for name in ("requests", "hits", "misses", "prefetch_hits",
+                 "tier2_reads", "tier2_writes", "evictions"):
+        av, bv = getattr(a, name), getattr(b, name)
+        assert av == bv, f"{ctx}: {name} batched={av} unbatched={bv}"
+    for sa, sb in zip(a.shards, b.shards):
+        for name in ("requests", "hits", "misses", "tier2_reads",
+                     "tier2_writes", "evictions"):
+            av, bv = getattr(sa, name), getattr(sb, name)
+            assert av == bv, f"{ctx} shard {sa.shard}: {name} {av} != {bv}"
+
+
+def test_all_policies_and_mappings_match_unbatched():
+    """Every policy x mapping combination: identical counters through the
+    megabatched and reference paths. Poisson traffic under block mapping is
+    deliberately ragged (most requests land on shard 0)."""
+    axes = {"store.policy": ALL_POLICIES, "mapping": ALL_MAPPINGS}
+    a = sweep(BASE, axes, batch=True)
+    b = sweep(BASE, axes, batch=False)
+    for pt, ra, rb in zip(a.points, a.reports, b.reports):
+        _assert_reports_equal(ra, rb, str(pt))
+
+
+def test_ragged_stream_lengths_match_unbatched():
+    """Points with very different stream lengths land in different padding
+    buckets; counters must still match the per-point reference exactly."""
+    axes = {
+        "traffic.n_requests": [60, 300, 700],
+        "store.policy": ["ws", "lru"],
+        "store.alpha": [0.3, 0.7],
+    }
+    a = sweep(BASE, axes, batch=True)
+    b = sweep(BASE, axes, batch=False)
+    for pt, ra, rb in zip(a.points, a.reports, b.reports):
+        _assert_reports_equal(ra, rb, str(pt))
+    # The lengths really span more than one bucket.
+    caps = {_bucket_cap(n) for n in (60, 300, 700)}
+    assert len(caps) > 1
+
+
+def test_traced_knob_axes_share_one_compile():
+    """Axes covering only traced knobs (alpha/beta/threshold/policy) stack
+    into the hyper vmap axis: at most one fresh engine compile."""
+    spec = BASE.replace(**{"traffic.seed": 11})
+    axes = {
+        "store.policy": ALL_POLICIES,
+        "store.alpha": [0.25, 0.5, 0.75],
+        "store.beta": [0.6, 0.9],
+        "store.threshold": [0.1, 0.25],
+    }
+    sweep(spec, axes)  # warm the jit cache for this shape
+    reset_engine_compile_count()
+    res = sweep(spec, axes)
+    assert engine_compile_count() == 0  # fully served from the compile cache
+    assert len(res.points) == len(ALL_POLICIES) * 3 * 2 * 2
+    # The hyper axis is live: policies disagree on eviction behavior.
+    miss_by_policy = {}
+    for pt, rep in zip(res.points, res.reports):
+        miss_by_policy.setdefault(pt["store.policy"], set()).add(rep.misses)
+    assert len({frozenset(v) for v in miss_by_policy.values()}) > 1
+
+
+def test_bucket_cap_powers_of_two():
+    assert _bucket_cap(1) == 16
+    assert _bucket_cap(16) == 16
+    assert _bucket_cap(17) == 32
+    assert _bucket_cap(700) == 1024
+
+
+@pytest.mark.slow
+def test_multidevice_sweep_matches_single_device():
+    """Device-sharded point axis (forced host devices) must not change any
+    counter; runs in a subprocess so XLA_FLAGS precedes jax import."""
+    script = os.path.join(os.path.dirname(__file__),
+                          "sweep_multidevice_script.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2").strip()
+    out = subprocess.run(
+        [sys.executable, script], env=env, capture_output=True, text=True,
+        timeout=1800,
+    )
+    assert out.returncode == 0, out.stdout[-3000:] + out.stderr[-3000:]
+    assert "MULTIDEVICE SWEEP OK" in out.stdout
