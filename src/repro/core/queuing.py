@@ -17,8 +17,19 @@ Two conventions for the *effective arrival rate* at the k-server queue:
 - ``flow="conserving"`` uses flow conservation at equilibrium (the miss
   queue's throughput equals its arrival rate): λ_eff = (1-p12)·λ + p12·λ = λ.
 
-Everything is plain float math (no tracing requirement) with jnp-compatible
-vector forms where useful for sweeps.
+Every queue primitive and :class:`TwoTierModel` is **vectorized**: λ, μ and
+``p12`` may be scalars or arbitrary-shape numpy arrays (broadcast against
+each other); ``k`` stays a Python int (it is structural). Scalar inputs
+return plain-float metrics, array inputs return arrays elementwise equal to
+the scalar formulas — one call solves a whole ``[point, shard]`` or
+``[shard, window]`` grid instead of a Python loop.
+
+Beyond the equilibrium analysis, :func:`transient_two_tier` solves the
+network **piecewise-stationary over time windows**: each window's measured
+arrival rate and miss fraction feed the same equations, yielding latency /
+utilization time series plus saturation-onset detection (the first window
+whose utilization reaches 1) — the transient view the paper's steady-state
+summary hides.
 """
 from __future__ import annotations
 
@@ -38,6 +49,10 @@ __all__ = [
     "QueueMetrics",
     "TwoTierModel",
     "TwoTierReport",
+    "TransientReport",
+    "transient_two_tier",
+    "residence_times",
+    "expected_response",
 ]
 
 
@@ -71,76 +86,117 @@ def service_time_model(
     return ServiceTimes(t_hit, t_miss, t_proc, float(np.max(t_proc)))
 
 
-def system_service_rate(mu1: float, mu2: float, p12: float) -> float:
-    """Equation 5: harmonic composition of tier service rates."""
+def system_service_rate(mu1, mu2, p12):
+    """Equation 5: harmonic composition of tier service rates (elementwise
+    over broadcastable array inputs)."""
     inv = (1.0 - p12) / mu1 + p12 / mu2
     return 1.0 / inv
 
 
 # ---------------------------------------------------------------------------
-# Queue primitives.
+# Queue primitives (vectorized; scalar in -> scalar out).
 # ---------------------------------------------------------------------------
 
 
 class QueueMetrics(NamedTuple):
-    rho: float      # utilization (per-server for k-server queues)
-    p0: float       # probability of an empty system
-    lq: float       # expected queue length (waiting)
-    l: float        # expected number in system
-    wq: float       # expected waiting time
-    w: float        # expected time in system
-    stable: bool
+    rho: np.ndarray     # utilization (per-server for k-server queues)
+    p0: np.ndarray      # probability of an empty system
+    lq: np.ndarray      # expected queue length (waiting)
+    l: np.ndarray       # expected number in system
+    wq: np.ndarray      # expected waiting time
+    w: np.ndarray       # expected time in system
+    stable: np.ndarray  # bool
 
 
-def mm1_queue(lam: float, mu: float) -> QueueMetrics:
-    """M/M/1 (paper eq. 7 uses Lq = rho^2/(1-rho))."""
-    if lam <= 0.0:  # no arrivals: empty queue, residence = pure service
-        return QueueMetrics(0.0, 1.0, 0.0, 0.0, 0.0, 1.0 / mu, True)
-    rho = lam / mu
-    if rho >= 1.0:
-        return QueueMetrics(rho, 0.0, math.inf, math.inf, math.inf, math.inf, False)
-    lq = rho * rho / (1.0 - rho)
-    l = rho / (1.0 - rho)
-    return QueueMetrics(rho, 1.0 - rho, lq, l, lq / lam, l / lam, True)
+def _metrics(rho, p0, lq, l, wq, w, stable) -> QueueMetrics:
+    """Pack metrics; 0-d arrays collapse to plain float/bool (the historic
+    scalar API)."""
+    if np.ndim(rho) == 0:
+        return QueueMetrics(float(rho), float(p0), float(lq), float(l),
+                            float(wq), float(w), bool(stable))
+    return QueueMetrics(np.asarray(rho, float), np.asarray(p0, float),
+                        np.asarray(lq, float), np.asarray(l, float),
+                        np.asarray(wq, float), np.asarray(w, float),
+                        np.asarray(stable, bool))
 
 
-def _mmk_p0(a: float, k: int) -> float:
-    """P0 for M/M/k with offered load a = lam/mu (paper cites [42])."""
-    s = sum(a**i / math.factorial(i) for i in range(k))
-    s += a**k / (math.factorial(k) * (1.0 - a / k))
+def mm1_queue(lam, mu) -> QueueMetrics:
+    """M/M/1 (paper eq. 7 uses Lq = rho^2/(1-rho)). Vectorized over
+    broadcastable ``lam``/``mu`` arrays; λ ≤ 0 means an idle queue (empty,
+    residence = pure service) and ρ ≥ 1 a saturated one (inf waits)."""
+    lam, mu = np.broadcast_arrays(np.asarray(lam, float), np.asarray(mu, float))
+    idle = lam <= 0.0
+    lam_safe = np.where(idle, 1.0, lam)
+    rho = np.where(idle, 0.0, lam_safe / mu)
+    stable = rho < 1.0
+    live = stable & ~idle
+    one_minus = np.where(stable, 1.0 - rho, 1.0)
+    lq = np.where(stable, rho * rho / one_minus, np.inf)
+    l = np.where(stable, rho / one_minus, np.inf)
+    wq = np.where(live, lq / lam_safe, np.where(idle, 0.0, np.inf))
+    w = np.where(live, l / lam_safe, np.where(idle, 1.0 / mu, np.inf))
+    p0 = np.where(stable, 1.0 - rho, 0.0)
+    return _metrics(rho, p0, lq, l, wq, w, stable)
+
+
+def _mmk_p0(a, k: int):
+    """P0 for M/M/k with offered load a = lam/mu (paper cites [42]).
+    Vectorized over ``a``; only meaningful where a < k."""
+    a = np.asarray(a, float)
+    a_clip = np.minimum(a, k * (1.0 - 1e-12))  # keep the tail term finite
+    s = sum(a_clip**i / math.factorial(i) for i in range(k))
+    s = s + a_clip**k / (math.factorial(k) * (1.0 - a_clip / k))
     return 1.0 / s
 
 
-def mmk_queue(lam: float, mu: float, k: int) -> QueueMetrics:
-    """M/M/k. Paper eq. 6: L1 = P0 * a^(k+1) / ((k-1)! (k-a)^2), a = lam/mu."""
-    if lam <= 0.0:
-        return QueueMetrics(0.0, 1.0, 0.0, 0.0, 0.0, 1.0 / mu, True)
-    a = lam / mu
+def mmk_queue(lam, mu, k: int) -> QueueMetrics:
+    """M/M/k. Paper eq. 6: L1 = P0 * a^(k+1) / ((k-1)! (k-a)^2), a = lam/mu.
+    Vectorized over broadcastable ``lam``/``mu``; ``k`` is a Python int."""
+    lam, mu = np.broadcast_arrays(np.asarray(lam, float), np.asarray(mu, float))
+    idle = lam <= 0.0
+    lam_safe = np.where(idle, 1.0, lam)
+    a = np.where(idle, 0.0, lam_safe / mu)
     rho = a / k
-    if rho >= 1.0:
-        return QueueMetrics(rho, 0.0, math.inf, math.inf, math.inf, math.inf, False)
-    p0 = _mmk_p0(a, k)
-    lq = p0 * a ** (k + 1) / (math.factorial(k - 1) * (k - a) ** 2)
-    l = lq + a
-    return QueueMetrics(rho, p0, lq, l, lq / lam, l / lam, True)
+    stable = rho < 1.0
+    live = stable & ~idle
+    p0 = np.where(stable, _mmk_p0(a, k), 0.0)
+    k_minus_a = np.where(stable, k - a, 1.0)
+    lq = np.where(
+        stable,
+        p0 * a ** (k + 1) / (math.factorial(k - 1) * k_minus_a**2),
+        np.inf,
+    )
+    l = np.where(stable, lq + a, np.inf)
+    wq = np.where(live, lq / lam_safe, np.where(idle, 0.0, np.inf))
+    w = np.where(live, l / lam_safe, np.where(idle, 1.0 / mu, np.inf))
+    p0 = np.where(idle, 1.0, p0)
+    return _metrics(rho, p0, lq, l, wq, w, stable)
 
 
-def mgk_queue(lam: float, mean_s: float, var_s: float, k: int) -> QueueMetrics:
+def mgk_queue(lam, mean_s, var_s, k: int) -> QueueMetrics:
     """M/G/k via the Allen–Cunneen approximation:
     Lq(M/G/k) ≈ Lq(M/M/k) * (1 + C_s^2) / 2, C_s^2 = var/mean^2.
 
     The paper derives its tier-1 queue "using the mean and variance of the
     read/write service (hit) time distribution" — this is that model.
+    Vectorized like :func:`mmk_queue`.
     """
-    mu = 1.0 / mean_s
-    base = mmk_queue(lam, mu, k)
-    if not base.stable or lam <= 0.0:
-        return base
-    cs2 = var_s / (mean_s * mean_s)
+    # Broadcast *before* the base M/M/k solve so its metrics already carry
+    # the full output shape (a var_s wider than lam must widen everything).
+    lam_b, mean_b, var_b = np.broadcast_arrays(
+        np.asarray(lam, float), np.asarray(mean_s, float),
+        np.asarray(var_s, float))
+    base = mmk_queue(lam_b, 1.0 / mean_b, k)
+    idle = lam_b <= 0.0
+    lam_safe = np.where(idle, 1.0, lam_b)
+    live = np.asarray(base.stable, bool) & ~idle
+    cs2 = var_b / (mean_b * mean_b)
     scale = (1.0 + cs2) / 2.0
-    lq = base.lq * scale
-    l = lq + lam * mean_s
-    return QueueMetrics(base.rho, base.p0, lq, l, lq / lam, l / lam, True)
+    lq = np.where(live, base.lq * scale, base.lq)
+    l = np.where(live, lq + lam_b * mean_b, base.l)
+    wq = np.where(live, lq / lam_safe, base.wq)
+    w = np.where(live, l / lam_safe, base.w)
+    return _metrics(base.rho, base.p0, lq, l, wq, w, base.stable)
 
 
 # ---------------------------------------------------------------------------
@@ -158,6 +214,10 @@ class TwoTierModel:
     p12:  miss rate (fraction of requests forwarded to tier 2)
     k:    RPC service threads per process (k-server queue)
     var_s1: variance of tier-1 service time (M/G/k); 0 => exponential M/M/k
+
+    ``lam``/``mu1``/``mu2``/``p12`` may be broadcastable numpy arrays; the
+    whole analysis then runs elementwise (one solve for a grid of operating
+    points instead of a Python loop).
     """
 
     lam: float
@@ -168,7 +228,7 @@ class TwoTierModel:
     var_s1: float = 0.0
     flow: Literal["paper", "conserving"] = "paper"
 
-    def effective_arrival(self) -> float:
+    def effective_arrival(self):
         """Arrival rate at the k-server (tier-1) queue."""
         if self.flow == "paper":
             # §V worked example: misses re-enter at rate p12 * mu2.
@@ -177,15 +237,27 @@ class TwoTierModel:
 
     def analyze(self) -> "TwoTierReport":
         lam_eff = self.effective_arrival()
-        # Tier-1 k-server queue (M/M/k or M/G/k).
-        if self.var_s1 > 0:
-            q1 = mgk_queue(lam_eff, 1.0 / self.mu1, self.var_s1, self.k)
-        else:
+        # Tier-1 k-server queue: M/G/k where var_s1 > 0, M/M/k where it is
+        # 0 — elementwise, so a mixed var_s1 array keeps the documented
+        # "0 => exponential M/M/k" contract per element.
+        var = np.asarray(self.var_s1, float)
+        if not np.any(var > 0):
             q1 = mmk_queue(lam_eff, self.mu1, self.k)
+        else:
+            q1 = mgk_queue(lam_eff, 1.0 / np.asarray(self.mu1, float),
+                           var, self.k)
+            if np.any(var <= 0):
+                q_m = mmk_queue(lam_eff, self.mu1, self.k)
+                pick = var > 0
+                # np.where keeps bool dtype for the stable field.
+                q1 = QueueMetrics(*[
+                    np.where(pick, g, m) for g, m in zip(q1, q_m)
+                ])
         # Tier-2 M/M/1 miss queue (eq. 7).
         lam_miss = self.p12 * self.lam
         q2 = mm1_queue(lam_miss, self.mu2)
         mu_sys = system_service_rate(self.mu1, self.mu2, self.p12)
+        eq = np.logical_and(q1.stable, q2.stable)
         return TwoTierReport(
             model=self,
             lam_eff=lam_eff,
@@ -193,7 +265,7 @@ class TwoTierModel:
             q2=q2,
             mu_system=mu_sys,
             rho_system=self.lam / mu_sys,
-            equilibrium=q1.stable and q2.stable,
+            equilibrium=bool(eq) if np.ndim(eq) == 0 else eq,
         )
 
     def time_for(self, n_requests: int) -> dict[str, float]:
@@ -227,5 +299,104 @@ class TwoTierReport:
             "W2": self.q2.wq,
             "mu_system": self.mu_system,
             "rho_system": self.rho_system,
-            "equilibrium": float(self.equilibrium),
+            "equilibrium": (
+                float(self.equilibrium)
+                if np.ndim(self.equilibrium) == 0
+                else np.asarray(self.equilibrium, float)
+            ),
         }
+
+
+def residence_times(wq1, wq2, mu1, mu2, stable):
+    """Residence times W = Wq + 1/μ for both tiers; wherever *either* queue
+    saturates (``stable`` False) both report inf — the shared convention of
+    the steady-state and transient reports."""
+    stable = np.asarray(stable, bool)
+    w1 = np.where(stable, wq1 + 1.0 / np.asarray(mu1, float), np.inf)
+    w2 = np.where(stable, wq2 + 1.0 / np.asarray(mu2, float), np.inf)
+    return w1, w2
+
+
+def expected_response(w1, w2, p12):
+    """Expected response time w1 + p12*w2, elementwise, guarding both
+    factors so p12 = 0 never multiplies an inf w2 (0*inf = nan)."""
+    has_miss = np.asarray(p12) > 0.0
+    return w1 + np.where(has_miss, p12, 0.0) * np.where(has_miss, w2, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Piecewise-stationary transient analysis (windowed telemetry -> the network).
+# ---------------------------------------------------------------------------
+
+
+class TransientReport(NamedTuple):
+    """Per-window solution of the two-tier network, last axis = time window.
+
+    Each window is solved as a stationary network at that window's measured
+    arrival rate and miss fraction (piecewise-stationary approximation —
+    valid when windows are long relative to queue relaxation times). ``w1``
+    / ``w2`` are residence times (waiting + service); windows where either
+    queue saturates report ``inf`` latencies and ``stable=False``.
+    """
+
+    lam: np.ndarray       # measured arrival rate per window
+    p12: np.ndarray       # measured miss fraction per window
+    lam_eff: np.ndarray   # effective tier-1 arrival rate
+    rho1: np.ndarray      # tier-1 offered load (a = lam_eff/mu1)
+    rho2: np.ndarray      # tier-2 utilization
+    w1: np.ndarray        # tier-1 residence time (s)
+    w2: np.ndarray        # tier-2 residence time (s)
+    response: np.ndarray  # expected response: w1 + p12 * w2
+    stable: np.ndarray    # bool per window
+
+    def onset(self) -> np.ndarray:
+        """Saturation onset: index of the first unstable window along the
+        time axis, -1 where every window is stable. Shape = stable.shape
+        minus the window axis."""
+        unstable = ~np.asarray(self.stable, bool)
+        first = np.argmax(unstable, axis=-1)
+        return np.where(np.any(unstable, axis=-1), first, -1)
+
+
+def transient_two_tier(
+    lam,
+    p12,
+    mu1,
+    mu2,
+    *,
+    k: int = 1,
+    var_s1: float = 0.0,
+    flow: str = "paper",
+) -> TransientReport:
+    """Solve the two-tier network window by window (piecewise-stationary).
+
+    ``lam``/``p12`` carry the time axis last (e.g. ``[window]`` or
+    ``[shard, window]``); ``mu1``/``mu2`` broadcast against them (scalars,
+    or ``[shard, 1]`` for per-shard device rates). Returns latency /
+    utilization time series plus per-series saturation onsets via
+    :meth:`TransientReport.onset`.
+    """
+    lam = np.atleast_1d(np.asarray(lam, float))
+    p12 = np.atleast_1d(np.asarray(p12, float))
+    mu1 = np.asarray(mu1, float)
+    mu2 = np.asarray(mu2, float)
+    rep = TwoTierModel(
+        lam=lam, mu1=mu1, mu2=mu2, p12=p12, k=k, var_s1=var_s1,
+        flow=flow,  # type: ignore[arg-type]
+    ).analyze()
+    stable = np.broadcast_arrays(
+        np.asarray(rep.equilibrium, bool), lam
+    )[0].astype(bool)
+    w1, w2 = residence_times(rep.q1.wq, rep.q2.wq, mu1, mu2, stable)
+    response = expected_response(w1, w2, p12)
+    return TransientReport(
+        lam=lam,
+        p12=p12,
+        lam_eff=np.broadcast_arrays(np.asarray(rep.lam_eff, float), lam)[0],
+        rho1=np.broadcast_arrays(np.asarray(rep.q1.rho, float) * k, lam)[0],
+        rho2=np.broadcast_arrays(np.asarray(rep.q2.rho, float), lam)[0],
+        w1=w1,
+        w2=w2,
+        response=response,
+        stable=stable,
+    )

@@ -13,6 +13,17 @@ The paper evaluates cache replacement under two traffic models:
 Also provided: strided streams (exercise the stream-identifier prefetcher,
 §III) and Markov-chain streams (§II, [40]) for the Markov prefetcher.
 
+**Non-stationary workloads** (the time axis the equilibrium analysis hides):
+
+- **phase schedules** (``kind="phased"`` / :func:`phase_schedule`) compose
+  existing :class:`TrafficSpec` s into sequential phases — read-then-write,
+  IRM-then-Poisson, anything the base generators produce — so miss rate and
+  per-shard load drift over the stream;
+- **on/off burst modulation** (``kind="onoff"`` / :func:`onoff_stream`)
+  alternates background Zipf-read traffic with checkpoint-style sequential
+  write bursts over a small hot page range (the paper's bursty checkpoint
+  evaluation traffic).
+
 Generators are host-side (numpy, seeded) — traffic is an *input* to the
 jitted storage engine, mirroring the paper where clients generate requests
 outside the cache. Each generator returns ``(pages, is_write)`` int32/bool
@@ -21,7 +32,7 @@ arrays of length ``n``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -32,6 +43,9 @@ __all__ = [
     "strided_stream",
     "markov_stream",
     "mixed_stream",
+    "phased_stream",
+    "phase_schedule",
+    "onoff_stream",
     "make_stream",
 ]
 
@@ -40,7 +54,7 @@ __all__ = [
 class TrafficSpec:
     """Declarative description of a workload (used by benchmarks/configs)."""
 
-    kind: str  # poisson | irm | strided | markov | mixed
+    kind: str  # poisson | irm | strided | markov | mixed | phased | onoff
     n_requests: int
     n_pages: int
     write_fraction: float = 0.0
@@ -57,6 +71,13 @@ class TrafficSpec:
     # markov
     n_hot_states: int = 16
     hot_self_p: float = 0.85
+    # phased: sequential composition of other TrafficSpecs (hashable tuple;
+    # build via phase_schedule() so n_requests/n_pages stay consistent)
+    phases: Optional[tuple] = None
+    # onoff: background traffic modulated by checkpoint-style write bursts
+    on_len: int = 64      # burst length (requests)
+    off_len: int = 192    # background stretch between bursts (requests)
+    burst_pages: int = 32  # checkpoint working-set size (hot page range)
 
 
 def _writes(rng: np.random.Generator, n: int, frac: float) -> np.ndarray:
@@ -218,6 +239,88 @@ def mixed_stream(
     return pages, _writes(rng, n, write_fraction)
 
 
+def phased_stream(
+    phases: Sequence[TrafficSpec],
+) -> tuple[np.ndarray, np.ndarray]:
+    """Concatenate the streams of sequential phases (shared page space).
+
+    Each phase is generated by its own :class:`TrafficSpec` (own kind, seed,
+    write fraction, length); the phases run back to back, so the composed
+    stream's locality, write mix and page footprint shift at phase
+    boundaries — exactly the non-stationarity a windowed report resolves.
+    """
+    if not phases:
+        raise ValueError("phased traffic needs at least one phase")
+    parts = [make_stream(p) for p in phases]
+    pages = np.concatenate([p for p, _ in parts]).astype(np.int32)
+    writes = np.concatenate([w for _, w in parts]).astype(bool)
+    return pages, writes
+
+
+def phase_schedule(*phases: TrafficSpec, seed: int = 0) -> TrafficSpec:
+    """Compose :class:`TrafficSpec` phases into one ``kind="phased"`` spec.
+
+    The schedule's ``n_requests`` is the sum over phases and its ``n_pages``
+    the max (the §III mapping partitions the widest declared page space).
+    """
+    if not phases:
+        raise ValueError("phase_schedule needs at least one phase")
+    return TrafficSpec(
+        kind="phased",
+        n_requests=sum(p.n_requests for p in phases),
+        n_pages=max(p.n_pages for p in phases),
+        seed=seed,
+        phases=tuple(phases),
+    )
+
+
+def onoff_stream(
+    n: int,
+    n_pages: int,
+    *,
+    on_len: int = 64,
+    off_len: int = 192,
+    burst_pages: int = 32,
+    zipf_s: float = 1.1,
+    write_fraction: float = 0.0,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """On/off burst modulation: Zipf-read background with periodic
+    checkpoint-style write bursts.
+
+    OFF stretches (``off_len`` requests) draw Zipf-popular pages over the
+    full page space with the base ``write_fraction``; ON bursts (``on_len``
+    requests) issue sequential *writes* over a small hot checkpoint range
+    (``burst_pages`` pages, resuming where the previous burst stopped).
+    Bursts shift both the miss fraction and the write mix window to window —
+    the paper's bursty checkpoint traffic.
+    """
+    if on_len < 0 or off_len < 0 or on_len + off_len == 0:
+        raise ValueError("need on_len + off_len > 0 (both non-negative)")
+    rng = np.random.default_rng(seed)
+    burst_span = max(1, min(burst_pages, n_pages))
+    ranks = np.arange(1, n_pages + 1, dtype=np.float64)
+    pop = ranks ** (-zipf_s)
+    pop /= pop.sum()
+    pages = np.empty(n, dtype=np.int32)
+    writes = np.zeros(n, dtype=bool)
+    t = 0
+    ckpt = 0
+    while t < n:
+        m = min(off_len, n - t)
+        if m:
+            pages[t : t + m] = rng.choice(n_pages, size=m, p=pop)
+            writes[t : t + m] = rng.random(m) < write_fraction
+            t += m
+        m = min(on_len, n - t)
+        if m:
+            pages[t : t + m] = (ckpt + np.arange(m)) % burst_span
+            writes[t : t + m] = True
+            ckpt = (ckpt + m) % burst_span
+            t += m
+    return pages, writes
+
+
 def make_stream(spec: TrafficSpec) -> tuple[np.ndarray, np.ndarray]:
     """Build a stream from a :class:`TrafficSpec`."""
     common = dict(
@@ -258,4 +361,25 @@ def make_stream(spec: TrafficSpec) -> tuple[np.ndarray, np.ndarray]:
         )
     if spec.kind == "mixed":
         return mixed_stream(spec.n_requests, spec.n_pages, **common)
+    if spec.kind == "phased":
+        if not spec.phases:
+            raise ValueError("phased TrafficSpec needs a non-empty phases "
+                             "tuple (see phase_schedule())")
+        total = sum(p.n_requests for p in spec.phases)
+        if total != spec.n_requests:
+            raise ValueError(
+                f"phased n_requests={spec.n_requests} != sum of phase "
+                f"lengths {total} (build the spec via phase_schedule())"
+            )
+        return phased_stream(spec.phases)
+    if spec.kind == "onoff":
+        return onoff_stream(
+            spec.n_requests,
+            spec.n_pages,
+            on_len=spec.on_len,
+            off_len=spec.off_len,
+            burst_pages=spec.burst_pages,
+            zipf_s=spec.zipf_s,
+            **common,
+        )
     raise ValueError(f"unknown traffic kind: {spec.kind!r}")

@@ -9,6 +9,7 @@ from repro.sim.engine import (  # noqa: F401
     ShardReport,
     SimReport,
     Tier1Counters,
+    WindowSeries,
     report_from_counters,
     simulate,
     tier1_counters,
@@ -30,7 +31,7 @@ from repro.sim.sweep import (  # noqa: F401
 
 __all__ = [
     "SimSpec", "RateSpec", "ResolvedRates", "PAPER_MU1", "PAPER_MU2",
-    "SimReport", "ShardReport", "Tier1Counters",
+    "SimReport", "ShardReport", "Tier1Counters", "WindowSeries",
     "simulate", "tier1_counters", "report_from_counters",
     "sweep", "expand_grid", "SweepResult",
     "engine_compile_count", "reset_engine_compile_count",

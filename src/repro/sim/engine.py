@@ -24,6 +24,20 @@ counter                queuing-network input
 
 Service rates come from :class:`repro.sim.spec.RateSpec` (fitted device
 models or the §V paper constants).
+
+**Time-resolved reports.** With ``SimSpec.n_windows > 1`` every counter is
+additionally resolved over equal windows of the request stream
+(:class:`WindowSeries`), each window's measured arrival rate and miss
+fraction re-solve the network piecewise-stationarily
+(:func:`repro.core.queuing.transient_two_tier`), and the report carries the
+resulting latency/utilization time series plus the saturation onset — the
+first window in which utilization reaches 1. Time variation enters through
+the *measured miss fraction* (warm-up, phase changes, the learner
+adapting) and through *per-shard* arrival-rate skew (mapping imbalance);
+the pooled arrival rate is the constant offered λ by construction, since
+windows are equal request-count slices of a constant-rate stream. All
+per-shard equilibrium queue solves are numpy-vectorized (one array solve
+instead of a Python loop over shards).
 """
 from __future__ import annotations
 
@@ -33,18 +47,30 @@ from typing import NamedTuple, Optional
 import numpy as np
 
 from repro.core.mapping import page_to_shard
-from repro.core.queuing import ServiceTimes, TwoTierModel, service_time_model
+from repro.core.queuing import (
+    ServiceTimes,
+    TransientReport,
+    TwoTierModel,
+    expected_response,
+    residence_times,
+    service_time_model,
+    transient_two_tier,
+)
 from repro.core.traffic import make_stream
 from repro.sim.spec import ResolvedRates, SimSpec
 from repro.storage.tiered_store import correct_padded_stats, run_distributed
 import jax.numpy as jnp
 
-__all__ = ["Tier1Counters", "ShardReport", "SimReport", "tier1_counters",
-           "report_from_counters", "simulate"]
+__all__ = ["Tier1Counters", "WindowSeries", "ShardReport", "SimReport",
+           "tier1_counters", "report_from_counters", "simulate"]
 
 
 class Tier1Counters(NamedTuple):
-    """Per-shard int64 counter arrays measured by the tier-1 engine."""
+    """Per-shard int64 counter arrays measured by the tier-1 engine.
+
+    ``win_*`` fields resolve the same counters over the time windows of the
+    global request stream (shape ``[n_shards, n_windows]``; window sums
+    equal the whole-stream counters exactly)."""
 
     requests: np.ndarray
     reads: np.ndarray
@@ -55,6 +81,45 @@ class Tier1Counters(NamedTuple):
     tier2_reads: np.ndarray
     tier2_writes: np.ndarray
     evictions: np.ndarray
+    win_requests: np.ndarray
+    win_hits: np.ndarray
+    win_misses: np.ndarray
+    win_prefetch_hits: np.ndarray
+    win_tier2_reads: np.ndarray
+    win_tier2_writes: np.ndarray
+    win_evictions: np.ndarray
+
+    @property
+    def n_windows(self) -> int:
+        return self.win_requests.shape[-1]
+
+
+class WindowSeries(NamedTuple):
+    """Per-shard, per-window telemetry (shapes ``[n_shards, n_windows]``):
+    the windowed engine counters plus the measured queuing-network inputs
+    (arrival rate and miss fraction) each window feeds into the transient
+    solve.
+
+    ``lam`` is each *shard's* share of the offered load in that window —
+    windows are equal slices of the global stream arriving at the constant
+    offered rate λ·S, so per-shard rates resolve mapping skew and phased
+    footprint shifts, while the across-shard pooled rate is ~λ by
+    construction (wall-clock rate bursts need timestamped arrivals, an
+    open ROADMAP item; miss-fraction drift is what moves the pooled
+    transient today)."""
+
+    requests: np.ndarray
+    hits: np.ndarray
+    misses: np.ndarray
+    prefetch_hits: np.ndarray
+    tier2_reads: np.ndarray
+    tier2_writes: np.ndarray
+    evictions: np.ndarray
+    lam: np.ndarray   # measured per-shard arrival rate (req/s)
+    p12: np.ndarray   # measured per-shard miss fraction
+
+    def to_dict(self) -> dict:
+        return {name: _plain(getattr(self, name)) for name in self._fields}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,9 +144,12 @@ class ShardReport:
     w2: float            # tier-2 residence time (s)
     response_s: float    # expected response: w1 + p12 * w2
     equilibrium: bool
+    # First window in which this shard's transient solve saturates (ρ ≥ 1);
+    # None when every window is stable (or n_windows == 1 and stable).
+    saturation_onset: Optional[int] = None
 
     def to_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        return _plain(dataclasses.asdict(self))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,12 +184,19 @@ class SimReport:
     min_time: ServiceTimes
     t_total_s: float        # eq. 4: max over shards
     min_time_throughput_rps: float  # total requests / t_total
+    # time-resolved telemetry (window axis = n_windows slices of the stream)
+    n_windows: int
+    window_duration_s: float
+    windows: WindowSeries
+    transient: TransientReport   # pooled piecewise-stationary solve
+    saturation_onset: Optional[int]  # first pooled window ρ ≥ 1 (None=never)
 
     def to_dict(self) -> dict:
         d = {
             f.name: getattr(self, f.name)
             for f in dataclasses.fields(self)
-            if f.name not in ("spec", "rates", "shards", "min_time")
+            if f.name not in ("spec", "rates", "shards", "min_time",
+                              "windows", "transient")
         }
         d["rates"] = dataclasses.asdict(self.rates)
         d["spec"] = {
@@ -133,6 +208,7 @@ class SimReport:
             "k_servers": self.spec.k_servers,
             "flow": self.spec.flow,
             "p12_override": self.spec.p12_override,
+            "n_windows": self.spec.n_windows,
         }
         d["min_time"] = {
             "t_hit": [float(v) for v in np.atleast_1d(self.min_time.t_hit)],
@@ -140,8 +216,30 @@ class SimReport:
             "t_proc": [float(v) for v in np.atleast_1d(self.min_time.t_proc)],
             "t_total": float(self.min_time.t_total),
         }
+        d = _plain(d)  # scalar fields, rates (tuples!), spec, min_time
+        # These sub-reports sanitize themselves — attach after the walk so
+        # nothing is converted twice.
+        d["windows"] = self.windows.to_dict()
+        d["transient"] = {
+            name: _plain(getattr(self.transient, name))
+            for name in self.transient._fields
+        }
         d["shards"] = [s.to_dict() for s in self.shards]
         return d
+
+
+def _plain(obj):
+    """Recursively convert numpy scalars/arrays (and tuples) into plain
+    JSON-serializable Python values."""
+    if isinstance(obj, dict):
+        return {k: _plain(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_plain(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return _plain(obj.tolist())
+    if isinstance(obj, np.generic):
+        return obj.item()
+    return obj
 
 
 def sim_n_pages(spec: SimSpec, pages: np.ndarray) -> int:
@@ -154,9 +252,9 @@ def sim_n_pages(spec: SimSpec, pages: np.ndarray) -> int:
 def tier1_counters(spec: SimSpec, trace=None) -> Tier1Counters:
     """Run the workload through the distributed tier-1 cache
     (:func:`repro.storage.tiered_store.run_distributed`) and return exact
-    per-shard counters. ``trace`` overrides the generated stream with a
-    user-provided ``(pages, is_write)`` pair (mapped over its own observed
-    page space)."""
+    per-shard counters (whole-stream and per-window). ``trace`` overrides
+    the generated stream with a user-provided ``(pages, is_write)`` pair
+    (mapped over its own observed page space)."""
     if trace is not None:
         pages, is_write = np.asarray(trace[0]), np.asarray(trace[1], bool)
         n_pages = int(pages.max()) + 1
@@ -166,6 +264,7 @@ def tier1_counters(spec: SimSpec, trace=None) -> Tier1Counters:
     stats, counts = run_distributed(
         spec.store, pages, is_write,
         n_shards=spec.n_shards, mapping=spec.mapping, n_pages=n_pages,
+        n_windows=spec.n_windows,
     )
     owner = np.asarray(
         page_to_shard(jnp.asarray(pages), spec.n_shards, n_pages, spec.mapping)
@@ -188,6 +287,13 @@ def _assemble_counters(corrected_stats, counts, writes) -> Tier1Counters:
         tier2_reads=np.asarray(s.tier2_reads, np.int64),
         tier2_writes=np.asarray(s.tier2_writes, np.int64),
         evictions=np.asarray(s.evictions, np.int64),
+        win_requests=np.asarray(s.win_requests, np.int64),
+        win_hits=np.asarray(s.win_hits, np.int64),
+        win_misses=np.asarray(s.win_misses, np.int64),
+        win_prefetch_hits=np.asarray(s.win_prefetch_hits, np.int64),
+        win_tier2_reads=np.asarray(s.win_tier2_reads, np.int64),
+        win_tier2_writes=np.asarray(s.win_tier2_writes, np.int64),
+        win_evictions=np.asarray(s.win_evictions, np.int64),
     )
 
 
@@ -200,28 +306,11 @@ def counters_from_stats(stats, counts, writes, *, cap: int) -> Tier1Counters:
     )
 
 
-def _response(w1: float, w2: float, p12: float) -> float:
-    """Expected response time w1 + p12*w2, avoiding inf*0 -> nan when the
-    tier-1 queue saturates while p12 = 0."""
-    return float(w1 + (p12 * w2 if p12 > 0.0 else 0.0))
-
-
-def _queue_summary(spec: SimSpec, rates: ResolvedRates, p12: float):
-    model = TwoTierModel(
-        lam=spec.lam,
-        mu1=rates.mu1,
-        mu2=rates.mu2,
-        p12=p12,
-        k=spec.k_servers,
-        flow=spec.flow,  # type: ignore[arg-type]
-    )
-    rep = model.analyze()
-    s = rep.summary()
-    w1 = s["W1"] + 1.0 / rates.mu1          # waiting + service at tier 1
-    w2 = s["W2"] + 1.0 / rates.mu2          # waiting + service at tier 2
-    if not rep.equilibrium:
-        w1 = w2 = float("inf")
-    return rep, s, w1, w2
+def _shard_rate_vectors(spec: SimSpec, rates: ResolvedRates):
+    """Per-shard queue-model (μ1, μ2) arrays (scalars broadcast)."""
+    per = [rates.for_shard(i) for i in range(spec.n_shards)]
+    return (np.asarray([r.mu1 for r in per], float),
+            np.asarray([r.mu2 for r in per], float))
 
 
 def report_from_counters(spec: SimSpec, ctr: Tier1Counters) -> SimReport:
@@ -231,23 +320,95 @@ def report_from_counters(spec: SimSpec, ctr: Tier1Counters) -> SimReport:
     ``mu2_shards``, the paper's Tables VII–IX strong-scaling sweeps) is
     honored here: each shard's queue is solved at its own μ1/μ2 and the
     minimum-time model (eqs. 1–4) uses the per-shard rate vectors; the
-    aggregate/pooled queue uses the scalar (mean) rates.
+    aggregate/pooled queue uses the scalar (mean) rates. All per-shard and
+    per-window solves are vectorized array calls into
+    :mod:`repro.core.queuing` — no Python loop over shards or windows.
     """
     rates = spec.rates.resolve()
     # (mu*_shards length vs n_shards is enforced by SimSpec.__post_init__.)
+    mu1_v, mu2_v = _shard_rate_vectors(spec, rates)
+
+    # --- per-shard equilibrium solves, one vectorized call ----------------
+    req = np.asarray(ctr.requests, np.int64)
+    p12_sh = (
+        np.full(spec.n_shards, spec.p12_override, float)
+        if spec.p12_override is not None
+        else np.asarray(ctr.misses, float) / np.maximum(req, 1)
+    )
+    sh_rep = TwoTierModel(
+        lam=np.full(spec.n_shards, spec.lam, float),
+        mu1=mu1_v, mu2=mu2_v, p12=p12_sh, k=spec.k_servers,
+        flow=spec.flow,  # type: ignore[arg-type]
+    ).analyze()
+    sh_sum = sh_rep.summary()
+    sh_eq = np.asarray(sh_rep.equilibrium, bool)
+    sh_w1, sh_w2 = residence_times(sh_sum["W1"], sh_sum["W2"],
+                                   mu1_v, mu2_v, sh_eq)
+    sh_resp = expected_response(sh_w1, sh_w2, p12_sh)
+
+    # --- windowed telemetry + piecewise-stationary transient solves -------
+    n_windows = ctr.n_windows
+    total_req = int(req.sum())
+    # The whole stream arrives at aggregate rate λ·S, so each of the
+    # n_windows equal request-count slices spans this wall-clock duration.
+    # λ ≤ 0 is the idle regime (no arrivals): windows have no duration and
+    # the measured rates below stay 0.
+    duration = (
+        total_req / (spec.lam * spec.n_shards * n_windows)
+        if total_req and spec.lam > 0 else 0.0
+    )
+    win_req = np.asarray(ctr.win_requests, float)
+    lam_sw = win_req / duration if duration > 0 else np.zeros_like(win_req)
+    p12_sw = (
+        np.full_like(win_req, spec.p12_override)
+        if spec.p12_override is not None
+        else np.asarray(ctr.win_misses, float) / np.maximum(win_req, 1)
+    )
+    windows = WindowSeries(
+        requests=ctr.win_requests,
+        hits=ctr.win_hits,
+        misses=ctr.win_misses,
+        prefetch_hits=ctr.win_prefetch_hits,
+        tier2_reads=ctr.win_tier2_reads,
+        tier2_writes=ctr.win_tier2_writes,
+        evictions=ctr.win_evictions,
+        lam=lam_sw,
+        p12=p12_sw,
+    )
+    # Per-shard transient: measured per-shard rates at per-shard μ.
+    sh_tr = transient_two_tier(
+        lam_sw, p12_sw, mu1_v[:, None], mu2_v[:, None],
+        k=spec.k_servers, flow=spec.flow,
+    )
+    sh_onsets = np.asarray(sh_tr.onset())
+    # Pooled transient: per-process pooled arrival rate and miss fraction.
+    pool_req = win_req.sum(axis=0)
+    pool_lam = (
+        pool_req / (duration * spec.n_shards)
+        if duration > 0 else np.zeros(n_windows)
+    )
+    pool_p12 = (
+        np.full(n_windows, spec.p12_override, float)
+        if spec.p12_override is not None
+        else np.asarray(ctr.win_misses, float).sum(axis=0)
+        / np.maximum(pool_req, 1)
+    )
+    transient = transient_two_tier(
+        pool_lam, pool_p12, rates.mu1, rates.mu2,
+        k=spec.k_servers, flow=spec.flow,
+    )
+    # Report-level onset = the pooled solve's first saturated window (system
+    # drifting into overload). Per-shard onsets — which also capture mapping
+    # skew concentrating load on one shard — live on each ShardReport.
+    pooled_onset = int(transient.onset())
+    saturation_onset = pooled_onset if pooled_onset >= 0 else None
 
     shard_reports = []
     for i in range(spec.n_shards):
-        req = int(ctr.requests[i])
-        p12 = (
-            spec.p12_override
-            if spec.p12_override is not None
-            else (int(ctr.misses[i]) / req if req else 0.0)
-        )
-        rep, s, w1, w2 = _queue_summary(spec, rates.for_shard(i), p12)
+        onset_i = int(sh_onsets[i])
         shard_reports.append(ShardReport(
             shard=i,
-            requests=req,
+            requests=int(req[i]),
             reads=int(ctr.reads[i]),
             writes=int(ctr.writes[i]),
             hits=int(ctr.hits[i]),
@@ -256,34 +417,39 @@ def report_from_counters(spec: SimSpec, ctr: Tier1Counters) -> SimReport:
             tier2_reads=int(ctr.tier2_reads[i]),
             tier2_writes=int(ctr.tier2_writes[i]),
             evictions=int(ctr.evictions[i]),
-            p12=float(p12),
-            lam_eff=float(s["lam_eff"]),
-            rho1=float(s["rho1"]),
-            rho2=float(s["rho2"]),
-            w1=float(w1),
-            w2=float(w2),
-            response_s=_response(w1, w2, p12),
-            equilibrium=bool(rep.equilibrium),
+            p12=float(p12_sh[i]),
+            lam_eff=float(np.asarray(sh_sum["lam_eff"]).reshape(-1)[i]),
+            rho1=float(np.asarray(sh_sum["rho1"]).reshape(-1)[i]),
+            rho2=float(np.asarray(sh_sum["rho2"]).reshape(-1)[i]),
+            w1=float(sh_w1[i]),
+            w2=float(sh_w2[i]),
+            response_s=float(sh_resp[i]),
+            equilibrium=bool(sh_eq[i]),
+            saturation_onset=onset_i if onset_i >= 0 else None,
         ))
 
-    total_req = int(ctr.requests.sum())
+    # --- pooled/aggregate equilibrium solve -------------------------------
     total_miss = int(ctr.misses.sum())
     miss_rate = total_miss / total_req if total_req else 0.0
     p12 = spec.p12_override if spec.p12_override is not None else miss_rate
-    rep, s, w1, w2 = _queue_summary(spec, rates, p12)
+    agg_rep = TwoTierModel(
+        lam=spec.lam, mu1=rates.mu1, mu2=rates.mu2, p12=p12,
+        k=spec.k_servers, flow=spec.flow,  # type: ignore[arg-type]
+    ).analyze()
+    s = agg_rep.summary()
+    w1, w2 = residence_times(s["W1"], s["W2"], rates.mu1, rates.mu2,
+                             agg_rep.equilibrium)
 
     # Minimum-time model (eqs. 1-4) over the per-shard counters: eq. 1 at
     # the read/write device rates, eq. 2 at the miss rate, eq. 4 = max.
     # Heterogeneous rate specs feed per-shard μ vectors into eqs. 1-2.
-    mu1_read_v, mu1_write_v, mu2_v = rates.shard_vectors(spec.n_shards)
+    mu1_read_v, mu1_write_v, mu2_mt_v = rates.shard_vectors(spec.n_shards)
     mt = service_time_model(
-        ctr.reads, ctr.writes, ctr.misses, mu1_read_v, mu1_write_v, mu2_v,
+        ctr.reads, ctr.writes, ctr.misses, mu1_read_v, mu1_write_v, mu2_mt_v,
     )
     t_total = float(mt.t_total)
 
-    equilibrium = bool(rep.equilibrium) and all(
-        sr.equilibrium for sr in shard_reports
-    )
+    equilibrium = bool(agg_rep.equilibrium) and bool(sh_eq.all())
     return SimReport(
         spec=spec,
         rates=rates,
@@ -302,7 +468,7 @@ def report_from_counters(spec: SimSpec, ctr: Tier1Counters) -> SimReport:
         rho2=float(s["rho2"]),
         w1=float(w1),
         w2=float(w2),
-        response_s=_response(w1, w2, p12),
+        response_s=float(expected_response(w1, w2, p12)),
         mu_system=float(s["mu_system"]),
         rho_system=float(s["rho_system"]),
         equilibrium=equilibrium,
@@ -311,6 +477,11 @@ def report_from_counters(spec: SimSpec, ctr: Tier1Counters) -> SimReport:
         min_time=mt,
         t_total_s=t_total,
         min_time_throughput_rps=total_req / t_total if t_total > 0 else 0.0,
+        n_windows=n_windows,
+        window_duration_s=float(duration),
+        windows=windows,
+        transient=transient,
+        saturation_onset=saturation_onset,
     )
 
 

@@ -153,10 +153,18 @@ class SimSpec:
     # When set, the queuing network uses this miss fraction instead of the
     # measured one (the §V worked example fixes p12 = 0.2).
     p12_override: Optional[float] = None
+    # Time resolution of the report: every engine counter is additionally
+    # resolved over this many equal windows of the request stream, and the
+    # queuing network is re-solved per window (piecewise-stationary
+    # transient analysis + saturation-onset detection). 1 = the historic
+    # steady-state-only report.
+    n_windows: int = 1
 
     def __post_init__(self):
         if self.n_shards < 1:
             raise ValueError("n_shards must be >= 1")
+        if self.n_windows < 1:
+            raise ValueError("n_windows must be >= 1")
         if self.flow not in ("paper", "conserving"):
             raise ValueError(f"unknown flow convention: {self.flow!r}")
         for name in ("mu1_shards", "mu2_shards"):
@@ -195,8 +203,11 @@ class SimSpec:
 
     def cache_signature(self) -> tuple:
         """Everything the tier-1 counter simulation depends on. Sweep points
-        sharing a signature reuse one cache run (queuing params are free)."""
-        return (self.traffic, self.store, self.n_shards, self.mapping)
+        sharing a signature reuse one cache run (queuing params are free).
+        ``n_windows`` is part of the signature: windowed counters depend on
+        the window resolution even though totals do not."""
+        return (self.traffic, self.store, self.n_shards, self.mapping,
+                self.n_windows)
 
 
 def _replace_nested(obj, updates: dict):

@@ -29,6 +29,11 @@ Four levels of work sharing make wide sweeps cheap:
    asynchronously: host-side traffic generation, padding and queuing
    solves for later groups overlap device compute for earlier ones.
 
+Windowed telemetry (``SimSpec.n_windows``) rides the same batch: window
+ids are a data operand next to the stream (pads carry the dropped
+out-of-range id), so the ``[point, shard, n_windows]`` counters add no
+compiles beyond the structural split on ``n_windows`` itself.
+
 Compiles of the batched engine are observable via
 :func:`engine_compile_count` (a trace-time counter used by
 ``benchmarks/bench_sweep.py`` to gate compile-cache behavior).
@@ -151,8 +156,11 @@ def _jsonify(obj):
 def _batch_key(spec: SimSpec) -> tuple:
     """Signatures with equal batch keys share one compiled engine: only the
     *structural* store config splits groups — the scalar learning knobs
-    (alpha/beta/threshold/policy) are traced operands and stack instead."""
-    return (spec.store.static_config(), spec.n_shards, spec.mapping)
+    (alpha/beta/threshold/policy) are traced operands and stack instead.
+    ``n_windows`` shapes the accumulator arrays, so it is structural too
+    (but window *ids* are data: one compile serves any window layout)."""
+    return (spec.store.static_config(), spec.n_shards, spec.mapping,
+            spec.n_windows)
 
 
 def _bucket_cap(n: int) -> int:
@@ -169,33 +177,38 @@ def _stack_hypers(stores: Sequence[StoreConfig]) -> StoreHyper:
     return jax.tree.map(lambda *xs: jnp.stack(xs), *hypers)
 
 
-def _batched_engine(store: StoreConfig, unroll: int, n_dev: int) -> Callable:
+def _batched_engine(
+    store: StoreConfig, unroll: int, n_dev: int, n_windows: int
+) -> Callable:
     """The one-compile megabatch engine for a structural store config:
-    ``(hyper [N], pages [N, S, L], writes [N, S, L]) -> StreamStats [N, S]``,
-    point axis sharded over all local devices. Cached so repeated sweeps
-    reuse both the wrapper and jit's compile cache."""
-    key = (store, unroll, n_dev)
+    ``(hyper [N], pages [N, S, L], writes [N, S, L], win [N, S, L]) ->
+    StreamStats [N, S]`` (windowed counters ``[N, S, n_windows]``), point
+    axis sharded over all local devices. Cached so repeated sweeps reuse
+    both the wrapper and jit's compile cache."""
+    key = (store, unroll, n_dev, n_windows)
     fn = _ENGINE_CACHE.get(key)
     if fn is not None:
         return fn
 
-    def body(hyper, sh_pages, sh_writes):
+    def body(hyper, sh_pages, sh_writes, sh_win):
         _ENGINE_COMPILES[0] += 1  # trace-time: fires once per XLA compile
 
-        def point(h, p, w):
+        def point(h, p, w, wi):
             return jax.vmap(
-                lambda pp, ww: run_stream(store, pp, ww, hyper=h,
-                                          unroll=unroll)
-            )(p, w)
+                lambda pp, ww, wwi: run_stream(
+                    store, pp, ww, hyper=h, unroll=unroll,
+                    n_windows=n_windows, window_ids=wwi,
+                )
+            )(p, w, wi)
 
-        return jax.vmap(point)(hyper, sh_pages, sh_writes)
+        return jax.vmap(point)(hyper, sh_pages, sh_writes, sh_win)
 
     if n_dev > 1:
         spec = PartitionSpec("points")
         fn = jax.jit(shard_map(
             body,
             mesh=device_mesh("points"),
-            in_specs=(spec, spec, spec),
+            in_specs=(spec, spec, spec, spec),
             out_specs=spec,
             check_vma=True,
         ))
@@ -213,6 +226,7 @@ class _Member(NamedTuple):
     spec: SimSpec
     sh_pages: np.ndarray  # [S, own_cap] partitioned stream
     sh_writes: np.ndarray
+    sh_win: np.ndarray   # [S, own_cap] window ids (n_windows = pad/drop)
     counts: np.ndarray   # per-shard real request counts
     shard_writes: np.ndarray  # per-shard write counts
 
@@ -246,14 +260,15 @@ def _dispatch_group(
     proceeds while the caller prepares and dispatches later groups."""
     store_static = specs[0].store.static_config()
     n_shards = specs[0].n_shards
+    n_windows = specs[0].n_windows
     n_dev = jax.local_device_count()
 
     members = []
     for spec, sig in zip(specs, sigs):
         pages, is_write = make_stream(spec.traffic)
-        sh_p, sh_w, counts, owner = partition_streams(
+        sh_p, sh_w, counts, owner, sh_win = partition_streams(
             pages, is_write, n_shards=n_shards, mapping=spec.mapping,
-            n_pages=sim_n_pages(spec, pages),
+            n_pages=sim_n_pages(spec, pages), n_windows=n_windows,
         )
         members.append(_Member(
             bucket=_bucket_cap(sh_p.shape[1]),
@@ -261,6 +276,7 @@ def _dispatch_group(
             spec=spec,
             sh_pages=sh_p,
             sh_writes=sh_w,
+            sh_win=sh_win,
             counts=counts,
             shard_writes=np.bincount(owner[is_write], minlength=n_shards),
         ))
@@ -275,6 +291,10 @@ def _dispatch_group(
         n_pad = -(-n // n_dev) * n_dev  # point axis must split over devices
         sh_pages = np.zeros((n_pad, n_shards, cap), np.int32)
         sh_writes = np.zeros((n_pad, n_shards, cap), bool)
+        # Bucket-extension positions are padding: window id n_windows drops
+        # them from the windowed counters (so windowed telemetry is
+        # bit-identical across bucket choices).
+        sh_win = np.full((n_pad, n_shards, cap), n_windows, np.int32)
         for i, m in enumerate(group):
             w = m.sh_pages.shape[1]
             # Rows come pre-padded with their shard's last page; extending
@@ -282,6 +302,7 @@ def _dispatch_group(
             sh_pages[i, :, :w] = m.sh_pages
             sh_pages[i, :, w:] = m.sh_pages[:, -1:]
             sh_writes[i, :, :w] = m.sh_writes
+            sh_win[i, :, :w] = m.sh_win
         sh_pages[n:] = sh_pages[0]  # padded points: discarded after gather
         sh_writes[n:] = sh_writes[0]
 
@@ -289,13 +310,14 @@ def _dispatch_group(
         stores += [stores[0]] * (n_pad - n)
         hyper = _stack_hypers(stores)
 
-        engine = _batched_engine(store_static, unroll, n_dev)
+        engine = _batched_engine(store_static, unroll, n_dev, n_windows)
         log.info(
             "sweep: dispatch %d points x %d shards @ len %d "
-            "(n_lines=%d, devices=%d)",
-            n, n_shards, cap, store_static.n_lines, n_dev,
+            "(n_lines=%d, windows=%d, devices=%d)",
+            n, n_shards, cap, store_static.n_lines, n_windows, n_dev,
         )
-        stats = engine(hyper, jnp.asarray(sh_pages), jnp.asarray(sh_writes))
+        stats = engine(hyper, jnp.asarray(sh_pages), jnp.asarray(sh_writes),
+                       jnp.asarray(sh_win))
         pending.append(_PendingBucket(
             sigs=[m.sig for m in group],
             counts=[m.counts for m in group],

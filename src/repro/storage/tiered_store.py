@@ -20,6 +20,18 @@ The engine is branchless (computed-both-paths + select) so it vmaps across
 distributed cache shards (paper's per-process caches). Tier-2 is counted
 here (reads / write-backs); converting counts to time is the queuing and
 device-model layer (:mod:`repro.core.queuing`, :mod:`repro.core.device_models`).
+
+**Windowed telemetry.** The scan folds every per-request outcome into
+``n_windows`` accumulator slots carried through the loop (scatter-add by the
+request's time-window id) instead of materializing ``[T]`` per-request
+outputs — memory is O(n_windows), not O(stream length), on the megabatch
+sweep path. A request's window is its *global* stream position ``g`` mapped
+to ``g * n_windows // T``; padding positions carry the out-of-range id
+``n_windows`` and are dropped by the scatter, so windowed counters count
+real requests only and are bit-identical across padding/bucketing choices.
+Whole-stream counters are still accumulated separately (pads included,
+corrected by :func:`correct_padded_stats` exactly as before), so windowed
+totals reconcile exactly: ``win_*.sum(-1)`` equals every corrected counter.
 """
 from __future__ import annotations
 
@@ -43,6 +55,8 @@ __all__ = [
     "run_stream",
     "run_distributed",
     "partition_streams",
+    "partition_window_ids",
+    "stream_window_ids",
     "correct_padded_stats",
 ]
 
@@ -134,7 +148,13 @@ class StoreState(NamedTuple):
 
 
 class StreamStats(NamedTuple):
-    """Aggregated counters for a processed request stream."""
+    """Aggregated counters for a processed request stream.
+
+    Scalar fields are whole-stream totals (padding included, exactly the
+    historic semantics); ``win_*`` fields resolve the same counters over
+    ``n_windows`` time windows of the stream (last axis; padding excluded
+    by construction, see the module docstring).
+    """
 
     requests: jnp.ndarray
     hits: jnp.ndarray
@@ -145,10 +165,22 @@ class StreamStats(NamedTuple):
     evictions: jnp.ndarray
     expert_use: jnp.ndarray      # int32[E] evictions issued per expert
     final_weights: jnp.ndarray   # f32[E]
+    # Windowed telemetry: int32[..., n_windows], real (unpadded) requests.
+    win_requests: jnp.ndarray
+    win_hits: jnp.ndarray
+    win_misses: jnp.ndarray
+    win_prefetch_hits: jnp.ndarray
+    win_tier2_reads: jnp.ndarray
+    win_tier2_writes: jnp.ndarray
+    win_evictions: jnp.ndarray
 
     @property
     def miss_rate(self):
         return self.misses / jnp.maximum(self.requests, 1)
+
+    @property
+    def n_windows(self) -> int:
+        return self.win_requests.shape[-1]
 
 
 def init_store(cfg: StoreConfig, seed: int = 0) -> StoreState:
@@ -268,21 +300,77 @@ def _step(cfg: StoreConfig, hyper: StoreHyper, state: StoreState, req):
     return StoreState(cache=cache, ols=ols, pf=pf, t=t + 1, key=key), out
 
 
-def _aggregate(outs, final: StoreState) -> StreamStats:
-    expert_use = jnp.stack(
-        [jnp.sum(outs["chosen"] == e) for e in range(ol.N_EXPERTS)]
-    ).astype(jnp.int32)
-    return StreamStats(
-        requests=outs["hit"].shape[0] + jnp.zeros((), jnp.int32),
-        hits=jnp.sum(outs["hit"]).astype(jnp.int32),
-        misses=jnp.sum(outs["miss"]).astype(jnp.int32),
-        prefetch_hits=jnp.sum(outs["prefetch_hit"]).astype(jnp.int32),
-        tier2_reads=jnp.sum(outs["tier2_read"]).astype(jnp.int32),
-        tier2_writes=jnp.sum(outs["tier2_write"]).astype(jnp.int32),
-        evictions=jnp.sum(outs["evict"]).astype(jnp.int32),
-        expert_use=expert_use,
-        final_weights=final.ols.weights,
+class _Accum(NamedTuple):
+    """Scan-carried counter accumulators: scalar whole-stream totals plus
+    ``n_windows`` windowed slots (pads scatter to the out-of-range id and
+    are dropped)."""
+
+    hits: jnp.ndarray
+    misses: jnp.ndarray
+    prefetch_hits: jnp.ndarray
+    tier2_reads: jnp.ndarray
+    tier2_writes: jnp.ndarray
+    evictions: jnp.ndarray
+    expert_use: jnp.ndarray      # int32[E]
+    win_requests: jnp.ndarray    # int32[W]
+    win_hits: jnp.ndarray
+    win_misses: jnp.ndarray
+    win_prefetch_hits: jnp.ndarray
+    win_tier2_reads: jnp.ndarray
+    win_tier2_writes: jnp.ndarray
+    win_evictions: jnp.ndarray
+
+
+def _init_accum(n_windows: int) -> _Accum:
+    zero = jnp.zeros((), jnp.int32)
+    zw = jnp.zeros((n_windows,), jnp.int32)
+    return _Accum(
+        hits=zero, misses=zero, prefetch_hits=zero, tier2_reads=zero,
+        tier2_writes=zero, evictions=zero,
+        expert_use=jnp.zeros((ol.N_EXPERTS,), jnp.int32),
+        win_requests=zw, win_hits=zw, win_misses=zw, win_prefetch_hits=zw,
+        win_tier2_reads=zw, win_tier2_writes=zw, win_evictions=zw,
     )
+
+
+def _fold(acc: _Accum, out: dict, win: jnp.ndarray) -> _Accum:
+    """Fold one request's outcome into the accumulators. ``win`` is the
+    request's window id; ``win == n_windows`` (padding) drops out of the
+    windowed scatter but still counts toward the scalar totals."""
+    hit = out["hit"].astype(jnp.int32)
+    miss = out["miss"].astype(jnp.int32)
+    pfh = out["prefetch_hit"].astype(jnp.int32)
+    t2r = out["tier2_read"].astype(jnp.int32)
+    t2w = out["tier2_write"].astype(jnp.int32)
+    ev = out["evict"].astype(jnp.int32)
+    expert = jnp.where(out["evict"], out["chosen"], 0)
+    return _Accum(
+        hits=acc.hits + hit,
+        misses=acc.misses + miss,
+        prefetch_hits=acc.prefetch_hits + pfh,
+        tier2_reads=acc.tier2_reads + t2r,
+        tier2_writes=acc.tier2_writes + t2w,
+        evictions=acc.evictions + ev,
+        expert_use=acc.expert_use.at[expert].add(ev),
+        win_requests=acc.win_requests.at[win].add(1, mode="drop"),
+        win_hits=acc.win_hits.at[win].add(hit, mode="drop"),
+        win_misses=acc.win_misses.at[win].add(miss, mode="drop"),
+        win_prefetch_hits=acc.win_prefetch_hits.at[win].add(pfh, mode="drop"),
+        win_tier2_reads=acc.win_tier2_reads.at[win].add(t2r, mode="drop"),
+        win_tier2_writes=acc.win_tier2_writes.at[win].add(t2w, mode="drop"),
+        win_evictions=acc.win_evictions.at[win].add(ev, mode="drop"),
+    )
+
+
+def stream_window_ids(n: int, n_windows: int) -> np.ndarray:
+    """Window id per stream position: position ``g`` of an ``n``-long stream
+    belongs to window ``g * n_windows // n`` (equal request-count slices of
+    the global timeline)."""
+    if n_windows < 1:
+        raise ValueError("n_windows must be >= 1")
+    if n == 0:
+        return np.zeros(0, np.int32)
+    return (np.arange(n, dtype=np.int64) * n_windows // n).astype(np.int32)
 
 
 def run_stream(
@@ -293,6 +381,8 @@ def run_stream(
     seed: int = 0,
     hyper: Optional[StoreHyper] = None,
     unroll: int = 1,
+    n_windows: int = 1,
+    window_ids: Optional[jnp.ndarray] = None,
 ) -> StreamStats:
     """Process a request stream through one tier-1 shard. Jitted scan.
 
@@ -302,24 +392,55 @@ def run_stream(
     shapes the computation. ``unroll`` chunks the per-request scan body
     (semantics-preserving; larger values trade compile time for fewer loop
     iterations on wide batches).
+
+    ``n_windows`` resolves the counters over time windows (carried
+    accumulators — O(n_windows) memory, no per-request outputs).
+    ``window_ids`` assigns each position its window explicitly (int32[T],
+    values in [0, n_windows]; ``n_windows`` marks padding, dropped from the
+    windowed counters); by default positions are equal slices of this
+    stream's own length.
     """
     pages = jnp.asarray(pages, jnp.int32)
     is_write = jnp.asarray(is_write, bool)
     if hyper is None:
         hyper = cfg.hyper()
+    if window_ids is None:
+        window_ids = stream_window_ids(pages.shape[0], n_windows)
+    window_ids = jnp.asarray(window_ids, jnp.int32)
 
-    def scan_fn(state, req):
-        return _step(cfg, hyper, state, req)
+    def scan_fn(carry, req):
+        state, acc = carry
+        page, write, win = req
+        state, out = _step(cfg, hyper, state, (page, write))
+        return (state, _fold(acc, out, win)), None
 
-    state0 = init_store(cfg, seed)
-    final, outs = jax.lax.scan(
-        scan_fn, state0, (pages, is_write), unroll=unroll
+    carry0 = (init_store(cfg, seed), _init_accum(n_windows))
+    (final, acc), _ = jax.lax.scan(
+        scan_fn, carry0, (pages, is_write, window_ids), unroll=unroll
     )
-    return _aggregate(outs, final)
+    return StreamStats(
+        requests=pages.shape[0] + jnp.zeros((), jnp.int32),
+        hits=acc.hits,
+        misses=acc.misses,
+        prefetch_hits=acc.prefetch_hits,
+        tier2_reads=acc.tier2_reads,
+        tier2_writes=acc.tier2_writes,
+        evictions=acc.evictions,
+        expert_use=acc.expert_use,
+        final_weights=final.ols.weights,
+        win_requests=acc.win_requests,
+        win_hits=acc.win_hits,
+        win_misses=acc.win_misses,
+        win_prefetch_hits=acc.win_prefetch_hits,
+        win_tier2_reads=acc.win_tier2_reads,
+        win_tier2_writes=acc.win_tier2_writes,
+        win_evictions=acc.win_evictions,
+    )
 
 
 run_stream_jit = jax.jit(
-    run_stream, static_argnums=0, static_argnames=("seed", "unroll")
+    run_stream, static_argnums=0,
+    static_argnames=("seed", "unroll", "n_windows"),
 )
 
 
@@ -331,6 +452,7 @@ def partition_streams(
     mapping: str = "block",
     n_pages: Optional[int] = None,
     cap: Optional[int] = None,
+    n_windows: Optional[int] = None,
 ):
     """Partition a request stream into per-shard substreams (§III mapping).
 
@@ -338,7 +460,9 @@ def partition_streams(
     with repeats of its own last page — pure hits, so every counter except
     ``requests``/``hits`` is unaffected and those two are correctable from
     the pad length. Returns ``(sh_pages [S, cap], sh_writes [S, cap],
-    counts [S], owner [n])``.
+    counts [S], owner [n])``; with ``n_windows`` set, additionally returns
+    ``sh_win [S, cap]`` window ids (see :func:`partition_window_ids`) as a
+    fifth element, reusing this call's shard sort instead of re-sorting.
     """
     pages = np.asarray(pages)
     is_write = np.asarray(is_write, bool)
@@ -350,16 +474,69 @@ def partition_streams(
     cap = int(cap if cap is not None else max(int(counts.max()), 1))
     if cap < counts.max():
         raise ValueError(f"cap={cap} < max shard load {int(counts.max())}")
+    # Argsort-based scatter (stable sort preserves per-shard request order):
+    # request j lands at row owner[j], column = its rank within its shard.
+    order, row, col = _shard_positions(owner, counts)
     sh_pages = np.zeros((n_shards, cap), np.int32)
     sh_writes = np.zeros((n_shards, cap), bool)
-    for s in range(n_shards):
-        sel = owner == s
-        k = int(sel.sum())
-        if k:
-            sh_pages[s, :k] = pages[sel]
-            sh_writes[s, :k] = is_write[sel]
-            sh_pages[s, k:] = pages[sel][-1]
-    return sh_pages, sh_writes, counts, owner
+    sh_pages[row, col] = pages[order]
+    sh_writes[row, col] = is_write[order]
+    # Pad each shard with its own last page — pure hits (empty shards keep
+    # page 0, whose first access is the phantom miss correct_padded_stats
+    # zeroes out).
+    last = sh_pages[np.arange(n_shards), np.maximum(counts - 1, 0)]
+    pad = np.arange(cap)[None, :] >= counts[:, None]
+    sh_pages = np.where(pad, last[:, None], sh_pages)
+    if n_windows is None:
+        return sh_pages, sh_writes, counts, owner
+    sh_win = _scatter_window_ids(owner, n_shards, n_windows, cap,
+                                 order, row, col)
+    return sh_pages, sh_writes, counts, owner, sh_win
+
+
+def _shard_positions(owner: np.ndarray, counts: np.ndarray):
+    """(order, row, col) scatter coordinates: the stable shard-sort of the
+    request indices (original order preserved within each shard), and for
+    each sorted request its owning shard and rank within that shard."""
+    order = np.argsort(owner, kind="stable")
+    starts = np.concatenate(([0], np.cumsum(counts)[:-1]))
+    row = owner[order]
+    col = np.arange(owner.shape[0]) - starts[row]
+    return order, row, col
+
+
+def _scatter_window_ids(
+    owner, n_shards: int, n_windows: int, cap: int, order, row, col
+) -> np.ndarray:
+    """Scatter global window ids to per-shard positions (pads keep the
+    dropped id ``n_windows``) using precomputed shard-sort coordinates."""
+    gwin = stream_window_ids(owner.shape[0], n_windows)
+    sh_win = np.full((n_shards, cap), n_windows, np.int32)
+    sh_win[row, col] = gwin[order]
+    return sh_win
+
+
+def partition_window_ids(
+    owner: np.ndarray,
+    counts: np.ndarray,
+    cap: int,
+    n_windows: int,
+) -> np.ndarray:
+    """Per-shard window-id arrays aligned with :func:`partition_streams`.
+
+    Returns int32 ``[n_shards, cap]``: real positions carry their request's
+    *global* time window (``g * n_windows // n`` for global position ``g``),
+    padding positions carry the out-of-range id ``n_windows`` so the
+    engine's windowed scatter drops them. Windowed counters are therefore
+    independent of padding/bucketing choices. (The internal partitioning
+    paths use ``partition_streams(..., n_windows=)`` instead, which reuses
+    one shard sort for streams and window ids.)
+    """
+    owner = np.asarray(owner)
+    counts = np.asarray(counts)
+    order, row, col = _shard_positions(owner, counts)
+    return _scatter_window_ids(owner, counts.shape[0], n_windows, cap,
+                               order, row, col)
 
 
 def correct_padded_stats(stats: StreamStats, counts, cap: int) -> StreamStats:
@@ -367,7 +544,12 @@ def correct_padded_stats(stats: StreamStats, counts, cap: int) -> StreamStats:
     (see :func:`partition_streams`): padded requests are pure hits on each
     shard's last page (subtracted from ``hits``), and a shard with no real
     requests ran a pure-padding stream whose first access is a phantom
-    miss (all its counters are zeroed)."""
+    miss (all its counters are zeroed).
+
+    The windowed counters need no correction at all: real requests carry
+    their own window ids, pads (including the whole stream of an empty
+    shard, phantom miss included) scatter to the dropped out-of-range id,
+    so per-window counters already count exactly the real requests."""
     pad = jnp.asarray(cap - np.asarray(counts), jnp.int32)
     nonempty = jnp.asarray(np.asarray(counts) > 0)
     zero = jnp.zeros((), jnp.int32)
@@ -391,6 +573,7 @@ def run_distributed(
     mapping: str = "block",
     n_pages: Optional[int] = None,
     seed: int = 0,
+    n_windows: int = 1,
 ):
     """Distributed tier-1 cache: requests partitioned to per-shard caches by
     the §III mapping policy, shards processed by ``vmap`` (the paper's
@@ -398,12 +581,17 @@ def run_distributed(
 
     Returns ``(per_shard_stats, shard_request_counts)``; per-shard stats are
     padded streams, so counters are exact but ``requests`` reflects real
-    (unpadded) request counts.
+    (unpadded) request counts. ``n_windows`` resolves every counter over
+    equal time windows of the *global* request stream (``win_*`` fields,
+    shape ``[n_shards, n_windows]``).
     """
-    sh_pages, sh_writes, counts, _ = partition_streams(
-        pages, is_write, n_shards=n_shards, mapping=mapping, n_pages=n_pages
+    sh_pages, sh_writes, counts, owner, sh_win = partition_streams(
+        pages, is_write, n_shards=n_shards, mapping=mapping, n_pages=n_pages,
+        n_windows=n_windows,
     )
-    stats = jax.vmap(lambda p, w: run_stream(cfg, p, w, seed=seed))(
-        jnp.asarray(sh_pages), jnp.asarray(sh_writes)
-    )
+    stats = jax.vmap(
+        lambda p, w, wi: run_stream(
+            cfg, p, w, seed=seed, n_windows=n_windows, window_ids=wi
+        )
+    )(jnp.asarray(sh_pages), jnp.asarray(sh_writes), jnp.asarray(sh_win))
     return correct_padded_stats(stats, counts, sh_pages.shape[1]), counts

@@ -83,3 +83,162 @@ def test_overload_flagged_unstable():
 def test_system_rate_harmonic_bounds():
     mu = system_service_rate(1000.0, 33.0, 0.2)
     assert 33.0 < mu < 1000.0
+
+
+# --- vectorized formulas vs the scalar reference ---------------------------
+#
+# Independent scalar reimplementations of the closed forms (the pre-refactor
+# float-math code), used as golden references for the numpy-vectorized
+# implementations on randomized stable/unstable/idle inputs.
+
+
+def _ref_mm1(lam, mu):
+    if lam <= 0.0:
+        return (0.0, 1.0, 0.0, 0.0, 0.0, 1.0 / mu, True)
+    rho = lam / mu
+    if rho >= 1.0:
+        return (rho, 0.0, math.inf, math.inf, math.inf, math.inf, False)
+    lq = rho * rho / (1.0 - rho)
+    l = rho / (1.0 - rho)
+    return (rho, 1.0 - rho, lq, l, lq / lam, l / lam, True)
+
+
+def _ref_mmk(lam, mu, k):
+    if lam <= 0.0:
+        return (0.0, 1.0, 0.0, 0.0, 0.0, 1.0 / mu, True)
+    a = lam / mu
+    rho = a / k
+    if rho >= 1.0:
+        return (rho, 0.0, math.inf, math.inf, math.inf, math.inf, False)
+    s = sum(a**i / math.factorial(i) for i in range(k))
+    s += a**k / (math.factorial(k) * (1.0 - a / k))
+    p0 = 1.0 / s
+    lq = p0 * a ** (k + 1) / (math.factorial(k - 1) * (k - a) ** 2)
+    l = lq + a
+    return (rho, p0, lq, l, lq / lam, l / lam, True)
+
+
+def _ref_mgk(lam, mean_s, var_s, k):
+    base = _ref_mmk(lam, 1.0 / mean_s, k)
+    if not base[-1] or lam <= 0.0:
+        return base
+    cs2 = var_s / (mean_s * mean_s)
+    lq = base[2] * (1.0 + cs2) / 2.0
+    l = lq + lam * mean_s
+    return (base[0], base[1], lq, l, lq / lam, l / lam, True)
+
+
+def _rand_rates(rng, n):
+    """Arrival/service grids spanning idle, stable and saturated regimes."""
+    lam = rng.uniform(-1.0, 30.0, size=n)  # negatives exercise the idle path
+    lam[rng.random(n) < 0.15] = 0.0
+    mu = rng.uniform(0.5, 20.0, size=n)
+    return lam, mu
+
+
+def _assert_matches_ref(vec, refs):
+    for field, got in zip(vec._fields, vec):
+        want = np.asarray([r[vec._fields.index(field)] for r in refs])
+        np.testing.assert_allclose(
+            np.asarray(got, float), np.asarray(want, float),
+            rtol=1e-12, atol=0.0, err_msg=field)
+
+
+def test_mm1_vectorized_matches_scalar_reference():
+    rng = np.random.default_rng(0)
+    lam, mu = _rand_rates(rng, 200)
+    vec = mm1_queue(lam, mu)
+    refs = [_ref_mm1(la, m) for la, m in zip(lam, mu)]
+    _assert_matches_ref(vec, refs)
+    assert not np.asarray(vec.stable).all()  # grid really spans both regimes
+    assert np.asarray(vec.stable).any()
+
+
+@pytest.mark.parametrize("k", [1, 2, 4, 7])
+def test_mmk_vectorized_matches_scalar_reference(k):
+    rng = np.random.default_rng(k)
+    lam, mu = _rand_rates(rng, 200)
+    vec = mmk_queue(lam, mu, k)
+    refs = [_ref_mmk(la, m, k) for la, m in zip(lam, mu)]
+    _assert_matches_ref(vec, refs)
+
+
+@pytest.mark.parametrize("k", [1, 3])
+def test_mgk_vectorized_matches_scalar_reference(k):
+    rng = np.random.default_rng(10 + k)
+    lam, mu = _rand_rates(rng, 150)
+    mean_s = 1.0 / mu
+    var_s = rng.uniform(0.0, 3.0, size=150) * mean_s**2
+    vec = mgk_queue(lam, mean_s, var_s, k)
+    refs = [_ref_mgk(la, m, v, k)
+            for la, m, v in zip(lam, mean_s, var_s)]
+    _assert_matches_ref(vec, refs)
+
+
+def test_vectorized_two_tier_matches_scalar_loop():
+    """TwoTierModel over [points] arrays == a Python loop of scalar models."""
+    rng = np.random.default_rng(42)
+    n = 64
+    lam = rng.uniform(1.0, 300.0, size=n)
+    mu1 = rng.uniform(200.0, 2000.0, size=n)
+    mu2 = rng.uniform(5.0, 60.0, size=n)
+    p12 = rng.uniform(0.0, 1.0, size=n)
+    for flow in ("paper", "conserving"):
+        vec = TwoTierModel(lam=lam, mu1=mu1, mu2=mu2, p12=p12,
+                           flow=flow).analyze()
+        vs = vec.summary()
+        for i in range(n):
+            ref = TwoTierModel(lam=float(lam[i]), mu1=float(mu1[i]),
+                               mu2=float(mu2[i]), p12=float(p12[i]),
+                               flow=flow).analyze()
+            rs = ref.summary()
+            for key in ("lam_eff", "rho1", "rho2", "L1", "W1", "L2", "W2",
+                        "mu_system", "rho_system", "equilibrium"):
+                np.testing.assert_allclose(
+                    np.asarray(vs[key])[i], rs[key], rtol=1e-12,
+                    err_msg=f"{flow}:{key}[{i}]")
+
+
+def test_mixed_var_s1_dispatches_elementwise():
+    """Regression: an array var_s1 mixing zeros and positives must apply
+    M/M/k to the zero-variance elements (docstring contract: 0 =>
+    exponential), not Allen-Cunneen with C_s^2 = 0."""
+    lam = np.array([50.0, 50.0])
+    mu1 = np.array([500.0, 500.0])
+    mixed = TwoTierModel(lam=lam, mu1=mu1, mu2=30.0, p12=0.2, k=2,
+                         var_s1=np.array([0.0, 1e-5])).analyze()
+    pure_mmk = TwoTierModel(lam=50.0, mu1=500.0, mu2=30.0, p12=0.2, k=2,
+                            var_s1=0.0).analyze()
+    pure_mgk = TwoTierModel(lam=50.0, mu1=500.0, mu2=30.0, p12=0.2, k=2,
+                            var_s1=1e-5).analyze()
+    assert np.asarray(mixed.q1.lq)[0] == pytest.approx(pure_mmk.q1.lq)
+    assert np.asarray(mixed.q1.lq)[1] == pytest.approx(pure_mgk.q1.lq)
+    assert np.asarray(mixed.q1.stable).dtype == bool
+    # Regression: scalar lam with a wider var_s1 array must broadcast, not
+    # crash in the scalar/array output dispatch.
+    wide = TwoTierModel(lam=50.0, mu1=500.0, mu2=30.0, p12=0.2, k=2,
+                        var_s1=np.array([0.0, 1e-5])).analyze()
+    assert np.asarray(wide.q1.lq).shape == (2,)
+    assert np.asarray(wide.q1.lq)[0] == pytest.approx(pure_mmk.q1.lq)
+    assert np.asarray(wide.q1.lq)[1] == pytest.approx(pure_mgk.q1.lq)
+    direct = mgk_queue(50.0, 0.002, np.array([1e-5, 2e-5]), 2)
+    assert np.asarray(direct.lq).shape == (2,)
+
+
+def test_scalar_inputs_return_plain_floats():
+    q = mm1_queue(3.0, 5.0)
+    assert all(isinstance(v, float) for v in q[:-1])
+    assert isinstance(q.stable, bool)
+    q = mmk_queue(0.0, 5.0, 3)
+    assert isinstance(q.w, float) and q.w == 0.2
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(lam=st.floats(0.0, 100.0), mu=st.floats(0.1, 50.0),
+           k=st.integers(1, 6))
+    @settings(max_examples=60, deadline=None)
+    def test_mmk_fuzz_matches_reference(lam, mu, k):
+        vec = mmk_queue(np.asarray([lam]), np.asarray([mu]), k)
+        ref = _ref_mmk(lam, mu, k)
+        _assert_matches_ref(vec, [ref])

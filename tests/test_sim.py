@@ -103,6 +103,38 @@ def test_report_json_round_trip():
     assert back["min_time"]["t_total"] == pytest.approx(rep.t_total_s)
 
 
+def test_report_to_dict_is_plain_python():
+    """Regression (ISSUE 4 satellite): SimReport.to_dict must emit plain
+    Python values — np.int64/np.float64/np.bool_ used to leak through, so
+    json.dumps without a default= hook is the gate."""
+    spec = WORKED.replace(
+        p12_override=None, n_windows=3,
+        rates=RateSpec(source="paper",
+                       mu1_shards=(4000.0, 2000.0, 1000.0, 500.0)),
+    )
+    d = simulate(spec).to_dict()
+    json.dumps(d)  # raises TypeError on any leaked numpy scalar/array
+
+    def walk(x, path="root"):
+        if isinstance(x, dict):
+            for k, v in x.items():
+                assert type(k) is str, f"non-str key at {path}: {type(k)}"
+                walk(v, f"{path}.{k}")
+        elif isinstance(x, list):
+            for i, v in enumerate(x):
+                walk(v, f"{path}[{i}]")
+        else:
+            assert x is None or type(x) in (bool, int, float, str), (
+                f"non-plain value at {path}: {type(x)}")
+
+    walk(d)
+    # Windowed / transient sections are present and list-typed.
+    assert len(d["transient"]["rho2"]) == 3
+    assert len(d["windows"]["requests"]) == spec.n_shards
+    assert all(s["saturation_onset"] is None or
+               isinstance(s["saturation_onset"], int) for s in d["shards"])
+
+
 def test_expand_grid():
     pts = expand_grid({"a": [1, 2], "b": ["x", "y", "z"]})
     assert len(pts) == 6
@@ -279,6 +311,17 @@ def test_saturated_tier1_with_zero_p12_is_inf_not_nan():
     assert not rep.equilibrium
     assert math.isinf(rep.response_s)
     assert all(math.isinf(s.response_s) for s in rep.shards)
+
+
+def test_zero_offered_rate_is_idle_not_crash():
+    """Regression: lam=0 (idle system) must produce a finite idle report,
+    not a ZeroDivisionError in the window-duration computation."""
+    rep = simulate(WORKED.replace(lam=0.0, n_windows=4))
+    assert rep.equilibrium
+    assert rep.window_duration_s == 0.0
+    assert np.asarray(rep.windows.lam).max() == 0.0
+    assert rep.saturation_onset is None
+    assert math.isfinite(rep.response_s)
 
 
 def test_user_trace_input():

@@ -41,6 +41,13 @@ def _assert_reports_equal(a, b, ctx):
                      "tier2_writes", "evictions"):
             av, bv = getattr(sa, name), getattr(sb, name)
             assert av == bv, f"{ctx} shard {sa.shard}: {name} {av} != {bv}"
+    # Windowed telemetry is bit-exact across paths too (window ids ride the
+    # global stream position, independent of padding buckets).
+    for name in a.windows._fields:
+        av = np.asarray(getattr(a.windows, name))
+        bv = np.asarray(getattr(b.windows, name))
+        np.testing.assert_array_equal(av, bv,
+                                      err_msg=f"{ctx}: windows.{name}")
 
 
 def test_all_policies_and_mappings_match_unbatched():
@@ -91,6 +98,41 @@ def test_traced_knob_axes_share_one_compile():
     for pt, rep in zip(res.points, res.reports):
         miss_by_policy.setdefault(pt["store.policy"], set()).add(rep.misses)
     assert len({frozenset(v) for v in miss_by_policy.values()}) > 1
+
+
+def test_windowed_sweep_matches_unbatched():
+    """n_windows > 1 through the megabatch path: every windowed counter
+    equals the per-point reference bit for bit, across ragged buckets."""
+    base = BASE.replace(n_windows=6)
+    axes = {
+        "traffic.n_requests": [60, 300, 700],
+        "store.policy": ["ws", "lru"],
+    }
+    a = sweep(base, axes, batch=True)
+    b = sweep(base, axes, batch=False)
+    for pt, ra, rb in zip(a.points, a.reports, b.reports):
+        _assert_reports_equal(ra, rb, str(pt))
+        assert ra.n_windows == 6
+
+
+def test_n_windows_axis_adds_no_compiles():
+    """A traced-knob grid at fixed n_windows compiles once; repeating the
+    sweep serves everything from the compile cache (the window-id operand
+    is data, not structure)."""
+    spec = BASE.replace(**{"traffic.seed": 13, "n_windows": 4})
+    axes = {
+        "store.policy": ALL_POLICIES,
+        "store.alpha": [0.25, 0.75],
+        "store.beta": [0.6, 0.9],
+    }
+    reset_engine_compile_count()
+    sweep(spec, axes)
+    first = engine_compile_count()
+    assert first <= 2  # the bench_sweep compile gate, windowed
+    reset_engine_compile_count()
+    res = sweep(spec, axes)
+    assert engine_compile_count() == 0
+    assert all(rep.n_windows == 4 for rep in res.reports)
 
 
 def test_bucket_cap_powers_of_two():

@@ -1,0 +1,285 @@
+"""Time-resolved pipeline (ISSUE 4): windowed engine telemetry, transient
+queuing solves and non-stationary traffic.
+
+The reconciliation tests are the load-bearing ones: windowed counters must
+sum *exactly* (bit-exact integer arithmetic) to the whole-stream counters
+for every policy x mapping x prefetch combination, on both the direct and
+the distributed/padded paths.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.mapping import MAPPING_POLICIES
+from repro.core.queuing import transient_two_tier
+from repro.core.traffic import (
+    TrafficSpec,
+    make_stream,
+    onoff_stream,
+    phase_schedule,
+    phased_stream,
+)
+from repro.sim import RateSpec, SimSpec, simulate
+from repro.storage.tiered_store import (
+    POLICY_TO_IDX,
+    StoreConfig,
+    partition_streams,
+    partition_window_ids,
+    run_distributed,
+    run_stream,
+    stream_window_ids,
+)
+
+ALL_POLICIES = sorted(POLICY_TO_IDX)
+ALL_MAPPINGS = sorted(MAPPING_POLICIES)
+WINDOWED = [
+    ("requests", "win_requests"),
+    ("hits", "win_hits"),
+    ("misses", "win_misses"),
+    ("prefetch_hits", "win_prefetch_hits"),
+    ("tier2_reads", "win_tier2_reads"),
+    ("tier2_writes", "win_tier2_writes"),
+    ("evictions", "win_evictions"),
+]
+
+
+def _assert_windows_reconcile(stats, *, requests=None):
+    """Every windowed counter sums (over the window axis) to its
+    whole-stream counterpart, exactly."""
+    for total_name, win_name in WINDOWED:
+        total = np.asarray(getattr(stats, total_name), np.int64)
+        win = np.asarray(getattr(stats, win_name), np.int64)
+        np.testing.assert_array_equal(
+            win.sum(axis=-1), total,
+            err_msg=f"{win_name} does not sum to {total_name}",
+        )
+    if requests is not None:
+        assert int(np.asarray(stats.requests).sum()) == requests
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+@pytest.mark.parametrize("prefetch", [False, True])
+def test_single_shard_windows_reconcile(policy, prefetch):
+    spec = TrafficSpec(kind="mixed", n_requests=600, n_pages=128,
+                       write_fraction=0.3, seed=11)
+    pages, writes = make_stream(spec)
+    cfg = StoreConfig(n_lines=32, policy=policy, prefetch=prefetch)
+    st = run_stream(cfg, pages, writes, n_windows=7)
+    _assert_windows_reconcile(st, requests=600)
+    # Window ids partition the stream into near-equal slices.
+    np.testing.assert_array_equal(
+        np.asarray(st.win_requests),
+        np.bincount(stream_window_ids(600, 7), minlength=7),
+    )
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+@pytest.mark.parametrize("mapping", ALL_MAPPINGS)
+@pytest.mark.parametrize("prefetch", [False, True])
+def test_distributed_windows_reconcile(policy, mapping, prefetch):
+    """Windowed totals are bit-exact with the (padding-corrected)
+    whole-stream counters for every policy x mapping x prefetch combo."""
+    pages, writes = make_stream(TrafficSpec(
+        kind="irm", n_requests=500, n_pages=96, write_fraction=0.25, seed=3))
+    stats, counts = run_distributed(
+        StoreConfig(n_lines=16, policy=policy, prefetch=prefetch),
+        pages, writes, n_shards=4, mapping=mapping, n_pages=96, n_windows=5,
+    )
+    _assert_windows_reconcile(stats, requests=500)
+    # Each global window holds an equal slice of the stream (summed over
+    # shards), regardless of how the mapping skews per-shard load.
+    np.testing.assert_array_equal(
+        np.asarray(stats.win_requests).sum(axis=0),
+        np.bincount(stream_window_ids(500, 5), minlength=5),
+    )
+
+
+def test_windows_independent_of_padding_cap():
+    """Window ids ride the global stream position, so windowed counters are
+    bit-identical whatever padded cap the engine ran at."""
+    pages, writes = make_stream(TrafficSpec(
+        kind="poisson", n_requests=300, n_pages=64, write_fraction=0.2,
+        seed=9))
+    sh_p, sh_w, counts, owner = partition_streams(
+        pages, writes, n_shards=3, mapping="random", n_pages=64)
+    base_cap = sh_p.shape[1]
+    results = []
+    for cap in (base_cap, 2 * base_cap):
+        sh_p2, sh_w2, c2, o2 = partition_streams(
+            pages, writes, n_shards=3, mapping="random", n_pages=64, cap=cap)
+        wi = partition_window_ids(o2, c2, cap, 4)
+        import jax
+        import jax.numpy as jnp
+        stats = jax.vmap(
+            lambda p, w, i: run_stream(
+                StoreConfig(n_lines=16, policy="lru"), p, w,
+                n_windows=4, window_ids=i)
+        )(jnp.asarray(sh_p2), jnp.asarray(sh_w2), jnp.asarray(wi))
+        results.append(stats)
+    for _, win_name in WINDOWED:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(results[0], win_name)),
+            np.asarray(getattr(results[1], win_name)),
+            err_msg=f"{win_name} depends on the padding cap",
+        )
+
+
+def test_simulate_windowed_report():
+    spec = SimSpec(
+        traffic=TrafficSpec(kind="irm", n_requests=1200, n_pages=256,
+                            write_fraction=0.3, seed=7),
+        store=StoreConfig(n_lines=64, policy="ws"),
+        n_shards=4, lam=100.0, rates=RateSpec(source="paper"), n_windows=6,
+    )
+    rep = simulate(spec)
+    assert rep.n_windows == 6
+    assert rep.windows.requests.shape == (4, 6)
+    # The report's window series reconciles with the per-shard totals.
+    for total_name, _ in WINDOWED:
+        totals = np.array([getattr(s, total_name) for s in rep.shards])
+        win = np.asarray(getattr(rep.windows, total_name))
+        np.testing.assert_array_equal(win.sum(axis=-1), totals,
+                                      err_msg=total_name)
+    # Window durations tile the stream's arrival span.
+    assert rep.window_duration_s * 6 == pytest.approx(
+        rep.requests / (spec.lam * spec.n_shards))
+    # The pooled per-process arrival rate is ~lam in every window (equal
+    # request-count windows by construction).
+    np.testing.assert_allclose(
+        rep.windows.lam.sum(axis=0) / spec.n_shards,
+        np.full(6, spec.lam), rtol=0.05)
+    # n_windows=1 degenerates to the historic steady-state-only report.
+    rep1 = simulate(spec.replace(n_windows=1))
+    assert rep1.transient.response.shape == (1,)
+    assert rep1.misses == rep.misses
+
+
+def test_warmup_curve_converges_to_steady_state():
+    """Cold-cache warm-up: early windows miss more than late ones, and the
+    tail-window transient response matches a steady-state solve at the
+    tail-window miss fraction."""
+    spec = SimSpec(
+        traffic=TrafficSpec(kind="markov", n_requests=4000, n_pages=256,
+                            n_hot_states=24, seed=5),
+        store=StoreConfig(n_lines=64, policy="lru"),
+        n_shards=2, lam=40.0, rates=RateSpec(source="paper"), n_windows=8,
+        mapping="block_cyclic",
+    )
+    rep = simulate(spec)
+    p12_w = np.asarray(rep.transient.p12)
+    assert p12_w[0] > p12_w[-1]  # cold start misses more
+    # Tail windows have settled: late-window p12 is near the tail mean.
+    tail = p12_w[4:]
+    assert abs(p12_w[-1] - tail.mean()) < 0.05
+    # Piecewise-stationarity: re-solving the network at the tail window's
+    # measured inputs reproduces the tail transient entry exactly.
+    tr = transient_two_tier(
+        np.asarray(rep.transient.lam)[-1:], p12_w[-1:],
+        rep.rates.mu1, rep.rates.mu2, k=spec.k_servers, flow=spec.flow)
+    assert float(tr.response[0]) == pytest.approx(
+        float(np.asarray(rep.transient.response)[-1]))
+
+
+def test_saturation_onset_detection():
+    """A phase schedule whose second phase drives the miss queue past
+    rho2 = 1 reports the onset at the phase boundary window."""
+    warm = TrafficSpec(kind="strided", n_requests=800, n_pages=64, stride=1,
+                       seed=1)
+    cold = TrafficSpec(kind="irm", n_requests=800, n_pages=4096, zipf_s=0.8,
+                       seed=2)
+    spec = SimSpec(
+        traffic=phase_schedule(warm, cold),
+        store=StoreConfig(n_lines=64, policy="lru"),
+        n_shards=2, lam=50.0, rates=RateSpec(source="paper"),
+        mapping="block_cyclic", n_windows=8,
+    )
+    rep = simulate(spec)
+    assert rep.saturation_onset == 4  # windows 0-3 = warm phase, 4+ = cold
+    stable = np.asarray(rep.transient.stable)
+    assert stable[:4].all() and not stable[4:].all()
+    assert np.isinf(np.asarray(rep.transient.response)[4])
+    # A uniformly stable scenario reports no onset.
+    calm = simulate(SimSpec(
+        traffic=warm, store=StoreConfig(n_lines=64, policy="lru"),
+        n_shards=2, lam=50.0, rates=RateSpec(source="paper"),
+        mapping="block_cyclic", n_windows=4))
+    assert calm.saturation_onset is None
+
+
+def test_windowed_report_json_serializable():
+    rep = simulate(SimSpec(
+        traffic=TrafficSpec(kind="onoff", n_requests=400, n_pages=128,
+                            seed=1, on_len=32, off_len=96),
+        store=StoreConfig(n_lines=16, policy="ws"),
+        n_shards=2, lam=30.0, rates=RateSpec(source="paper"), n_windows=4))
+    d = rep.to_dict()
+    back = json.loads(json.dumps(d))  # no default= hook: plain Python only
+    assert back["n_windows"] == 4
+    assert len(back["transient"]["response"]) == 4
+    assert len(back["windows"]["misses"]) == 2
+    assert back["spec"]["n_windows"] == 4
+
+
+# --- non-stationary traffic ------------------------------------------------
+
+
+def test_phase_schedule_composition():
+    a = TrafficSpec(kind="irm", n_requests=300, n_pages=64, seed=1)
+    b = TrafficSpec(kind="markov", n_requests=200, n_pages=256,
+                    write_fraction=1.0, seed=2)
+    sched = phase_schedule(a, b)
+    assert sched.kind == "phased"
+    assert sched.n_requests == 500 and sched.n_pages == 256
+    hash(sched)  # specs stay hashable (sweep dedup requires it)
+    pages, writes = make_stream(sched)
+    assert pages.shape == (500,) and pages.dtype == np.int32
+    ref_a, _ = make_stream(a)
+    np.testing.assert_array_equal(pages[:300], ref_a)
+    assert not writes[:300].any() and writes[300:].all()
+
+
+def test_phase_schedule_validation():
+    with pytest.raises(ValueError):
+        phase_schedule()
+    with pytest.raises(ValueError):
+        phased_stream([])
+    bad = TrafficSpec(kind="phased", n_requests=999, n_pages=64,
+                      phases=(TrafficSpec(kind="irm", n_requests=10,
+                                          n_pages=64),))
+    with pytest.raises(ValueError):
+        make_stream(bad)
+    with pytest.raises(ValueError):
+        make_stream(TrafficSpec(kind="phased", n_requests=10, n_pages=64))
+
+
+def test_onoff_burst_modulation():
+    pages, writes = onoff_stream(1000, 512, on_len=50, off_len=150,
+                                 burst_pages=16, write_fraction=0.1, seed=0)
+    assert pages.shape == (1000,)
+    # Burst stretches are sequential writes over the hot checkpoint range.
+    for start in (150, 350, 550, 750):
+        assert writes[start:start + 50].all()
+        assert pages[start:start + 50].max() < 16
+    # Background stretches span the whole page space with few writes.
+    bg = writes[:150]
+    assert bg.mean() < 0.5
+    assert pages[:150].max() >= 16
+    with pytest.raises(ValueError):
+        onoff_stream(100, 64, on_len=0, off_len=0)
+
+
+def test_onoff_windows_shift_write_mix():
+    """Windows aligned with bursts see a different write mix — the signal
+    the windowed report exists to resolve."""
+    spec = SimSpec(
+        traffic=TrafficSpec(kind="onoff", n_requests=800, n_pages=256,
+                            seed=3, on_len=100, off_len=100, burst_pages=8),
+        store=StoreConfig(n_lines=32, policy="lru"),
+        n_shards=1, lam=20.0, rates=RateSpec(source="paper"), n_windows=8,
+    )
+    rep = simulate(spec)
+    t2w = np.asarray(rep.windows.tier2_writes).sum(axis=0)
+    assert t2w.sum() == rep.tier2_writes
+    p12_w = np.asarray(rep.transient.p12)
+    assert p12_w.std() > 0.05  # bursts visibly modulate the miss fraction
