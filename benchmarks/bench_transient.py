@@ -1,0 +1,310 @@
+"""Wall-clock transient benchmark: fluid-vs-piecewise burst accuracy,
+timestamped-sweep compile behavior and vectorized fluid-solve throughput.
+
+  PYTHONPATH=src python benchmarks/bench_transient.py [--smoke]
+
+Measures the ISSUE-5 refactor (timestamped arrivals + fluid transient
+queues, see ``repro.core.traffic``, ``repro.core.queuing`` and
+``repro.sim``) and writes a ``BENCH_transient.json`` artifact at the repo
+root.
+
+Gates:
+
+- **burst accuracy** — on a step-burst scenario the coarse-window *fluid*
+  solve tracks a fine-grained oracle (the same fluid ODE at 16x time
+  resolution, averaged back onto the coarse grid) at least
+  :data:`ACCURACY_MARGIN` x closer than the window-independent piecewise
+  solve, whose drain windows snap back instantly.
+- **compile gate** — a traced-knob sweep grid with timestamps threaded
+  through the megabatch engine compiles at most :data:`COMPILE_LIMIT`
+  times (timestamps and window durations are data, not structure).
+- **worked example** — the §V worked example still yields λ_eff = 86.6
+  *exactly* through the timestamped wall-clock path.
+- **fluid throughput** — the vectorized fluid solver beats a faithful
+  per-series Python-loop reference by ≥ :data:`MIN_SPEEDUP` x on a
+  [points x shards x windows] grid (cross-checked numerically first).
+
+``--smoke`` shrinks the engine-heavy stages for CI; every gate still runs.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core.queuing import (  # noqa: E402
+    fluid_two_tier,
+    transient_two_tier,
+)
+from repro.core.traffic import TrafficSpec  # noqa: E402
+from repro.sim import RateSpec, SimSpec, simulate, sweep  # noqa: E402
+from repro.sim.sweep import (  # noqa: E402
+    engine_compile_count,
+    reset_engine_compile_count,
+)
+from repro.storage.tiered_store import StoreConfig  # noqa: E402
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARTIFACT = os.path.join(ROOT, "BENCH_transient.json")
+PUBLISHED_LAM_EFF = 86.6   # §V worked example
+ACCURACY_MARGIN = 2.0      # fluid must be >= 2x closer to the oracle
+COMPILE_LIMIT = 2          # timestamped traced-knob grid
+MIN_SPEEDUP = 3.0          # vectorized vs per-series Python loop
+ORACLE_REFINE = 16         # fine-grid refinement factor for the oracle
+N_POINTS = 64              # throughput grid: points axis
+N_SHARDS = 8               # throughput grid: shard axis
+N_WINDOWS = 16             # throughput grid: window axis
+
+WORKED = SimSpec(
+    traffic=TrafficSpec(kind="irm", n_requests=1500, n_pages=512,
+                        write_fraction=0.3, seed=7),
+    store=StoreConfig(n_lines=64, policy="ws"),
+    n_shards=4,
+    lam=100.0,
+    k_servers=1,
+    rates=RateSpec(source="paper"),
+    p12_override=0.2,
+)
+
+
+def _step_burst(n_windows: int = 18):
+    """A step-burst λ(t): calm, 4 windows of tier-2 overload, calm again."""
+    lam = np.full(n_windows, 20.0)
+    lam[5:9] = 200.0          # lam2 = p12 * lam = 40 > mu2 = 33
+    p12 = np.full(n_windows, 0.2)
+    return lam, p12
+
+
+def bench_burst_accuracy() -> dict:
+    """Coarse fluid vs coarse piecewise, judged against a fine-grid fluid
+    oracle averaged back onto the coarse windows. The piecewise solve
+    cannot represent the post-burst drain (its saturated windows are inf
+    and its recovery windows snap to baseline), so we compare on the
+    finite-response windows only — which is exactly where the drain tail
+    lives."""
+    dt = 1.0
+    lam, p12 = _step_burst()
+    n = lam.shape[0]
+    fine = ORACLE_REFINE
+    lam_f = np.repeat(lam, fine)
+    p12_f = np.repeat(p12, fine)
+    oracle = fluid_two_tier(lam_f, p12_f, 1000.0, 33.0, dt=dt / fine, k=1,
+                            n_substeps=8)
+    # Time-average the oracle's response back onto the coarse grid.
+    resp_oracle = np.asarray(oracle.response).reshape(n, fine).mean(axis=1)
+    fl = fluid_two_tier(lam, p12, 1000.0, 33.0, dt=dt, k=1)
+    pw = transient_two_tier(lam, p12, 1000.0, 33.0, k=1, mode="piecewise")
+    resp_fl = np.asarray(fl.response)
+    resp_pw = np.asarray(pw.response)
+    finite = np.isfinite(resp_pw)  # piecewise inf windows excluded
+    err_fl = float(np.abs(resp_fl - resp_oracle)[finite].max())
+    err_pw = float(np.abs(resp_pw - resp_oracle)[finite].max())
+    # The drain window right after the burst is where the models diverge.
+    drain = 9
+    return {
+        "n_windows": n,
+        "oracle_refine": fine,
+        "max_err_fluid_ms": round(err_fl * 1e3, 4),
+        "max_err_piecewise_ms": round(err_pw * 1e3, 4),
+        "drain_window_response_ms": {
+            "oracle": round(float(resp_oracle[drain]) * 1e3, 3),
+            "fluid": round(float(resp_fl[drain]) * 1e3, 3),
+            "piecewise": round(float(resp_pw[drain]) * 1e3, 3),
+        },
+        "accuracy_margin": ACCURACY_MARGIN,
+        "ok": bool(err_pw >= ACCURACY_MARGIN * err_fl),
+    }
+
+
+def bench_compile_gate(smoke: bool) -> dict:
+    """Traced-knob grid with timestamps threaded through the sweep: the
+    wall-clock axis must not add engine compiles (gate ≤ COMPILE_LIMIT)."""
+    base = SimSpec(
+        traffic=TrafficSpec(kind="irm", n_requests=400 if smoke else 1200,
+                            n_pages=256, write_fraction=0.2, seed=3),
+        store=StoreConfig(n_lines=64, policy="ws"),
+        n_shards=4,
+        lam=50.0,
+        rates=RateSpec(source="paper"),
+        window_dt=0.25,
+        n_windows=8,  # pinned so every point shares one structural grid
+    )
+    axes = {
+        "store.policy": ["lru", "ws"] if smoke else ["lru", "lfu", "ws",
+                                                     "random"],
+        "store.alpha": [0.3, 0.7],
+        "store.beta": [0.5, 0.9],
+    }
+    reset_engine_compile_count()
+    t0 = time.perf_counter()
+    res = sweep(base, axes)
+    wall = time.perf_counter() - t0
+    compiles = engine_compile_count()
+    lam_measured = [
+        float(np.asarray(rep.windows.lam).sum(axis=0).mean())
+        / base.n_shards
+        for rep in res.reports[:1]
+    ]
+    return {
+        "n_points": len(res.points),
+        "window_dt": base.window_dt,
+        "wall_s": round(wall, 3),
+        "compiles": compiles,
+        "compile_limit": COMPILE_LIMIT,
+        "mean_measured_lam": round(lam_measured[0], 2),
+        "ok": compiles <= COMPILE_LIMIT,
+    }
+
+
+def bench_worked_example() -> dict:
+    """§V worked example through the timestamped wall-clock path: the
+    whole-stream counters (and hence λ_eff = 86.6) must be bit-exact vs
+    the request-index path."""
+    base = simulate(WORKED)
+    timed = simulate(WORKED.replace(window_dt=0.5))
+    ok = (
+        timed.lam_eff == base.lam_eff
+        and abs(timed.lam_eff - PUBLISHED_LAM_EFF) < 1e-9
+        and timed.hits == base.hits
+        and timed.misses == base.misses
+        and timed.tier2_writes == base.tier2_writes
+    )
+    return {
+        "lam_eff": timed.lam_eff,
+        "lam_eff_published": PUBLISHED_LAM_EFF,
+        "n_windows_timed": timed.n_windows,
+        "totals_bit_exact": bool(
+            timed.hits == base.hits and timed.misses == base.misses),
+        "ok": bool(ok),
+    }
+
+
+def _scalar_fluid_reference(lam, p12, mu1, mu2, dt, n_substeps=8):
+    """Faithful per-series Python-loop reimplementation of the fluid
+    solver's M/M/1-PSFFA path (plain floats, window loop per grid
+    element)."""
+    out = np.empty(lam.shape)
+    h = dt / n_substeps
+
+    def implicit(l, a, mu):
+        r = l + h * a
+        b = 1.0 + h * mu + r
+        disc = max(b * b - 4.0 * h * r * mu, 0.0)
+        x = (b - math.sqrt(disc)) / (2.0 * h)
+        return l + h * (a - x), x
+
+    for i in range(lam.shape[0]):
+        for s in range(lam.shape[1]):
+            # warm start at the first window's stationary solution
+            a1 = (1.0 - p12[i, s, 0]) * lam[i, s, 0] + p12[i, s, 0] * mu2
+            a2 = p12[i, s, 0] * lam[i, s, 0]
+            l1 = a1 / (mu1 - a1) if a1 < mu1 else 0.0
+            l2 = a2 / (mu2 - a2) if a2 < mu2 else 0.0
+            for w in range(lam.shape[2]):
+                a1 = ((1.0 - p12[i, s, w]) * lam[i, s, w]
+                      + p12[i, s, w] * mu2)
+                a2 = p12[i, s, w] * lam[i, s, w]
+                l1_sum, l2_sum = 0.5 * l1, 0.5 * l2
+                x1_sum = x2_sum = 0.0
+                for t in range(n_substeps):
+                    l1, x1 = implicit(l1, a1, mu1)
+                    l2, x2 = implicit(l2, a2, mu2)
+                    wgt = 0.5 if t == n_substeps - 1 else 1.0
+                    l1_sum += wgt * l1
+                    l2_sum += wgt * l2
+                    x1_sum += x1
+                    x2_sum += x2
+                q1m, g1 = l1_sum / n_substeps, x1_sum / n_substeps
+                q2m, g2 = l2_sum / n_substeps, x2_sum / n_substeps
+                w1 = q1m / g1 if g1 > 1e-12 else 1.0 / mu1
+                w2 = q2m / g2 if g2 > 1e-12 else 1.0 / mu2
+                out[i, s, w] = w1 + (p12[i, s, w] * w2
+                                     if p12[i, s, w] > 0 else 0.0)
+    return out
+
+
+def bench_fluid_throughput(smoke: bool) -> dict:
+    """Vectorized fluid solve vs the per-series Python loop on a
+    [points x shards x windows] grid (both paths cross-checked first)."""
+    n_pts = 16 if smoke else N_POINTS
+    rng = np.random.default_rng(0)
+    lam = rng.uniform(5.0, 150.0, size=(n_pts, N_SHARDS, N_WINDOWS))
+    p12 = rng.uniform(0.0, 0.4, size=(n_pts, N_SHARDS, N_WINDOWS))
+    mu1, mu2 = 1000.0, 33.0
+    dt = 0.5
+
+    def vectorized():
+        return np.asarray(
+            fluid_two_tier(lam, p12, mu1, mu2, dt=dt, k=1).response)
+
+    vec = vectorized()
+    ref = _scalar_fluid_reference(lam, p12, mu1, mu2, dt)
+    max_dev = float(np.abs(vec - ref).max())
+
+    def best_of(fn, n=3):
+        times = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            fn()
+            times.append(time.perf_counter() - t0)
+        return min(times)
+
+    t_vec = best_of(vectorized)
+    t_ref = best_of(
+        lambda: _scalar_fluid_reference(lam, p12, mu1, mu2, dt))
+    speedup = t_ref / t_vec
+    return {
+        "grid": [n_pts, N_SHARDS, N_WINDOWS],
+        "python_loop_s": round(t_ref, 4),
+        "vectorized_s": round(t_vec, 4),
+        "speedup": round(speedup, 2),
+        "min_speedup": MIN_SPEEDUP,
+        "max_abs_dev": max_dev,
+        "ok": bool(max_dev < 1e-9 and speedup >= MIN_SPEEDUP),
+    }
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    artifact = {
+        "mode": "smoke" if smoke else "full",
+        "burst_accuracy": bench_burst_accuracy(),
+        "compile_gate": bench_compile_gate(smoke),
+        "worked_example": bench_worked_example(),
+        "fluid_throughput": bench_fluid_throughput(smoke),
+    }
+    with open(ARTIFACT, "w") as f:
+        json.dump(artifact, f, indent=1)
+        f.write("\n")
+
+    ba, cg, we, ft = (artifact["burst_accuracy"], artifact["compile_gate"],
+                      artifact["worked_example"],
+                      artifact["fluid_throughput"])
+    print(f"burst accuracy: fluid {ba['max_err_fluid_ms']:.3f}ms vs "
+          f"piecewise {ba['max_err_piecewise_ms']:.3f}ms max error "
+          f"(margin {ACCURACY_MARGIN}x) ok={ba['ok']}")
+    print(f"compile gate: {cg['n_points']} timestamped traced-knob points "
+          f"-> {cg['compiles']} compiles (limit {COMPILE_LIMIT}) "
+          f"ok={cg['ok']}")
+    print(f"worked example: lam_eff={we['lam_eff']:.1f} through "
+          f"{we['n_windows_timed']} wall-clock windows ok={we['ok']}")
+    print(f"fluid throughput: {ft['grid']} grid, vectorized "
+          f"{ft['vectorized_s']*1e3:.1f}ms vs loop "
+          f"{ft['python_loop_s']*1e3:.1f}ms -> {ft['speedup']}x "
+          f"(min {MIN_SPEEDUP}x) ok={ft['ok']}")
+    print(f"artifact: {ARTIFACT}")
+    failures = [k for k in ("burst_accuracy", "compile_gate",
+                            "worked_example", "fluid_throughput")
+                if not artifact[k]["ok"]]
+    if failures:
+        raise SystemExit(f"bench_transient gates failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,17 +25,26 @@ the scalar formulas — one call solves a whole ``[point, shard]`` or
 ``[shard, window]`` grid instead of a Python loop.
 
 Beyond the equilibrium analysis, :func:`transient_two_tier` solves the
-network **piecewise-stationary over time windows**: each window's measured
-arrival rate and miss fraction feed the same equations, yielding latency /
-utilization time series plus saturation-onset detection (the first window
-whose utilization reaches 1) — the transient view the paper's steady-state
-summary hides.
+network over time windows in one of two modes:
+
+- ``mode="piecewise"``: each window is an *independent* stationary solve at
+  that window's measured arrival rate and miss fraction (the PR 4 path,
+  kept as the stationary-limit oracle);
+- ``mode="fluid"`` (:func:`fluid_two_tier`, the pipeline default): a
+  pointwise-stationary fluid ODE ``dQ/dt = lam(t) - G(Q)`` integrated over
+  the window grid **with queue-length carryover between windows**. The
+  drain ``G`` is the exact inverse of the stationary queue-length map
+  (PSFFA — for M/M/1, ``G(Q) = mu*Q/(1+Q)``; the pure-fluid limit of
+  ``G`` is ``mu*min(Q, k)``), so constant-rate workloads land exactly on
+  the piecewise/stationary solution while rate bursts show non-instant
+  backlog drain — the transient view the paper's steady-state summary
+  (and a window-independent solve) hides.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Literal, NamedTuple
+from typing import Literal, NamedTuple, Optional
 
 import numpy as np
 
@@ -50,7 +59,9 @@ __all__ = [
     "TwoTierModel",
     "TwoTierReport",
     "TransientReport",
+    "FluidReport",
     "transient_two_tier",
+    "fluid_two_tier",
     "residence_times",
     "expected_response",
 ]
@@ -325,8 +336,22 @@ def expected_response(w1, w2, p12):
 
 
 # ---------------------------------------------------------------------------
-# Piecewise-stationary transient analysis (windowed telemetry -> the network).
+# Transient analysis (windowed telemetry -> the network).
 # ---------------------------------------------------------------------------
+
+
+def _sanitize_rates(lam, p12):
+    """Guard measured per-window inputs: all-idle windows (lambda = 0 burst
+    gaps) sometimes reach the solver as NaN (0/0 from an empty window's
+    rate estimate). Treat non-finite entries as idle (lambda = 0, p12 = 0)
+    so they solve as empty queues instead of poisoning the utilization
+    series — and through it the saturation-onset index."""
+    lam = np.asarray(lam, float)
+    p12 = np.asarray(p12, float)
+    lam = np.where(np.isfinite(lam), lam, 0.0)
+    idle = lam <= 0.0
+    p12 = np.where(np.isfinite(p12) & ~idle, p12, 0.0)
+    return lam, p12
 
 
 class TransientReport(NamedTuple):
@@ -367,17 +392,37 @@ def transient_two_tier(
     k: int = 1,
     var_s1: float = 0.0,
     flow: str = "paper",
-) -> TransientReport:
-    """Solve the two-tier network window by window (piecewise-stationary).
+    mode: Literal["piecewise", "fluid"] = "piecewise",
+    dt: Optional[float] = None,
+    q0=None,
+    n_substeps: int = 8,
+) -> "TransientReport | FluidReport":
+    """Solve the two-tier network over the window grid.
 
     ``lam``/``p12`` carry the time axis last (e.g. ``[window]`` or
     ``[shard, window]``); ``mu1``/``mu2`` broadcast against them (scalars,
     or ``[shard, 1]`` for per-shard device rates). Returns latency /
     utilization time series plus per-series saturation onsets via
     :meth:`TransientReport.onset`.
+
+    ``mode="piecewise"`` (this function's historic behavior, the
+    stationary-limit oracle) solves every window independently at its own
+    measured rates. ``mode="fluid"`` delegates to :func:`fluid_two_tier`
+    (requires ``dt``, the wall-clock window duration): the same per-window
+    rates drive a fluid ODE whose queue state carries over between windows.
     """
-    lam = np.atleast_1d(np.asarray(lam, float))
-    p12 = np.atleast_1d(np.asarray(p12, float))
+    if mode == "fluid":
+        if dt is None:
+            raise ValueError("mode='fluid' requires dt (window duration, s)")
+        return fluid_two_tier(
+            lam, p12, mu1, mu2, dt=dt, k=k, var_s1=var_s1, flow=flow,
+            q0=q0, n_substeps=n_substeps,
+        )
+    if mode != "piecewise":
+        raise ValueError(f"unknown transient mode: {mode!r}")
+    lam, p12 = _sanitize_rates(lam, p12)
+    lam = np.atleast_1d(lam)
+    p12 = np.atleast_1d(p12)
     mu1 = np.asarray(mu1, float)
     mu2 = np.asarray(mu2, float)
     rep = TwoTierModel(
@@ -399,4 +444,264 @@ def transient_two_tier(
         w2=w2,
         response=response,
         stable=stable,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fluid transient analysis: pointwise-stationary fluid ODE with carryover.
+# ---------------------------------------------------------------------------
+
+
+class FluidReport(NamedTuple):
+    """Fluid-flow transient solution of the two-tier network, last axis =
+    time window.
+
+    Unlike :class:`TransientReport` (independent per-window stationary
+    solves), the fluid state carries over between windows: after a rate
+    burst the backlog drains at the servers' capacity, so latency stays
+    elevated for a physically-determined number of windows instead of
+    snapping back. ``w1``/``w2`` stay *finite* through saturated windows
+    (the fluid backlog is finite at any finite time); ``stable`` flags
+    windows whose offered rates exceed capacity (same onset semantics as
+    the piecewise report), and ``q1``/``q2`` expose the window-mean fluid
+    queue lengths themselves.
+    """
+
+    lam: np.ndarray       # measured arrival rate per window
+    p12: np.ndarray       # measured miss fraction per window
+    lam_eff: np.ndarray   # nominal effective tier-1 arrival rate
+    rho1: np.ndarray      # tier-1 served offered load (throughput / mu1)
+    rho2: np.ndarray      # tier-2 utilization (throughput / mu2)
+    w1: np.ndarray        # tier-1 residence time (s), finite in overload
+    w2: np.ndarray        # tier-2 residence time (s)
+    response: np.ndarray  # expected response: w1 + p12 * w2
+    stable: np.ndarray    # bool per window (offered rate below capacity)
+    q1: np.ndarray        # window-mean tier-1 fluid queue length
+    q2: np.ndarray        # window-mean tier-2 fluid queue length
+
+    def onset(self) -> np.ndarray:
+        """Saturation onset: index of the first unstable window along the
+        time axis, -1 where every window is stable (idle/NaN-rate windows
+        count as stable — see ``_sanitize_rates``)."""
+        unstable = ~np.asarray(self.stable, bool)
+        first = np.argmax(unstable, axis=-1)
+        return np.where(np.any(unstable, axis=-1), first, -1)
+
+
+def _stationary_l1(x, mu1, k: int, var_s1) -> np.ndarray:
+    """Stationary tier-1 queue length L(x) at arrival rate ``x`` (M/M/k, or
+    M/G/k elementwise where var_s1 > 0 — the same dispatch as
+    :meth:`TwoTierModel.analyze`)."""
+    var = np.asarray(var_s1, float)
+    if not np.any(var > 0):
+        return np.asarray(mmk_queue(x, mu1, k).l, float)
+    l_g = np.asarray(mgk_queue(x, 1.0 / np.asarray(mu1, float), var, k).l,
+                     float)
+    if np.any(var <= 0):
+        l_m = np.asarray(mmk_queue(x, mu1, k).l, float)
+        return np.where(var > 0, l_g, l_m)
+    return l_g
+
+
+def _implicit_mm1_step(l, a, mu, h):
+    """One implicit-Euler substep of the M/M/1 PSFFA ODE
+    ``dL/dt = a - mu*L/(1+L)``: returns (L_next, served rate x). The update
+    solves ``L' + h*x = L + h*a`` with ``L' = x/(mu-x)`` — a quadratic in
+    ``x`` whose lower root always lies in [0, mu)."""
+    r = l + h * a
+    b = 1.0 + h * mu + r
+    disc = b * b - 4.0 * h * r * mu
+    x = (b - np.sqrt(np.maximum(disc, 0.0))) / (2.0 * h)
+    x = np.clip(x, 0.0, None)
+    return l + h * (a - x), x
+
+
+def _implicit_l1_step(l, a, mu1, k: int, var_s1, h, hi):
+    """One implicit-Euler substep for the tier-1 queue: solve the served
+    rate ``x`` in [0, k*mu1) with ``L1(x) + h*x = L + h*a`` (monotone in
+    ``x`` — vectorized bisection), where L1 is the stationary M/M/k / M/G/k
+    queue-length map."""
+    rhs = l + h * a
+    lo = np.zeros_like(rhs)
+    hi = np.broadcast_to(hi, rhs.shape).copy()
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        too_high = _stationary_l1(mid, mu1, k, var_s1) + h * mid > rhs
+        hi = np.where(too_high, mid, hi)
+        lo = np.where(too_high, lo, mid)
+        # The bracket halves every iteration; stop once the whole grid is
+        # resolved well past f32-output precision (each iteration is a
+        # full vectorized M/M/k / M/G/k solve — the dominant cost here).
+        if np.all(hi - lo <= 1e-9 * np.maximum(hi, 1.0)):
+            break
+    x = 0.5 * (lo + hi)
+    return l + h * (a - x), x
+
+
+def fluid_two_tier(
+    lam,
+    p12,
+    mu1,
+    mu2,
+    *,
+    dt,
+    k: int = 1,
+    var_s1: float = 0.0,
+    flow: str = "paper",
+    q0=None,
+    n_substeps: int = 8,
+) -> FluidReport:
+    """Fluid-flow transient solve of the two-tier network over time windows
+    **with queue-length carryover**.
+
+    Both queues follow the pointwise-stationary fluid ODE
+    ``dQ/dt = lam(t) - G(Q)`` where the drain ``G`` inverts the stationary
+    queue-length map (PSFFA): tier 2 (M/M/1) uses the analytic
+    ``G(Q) = mu2*Q/(1+Q)``, tier 1 (M/M/k / M/G/k) inverts its map by
+    vectorized bisection. The pure-fluid limit of ``G`` is
+    ``mu*min(Q, k)``; the stationary inverse additionally reproduces the
+    stochastic queueing delay, so under a constant arrival rate the fixed
+    point ``G(Q*) = lam`` lands *exactly* on the piecewise-stationary
+    (equilibrium) solution — the piecewise mode is this solver's
+    stationary-limit oracle. Integration is implicit Euler
+    (unconditionally stable, exact at fixed points), ``n_substeps`` per
+    window.
+
+    ``lam``/``p12`` carry the window axis last, ``mu1``/``mu2`` broadcast
+    against them (e.g. ``[shard, 1]``), and the solve is vectorized over
+    all leading axes — only the window axis is sequential (carryover).
+    ``dt`` is the wall-clock window duration in seconds (scalar or
+    broadcastable to the leading axes). ``q0`` sets the initial queue
+    lengths: ``None`` warm-starts at the first window's stationary
+    solution (an equilibrium start — constant-rate workloads then match
+    the piecewise oracle in *every* window), a scalar or ``(q1_0, q2_0)``
+    pair starts cold at explicit backlogs (0 = empty system).
+    """
+    lam, p12 = _sanitize_rates(lam, p12)
+    lam = np.atleast_1d(lam)
+    p12 = np.atleast_1d(p12)
+    lam, p12 = np.broadcast_arrays(lam, p12)
+    mu1 = np.asarray(mu1, float)
+    mu2 = np.asarray(mu2, float)
+    full = np.broadcast_shapes(lam.shape, mu1.shape, mu2.shape)
+    lam = np.broadcast_to(lam, full)
+    p12 = np.broadcast_to(p12, full)
+    mu1_w = np.broadcast_to(mu1, full)
+    mu2_w = np.broadcast_to(mu2, full)
+    lead = full[:-1]
+    n_windows = full[-1]
+    dt = np.broadcast_to(np.asarray(dt, float), lead)
+    if np.any(dt <= 0.0):
+        raise ValueError("dt (window duration) must be positive")
+    if n_substeps < 1:
+        raise ValueError("n_substeps must be >= 1")
+
+    # Nominal effective arrival rates per window (same flow conventions as
+    # the stationary model).
+    if flow == "paper":
+        lam_eff = (1.0 - p12) * lam + p12 * mu2_w
+    elif flow == "conserving":
+        lam_eff = lam.copy()
+    else:
+        raise ValueError(f"unknown flow convention: {flow!r}")
+    # Idle windows offer nothing to tier 1 (no arrivals -> no re-entries).
+    lam_eff = np.where(lam > 0.0, lam_eff, 0.0)
+    lam2 = p12 * lam
+
+    cap1 = float(k) * mu1_w[..., 0] * (1.0 - 1e-12)
+    analytic1 = k == 1 and not np.any(np.asarray(var_s1, float) > 0)
+
+    # Initial state: warm (first-window equilibrium, clipped to empty where
+    # that window is already saturated) or explicit backlogs.
+    if q0 is None:
+        a1_0, a2_0 = lam_eff[..., 0], lam2[..., 0]
+        s1 = a1_0 < cap1
+        l1 = np.where(
+            s1, _stationary_l1(np.where(s1, a1_0, 0.0), mu1_w[..., 0], k,
+                               var_s1), 0.0)
+        s2 = a2_0 < mu2_w[..., 0]
+        l2 = np.where(
+            s2,
+            np.asarray(mm1_queue(np.where(s2, a2_0, 0.0), mu2_w[..., 0]).l,
+                       float),
+            0.0)
+        l1 = np.broadcast_to(l1, lead).astype(float).copy()
+        l2 = np.broadcast_to(l2, lead).astype(float).copy()
+    else:
+        q1_0, q2_0 = q0 if isinstance(q0, (tuple, list)) else (q0, q0)
+        l1 = np.broadcast_to(np.asarray(q1_0, float), lead).copy()
+        l2 = np.broadcast_to(np.asarray(q2_0, float), lead).copy()
+
+    h = dt / n_substeps
+    q1_mean = np.empty(full)
+    q2_mean = np.empty(full)
+    g1_mean = np.empty(full)
+    g2_mean = np.empty(full)
+    for w in range(n_windows):
+        a1, a2 = lam_eff[..., w], lam2[..., w]
+        l1_sum = 0.5 * l1
+        l2_sum = 0.5 * l2
+        x1_sum = np.zeros(lead)
+        x2_sum = np.zeros(lead)
+        for s in range(n_substeps):
+            if analytic1:
+                l1, x1 = _implicit_mm1_step(l1, a1, mu1_w[..., w], h)
+            else:
+                l1, x1 = _implicit_l1_step(
+                    l1, a1, mu1_w[..., w], k, var_s1, h,
+                    float(k) * mu1_w[..., w] * (1.0 - 1e-12))
+            l2, x2 = _implicit_mm1_step(l2, a2, mu2_w[..., w], h)
+            weight = 0.5 if s == n_substeps - 1 else 1.0
+            l1_sum += weight * l1
+            l2_sum += weight * l2
+            x1_sum += x1
+            x2_sum += x2
+        q1_mean[..., w] = l1_sum / n_substeps
+        q2_mean[..., w] = l2_sum / n_substeps
+        g1_mean[..., w] = x1_sum / n_substeps
+        g2_mean[..., w] = x2_sum / n_substeps
+
+    rho1 = g1_mean / mu1_w
+    rho2 = g2_mean / mu2_w
+    # Residence via Little's law on the fluid state for windows that see
+    # arrivals. Idle windows (lambda = 0 burst gaps) have no arriving
+    # requests to attribute waits to — Little's ratio degenerates (0/0 is
+    # the NaN the onset guard exists for, and a residual backlog collapsing
+    # mid-window inflates it) — so they report the *virtual* waiting time
+    # instead: residual backlog over capacity, plus service.
+    tiny = 1e-9
+    w1 = np.where(
+        lam_eff > tiny,
+        q1_mean / np.maximum(g1_mean, tiny),
+        q1_mean / (float(k) * mu1_w) + 1.0 / mu1_w)
+    w2 = np.where(
+        lam2 > tiny,
+        q2_mean / np.maximum(g2_mean, tiny),
+        q2_mean / mu2_w + 1.0 / mu2_w)
+    # Compose the response with p12 carried forward over idle windows:
+    # sanitizing set their p12 to 0, which would snap `response` to bare
+    # service time while w2/q2 still show a residual tier-2 backlog
+    # draining — the virtual-wait convention must survive composition.
+    p12_fill = np.array(p12, copy=True)
+    idle = lam <= 0.0
+    for w in range(1, n_windows):
+        p12_fill[..., w] = np.where(idle[..., w], p12_fill[..., w - 1],
+                                    p12[..., w])
+    response = expected_response(w1, w2, p12_fill)
+    # Stability keeps the piecewise onset semantics: a window saturates when
+    # its *offered* rates reach capacity (the fluid drain itself never
+    # exceeds capacity, so served rates cannot flag it).
+    stable = (lam_eff < k * mu1_w) & (lam2 < mu2_w)
+    return FluidReport(
+        lam=lam,
+        p12=p12,
+        lam_eff=lam_eff,
+        rho1=rho1,
+        rho2=rho2,
+        w1=w1,
+        w2=w2,
+        response=response,
+        stable=stable,
+        q1=q1_mean,
+        q2=q2_mean,
     )

@@ -24,14 +24,29 @@ Also provided: strided streams (exercise the stream-identifier prefetcher,
   write bursts over a small hot page range (the paper's bursty checkpoint
   evaluation traffic).
 
+**Wall-clock arrival timestamps** (the time axis the request-index view
+hides): :func:`make_timed_stream` emits an arrival-time process alongside
+every stream — Poisson arrivals (exponential inter-arrival gaps) for the
+stationary kinds, MMPP-style modulated rates for ``onoff`` (background
+stretches arrive at the base rate, checkpoint bursts at ``burst_rate``
+with *deterministic* spacing — a checkpoint writer streams stripes
+back-to-back, it does not jitter), and second-composed phases for
+``phased`` (each phase's own rate process, offset by the previous phase's
+realized end — :func:`phase_schedule` composes in seconds, not request
+counts). Timestamps let the windowed pipeline bin outcomes by wall-clock
+time, so per-window arrival rates are *measured*, not flat by
+construction.
+
 Generators are host-side (numpy, seeded) — traffic is an *input* to the
 jitted storage engine, mirroring the paper where clients generate requests
 outside the cache. Each generator returns ``(pages, is_write)`` int32/bool
-arrays of length ``n``.
+arrays of length ``n``; :func:`make_timed_stream` adds a float64 ``times``
+array (strictly increasing arrival seconds).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional, Sequence
 
 import numpy as np
@@ -47,6 +62,11 @@ __all__ = [
     "phase_schedule",
     "onoff_stream",
     "make_stream",
+    "arrival_times",
+    "onoff_arrival_times",
+    "make_timed_stream",
+    "nominal_duration",
+    "nominal_duration_std",
 ]
 
 
@@ -78,6 +98,13 @@ class TrafficSpec:
     on_len: int = 64      # burst length (requests)
     off_len: int = 192    # background stretch between bursts (requests)
     burst_pages: int = 32  # checkpoint working-set size (hot page range)
+    # wall-clock arrival process (make_timed_stream): offered arrival rate
+    # in req/s. 0.0 = unset — the caller supplies a default (repro.sim uses
+    # lam * n_shards, the aggregate offered rate).
+    rate: float = 0.0
+    # onoff: arrival rate inside checkpoint bursts (req/s, deterministic
+    # back-to-back stripes). 0.0 = BURST_RATE_MULT x the base rate.
+    burst_rate: float = 0.0
 
 
 def _writes(rng: np.random.Generator, n: int, frac: float) -> np.ndarray:
@@ -262,15 +289,29 @@ def phase_schedule(*phases: TrafficSpec, seed: int = 0) -> TrafficSpec:
 
     The schedule's ``n_requests`` is the sum over phases and its ``n_pages``
     the max (the §III mapping partitions the widest declared page space).
+
+    The composed schedule runs in **seconds**, not request counts: when
+    every phase declares an arrival ``rate``, the schedule's ``rate`` is
+    the mean over the composed wall-clock span (total requests / total
+    duration), and :func:`make_timed_stream` emits each phase's arrivals at
+    that phase's own rate, offset by the previous phase's end — a
+    high-rate phase occupies a proportionally *short* stretch of the
+    timeline (a true rate burst), instead of one fixed window per equal
+    request count.
     """
     if not phases:
         raise ValueError("phase_schedule needs at least one phase")
+    rate = 0.0
+    if all(p.rate > 0 for p in phases):
+        total_n = sum(p.n_requests for p in phases)
+        rate = total_n / sum(p.n_requests / p.rate for p in phases)
     return TrafficSpec(
         kind="phased",
         n_requests=sum(p.n_requests for p in phases),
         n_pages=max(p.n_pages for p in phases),
         seed=seed,
         phases=tuple(phases),
+        rate=rate,
     )
 
 
@@ -362,15 +403,7 @@ def make_stream(spec: TrafficSpec) -> tuple[np.ndarray, np.ndarray]:
     if spec.kind == "mixed":
         return mixed_stream(spec.n_requests, spec.n_pages, **common)
     if spec.kind == "phased":
-        if not spec.phases:
-            raise ValueError("phased TrafficSpec needs a non-empty phases "
-                             "tuple (see phase_schedule())")
-        total = sum(p.n_requests for p in spec.phases)
-        if total != spec.n_requests:
-            raise ValueError(
-                f"phased n_requests={spec.n_requests} != sum of phase "
-                f"lengths {total} (build the spec via phase_schedule())"
-            )
+        _validate_phased(spec)
         return phased_stream(spec.phases)
     if spec.kind == "onoff":
         return onoff_stream(
@@ -383,3 +416,196 @@ def make_stream(spec: TrafficSpec) -> tuple[np.ndarray, np.ndarray]:
             **common,
         )
     raise ValueError(f"unknown traffic kind: {spec.kind!r}")
+
+
+def _validate_phased(spec: TrafficSpec) -> None:
+    """The phased-spec invariants shared by the timed and untimed
+    generators: a non-empty phase tuple whose lengths sum to the composed
+    ``n_requests`` (both guaranteed by :func:`phase_schedule`)."""
+    if not spec.phases:
+        raise ValueError("phased TrafficSpec needs a non-empty phases "
+                         "tuple (see phase_schedule())")
+    total = sum(p.n_requests for p in spec.phases)
+    if total != spec.n_requests:
+        raise ValueError(
+            f"phased n_requests={spec.n_requests} != sum of phase "
+            f"lengths {total} (build the spec via phase_schedule())"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Wall-clock arrival-time processes.
+# ---------------------------------------------------------------------------
+
+# Default ON-burst rate multiplier when TrafficSpec.burst_rate is unset: a
+# checkpoint writer streams stripes much faster than the offered background
+# rate (the paper's bursty checkpoint traffic).
+BURST_RATE_MULT = 4.0
+
+# Seed stream for arrival times, decorrelated from the page-generator seed
+# so timestamps never perturb the request sequence itself.
+_TIME_SEED = 0x7157
+
+
+def arrival_times(
+    n: int,
+    rate: float,
+    *,
+    seed: int = 0,
+    gap_rates: Optional[np.ndarray] = None,
+    deterministic: Optional[np.ndarray] = None,
+    t0: float = 0.0,
+) -> np.ndarray:
+    """Arrival timestamps (seconds, strictly increasing) for ``n`` requests.
+
+    The base process is Poisson at ``rate`` (i.i.d. exponential inter-arrival
+    gaps). ``gap_rates`` (float[n]) modulates the rate per gap — request i
+    arrives ``Exp(1/gap_rates[i])`` after request i-1, the conditional form
+    of an MMPP whose modulating state is indexed by request position.
+    ``deterministic`` (bool[n]) marks gaps with *no* jitter (exactly
+    ``1/gap_rates[i]`` — checkpoint bursts stream back-to-back). ``t0``
+    offsets the whole process (phase composition in seconds).
+    """
+    if rate <= 0.0 and gap_rates is None:
+        raise ValueError("arrival rate must be positive")
+    rng = np.random.default_rng([seed, _TIME_SEED])
+    rates = (np.full(n, float(rate)) if gap_rates is None
+             else np.asarray(gap_rates, float))
+    if rates.shape != (n,):
+        raise ValueError(f"gap_rates must have shape ({n},)")
+    if np.any(rates <= 0.0):
+        raise ValueError("all gap rates must be positive")
+    gaps = rng.exponential(1.0, size=n) / rates
+    if deterministic is not None:
+        det = np.asarray(deterministic, bool)
+        gaps = np.where(det, 1.0 / rates, gaps)
+    return t0 + np.cumsum(gaps)
+
+
+def onoff_arrival_times(
+    n: int,
+    rate: float,
+    *,
+    on_len: int,
+    off_len: int,
+    burst_rate: float = 0.0,
+    seed: int = 0,
+    t0: float = 0.0,
+) -> np.ndarray:
+    """MMPP-style arrivals for the ``onoff`` kind: OFF stretches are Poisson
+    at the base ``rate``, ON bursts arrive *deterministically* at
+    ``burst_rate`` (default :data:`BURST_RATE_MULT` x base — checkpoint
+    stripes stream back-to-back, they do not jitter). The ON/OFF regime of
+    position ``i`` mirrors :func:`onoff_stream`'s layout exactly
+    (``off_len`` background requests, then ``on_len`` burst requests,
+    repeating)."""
+    if burst_rate <= 0.0:
+        burst_rate = BURST_RATE_MULT * rate
+    period = on_len + off_len
+    if period <= 0:
+        raise ValueError("need on_len + off_len > 0")
+    pos = np.arange(n) % period
+    on = pos >= off_len  # onoff_stream emits the OFF stretch first
+    return arrival_times(
+        n, rate, seed=seed, t0=t0,
+        gap_rates=np.where(on, burst_rate, rate),
+        deterministic=on,
+    )
+
+
+def nominal_duration(spec: TrafficSpec, default_rate: float = 0.0) -> float:
+    """Expected wall-clock span of a spec's arrival process (seconds):
+    ``n_requests / rate``, phases summed over their own rates, and the
+    ``onoff`` MMPP accounting for its burst stretches arriving at
+    ``burst_rate``. Deterministic from the spec (no sampling), so callers
+    can derive a fixed window grid that does not recompile across seeds."""
+    if spec.kind == "phased" and spec.phases:
+        return sum(nominal_duration(p, default_rate) for p in spec.phases)
+    rate = spec.rate if spec.rate > 0 else default_rate
+    if rate <= 0:
+        raise ValueError(
+            "traffic spec has no arrival rate; set TrafficSpec.rate or pass "
+            "a default_rate"
+        )
+    if spec.kind == "onoff":
+        burst = spec.burst_rate if spec.burst_rate > 0 else (
+            BURST_RATE_MULT * rate)
+        n_on, n_off = _onoff_split(spec)
+        return n_off / rate + n_on / burst
+    return spec.n_requests / rate
+
+
+def _onoff_split(spec: TrafficSpec) -> tuple[int, int]:
+    """(n_on, n_off) request counts of an onoff spec's deterministic
+    regime layout."""
+    period = spec.on_len + spec.off_len
+    full, rem = divmod(spec.n_requests, period)
+    n_on = full * spec.on_len + max(0, rem - spec.off_len)
+    return n_on, spec.n_requests - n_on
+
+
+def nominal_duration_std(spec: TrafficSpec,
+                         default_rate: float = 0.0) -> float:
+    """Standard deviation of the realized wall-clock span around
+    :func:`nominal_duration`: exponential gaps contribute ``1/rate**2``
+    variance each (the span of ``n`` Poisson arrivals is Gamma(n, 1/rate)),
+    deterministic checkpoint-burst gaps contribute none, phases add in
+    quadrature. Lets callers pad a derived window grid so the sampled
+    process almost never overflows it."""
+    if spec.kind == "phased" and spec.phases:
+        return math.sqrt(sum(
+            nominal_duration_std(p, default_rate) ** 2 for p in spec.phases))
+    rate = spec.rate if spec.rate > 0 else default_rate
+    if rate <= 0:
+        raise ValueError(
+            "traffic spec has no arrival rate; set TrafficSpec.rate or pass "
+            "a default_rate"
+        )
+    if spec.kind == "onoff":
+        _, n_off = _onoff_split(spec)
+        return math.sqrt(n_off) / rate
+    return math.sqrt(spec.n_requests) / rate
+
+
+def make_timed_stream(
+    spec: TrafficSpec, *, default_rate: float = 0.0
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Build ``(pages, is_write, times)`` from a :class:`TrafficSpec`.
+
+    ``pages``/``is_write`` are bit-identical to :func:`make_stream` (the
+    timestamp process draws from its own decorrelated seed stream); ``times``
+    is the wall-clock arrival process in seconds:
+
+    - stationary kinds (``poisson``/``irm``/``strided``/``markov``/
+      ``mixed``): homogeneous Poisson at the spec's ``rate``;
+    - ``onoff``: MMPP-style modulation (:func:`onoff_arrival_times`);
+    - ``phased``: each phase's own process, offset by the previous phase's
+      realized end — the schedule composes in *seconds*, so a fast phase
+      compresses its requests into a short wall-clock span and the measured
+      per-window arrival rate genuinely bursts.
+
+    ``default_rate`` fills in for specs whose ``rate`` is unset (0.0).
+    """
+    rate = spec.rate if spec.rate > 0 else default_rate
+    if spec.kind == "phased":
+        _validate_phased(spec)
+        parts, t0 = [], 0.0
+        for p in spec.phases:
+            pg, wr, ts = make_timed_stream(p, default_rate=rate)
+            parts.append((pg, wr, ts + t0))
+            if ts.size:
+                t0 += float(ts[-1])
+        pages = np.concatenate([pg for pg, _, _ in parts]).astype(np.int32)
+        writes = np.concatenate([wr for _, wr, _ in parts]).astype(bool)
+        times = np.concatenate([ts for _, _, ts in parts])
+        return pages, writes, times
+    pages, writes = make_stream(spec)
+    n = pages.shape[0]
+    if spec.kind == "onoff":
+        times = onoff_arrival_times(
+            n, rate, on_len=spec.on_len, off_len=spec.off_len,
+            burst_rate=spec.burst_rate, seed=spec.seed,
+        )
+    else:
+        times = arrival_times(n, rate, seed=spec.seed)
+    return pages, writes, times

@@ -26,18 +26,24 @@ Service rates come from :class:`repro.sim.spec.RateSpec` (fitted device
 models or the §V paper constants).
 
 **Time-resolved reports.** With ``SimSpec.n_windows > 1`` every counter is
-additionally resolved over equal windows of the request stream
+additionally resolved over windows of the request stream
 (:class:`WindowSeries`), each window's measured arrival rate and miss
-fraction re-solve the network piecewise-stationarily
-(:func:`repro.core.queuing.transient_two_tier`), and the report carries the
-resulting latency/utilization time series plus the saturation onset — the
-first window in which utilization reaches 1. Time variation enters through
-the *measured miss fraction* (warm-up, phase changes, the learner
-adapting) and through *per-shard* arrival-rate skew (mapping imbalance);
-the pooled arrival rate is the constant offered λ by construction, since
-windows are equal request-count slices of a constant-rate stream. All
-per-shard equilibrium queue solves are numpy-vectorized (one array solve
-instead of a Python loop over shards).
+fraction re-solve the network (:func:`repro.core.queuing.transient_two_tier`
+— fluid carryover by default, piecewise-stationary via
+``SimSpec.transient_mode``), and the report carries the resulting
+latency/utilization time series plus the saturation onset — the first
+window in which the offered rate reaches capacity.
+
+**Wall-clock windows.** With ``SimSpec.window_dt`` set, the stream carries
+arrival *timestamps* (:func:`repro.core.traffic.make_timed_stream`) and
+windows are wall-clock time bins: the pooled per-window arrival rate is
+*measured* from the arrival process (Poisson fluctuations, MMPP bursts,
+second-composed phases), no longer flat by construction, and the measured
+rates drive the fluid transient solver with queue carryover between
+windows. On the historic request-index path (``window_dt=None``) time
+variation still enters through the measured miss fraction and per-shard
+arrival skew only. All per-shard equilibrium queue solves are
+numpy-vectorized (one array solve instead of a Python loop over shards).
 """
 from __future__ import annotations
 
@@ -48,6 +54,7 @@ import numpy as np
 
 from repro.core.mapping import page_to_shard
 from repro.core.queuing import (
+    FluidReport,
     ServiceTimes,
     TransientReport,
     TwoTierModel,
@@ -56,7 +63,7 @@ from repro.core.queuing import (
     service_time_model,
     transient_two_tier,
 )
-from repro.core.traffic import make_stream
+from repro.core.traffic import make_stream, make_timed_stream
 from repro.sim.spec import ResolvedRates, SimSpec
 from repro.storage.tiered_store import correct_padded_stats, run_distributed
 import jax.numpy as jnp
@@ -88,6 +95,8 @@ class Tier1Counters(NamedTuple):
     win_tier2_reads: np.ndarray
     win_tier2_writes: np.ndarray
     win_evictions: np.ndarray
+    win_expert_use: np.ndarray   # int64[n_shards, n_windows, E]
+    win_weights: np.ndarray      # float[n_shards, n_windows, E]
 
     @property
     def n_windows(self) -> int:
@@ -100,13 +109,19 @@ class WindowSeries(NamedTuple):
     (arrival rate and miss fraction) each window feeds into the transient
     solve.
 
-    ``lam`` is each *shard's* share of the offered load in that window —
-    windows are equal slices of the global stream arriving at the constant
-    offered rate λ·S, so per-shard rates resolve mapping skew and phased
-    footprint shifts, while the across-shard pooled rate is ~λ by
-    construction (wall-clock rate bursts need timestamped arrivals, an
-    open ROADMAP item; miss-fraction drift is what moves the pooled
-    transient today)."""
+    ``lam`` is each *shard's* share of the offered load in that window. On
+    the wall-clock path (``SimSpec.window_dt``) it is genuinely measured —
+    bursty arrival processes show up as per-window rate swings, pooled and
+    per shard. On the request-index path windows are equal slices of a
+    constant-rate stream, so per-shard rates resolve mapping skew and
+    phased footprint shifts while the across-shard pooled rate stays ~λ by
+    construction.
+
+    ``expert_use`` / ``weights`` resolve the online learner over the same
+    windows (``[n_shards, n_windows, E]``): evictions issued per expert,
+    and the expert weight vector at each window's last request (empty
+    windows carry the previous window's weights forward — the learner did
+    not move), so adaptation at phase boundaries is observable."""
 
     requests: np.ndarray
     hits: np.ndarray
@@ -115,6 +130,8 @@ class WindowSeries(NamedTuple):
     tier2_reads: np.ndarray
     tier2_writes: np.ndarray
     evictions: np.ndarray
+    expert_use: np.ndarray  # [n_shards, n_windows, E] evictions per expert
+    weights: np.ndarray     # [n_shards, n_windows, E] learner weights
     lam: np.ndarray   # measured per-shard arrival rate (req/s)
     p12: np.ndarray   # measured per-shard miss fraction
 
@@ -184,11 +201,14 @@ class SimReport:
     min_time: ServiceTimes
     t_total_s: float        # eq. 4: max over shards
     min_time_throughput_rps: float  # total requests / t_total
-    # time-resolved telemetry (window axis = n_windows slices of the stream)
+    # time-resolved telemetry (window axis = n_windows slices of the stream:
+    # wall-clock bins when spec.window_dt is set, request-count otherwise)
     n_windows: int
     window_duration_s: float
     windows: WindowSeries
-    transient: TransientReport   # pooled piecewise-stationary solve
+    # Pooled transient solve: FluidReport (carryover, the default — adds
+    # q1/q2 backlog series) or TransientReport (mode="piecewise").
+    transient: "TransientReport | FluidReport"
     saturation_onset: Optional[int]  # first pooled window ρ ≥ 1 (None=never)
 
     def to_dict(self) -> dict:
@@ -209,6 +229,8 @@ class SimReport:
             "flow": self.spec.flow,
             "p12_override": self.spec.p12_override,
             "n_windows": self.spec.n_windows,
+            "window_dt": self.spec.window_dt,
+            "transient_mode": self.spec.transient_mode,
         }
         d["min_time"] = {
             "t_hit": [float(v) for v in np.atleast_1d(self.min_time.t_hit)],
@@ -253,18 +275,42 @@ def tier1_counters(spec: SimSpec, trace=None) -> Tier1Counters:
     """Run the workload through the distributed tier-1 cache
     (:func:`repro.storage.tiered_store.run_distributed`) and return exact
     per-shard counters (whole-stream and per-window). ``trace`` overrides
-    the generated stream with a user-provided ``(pages, is_write)`` pair
-    (mapped over its own observed page space)."""
+    the generated stream with a user-provided ``(pages, is_write)`` pair —
+    or ``(pages, is_write, times)`` triple on the wall-clock path
+    (``spec.window_dt`` set; a 2-tuple trace then gets deterministic
+    arrivals at the aggregate offered rate) — mapped over its own observed
+    page space."""
+    n_windows, window_dt = spec.window_grid()
+    times = None
     if trace is not None:
         pages, is_write = np.asarray(trace[0]), np.asarray(trace[1], bool)
         n_pages = int(pages.max()) + 1
+        if window_dt is not None:
+            if len(trace) > 2:
+                times = np.asarray(trace[2], float)
+                # Normalize to t0 = 0: real traces carry absolute (epoch)
+                # timestamps, and the window origin is the trace start —
+                # otherwise a derived grid sizes itself to the epoch.
+                if times.size:
+                    times = times - times.min()
+            else:
+                times = (1.0 + np.arange(pages.shape[0])) / spec.agg_rate()
+            if spec.n_windows == 1:
+                # Derived grids must cover the *trace's* horizon — the
+                # spec's nominal traffic no longer describes the stream.
+                n_windows = max(1, int(np.ceil(
+                    float(times.max()) / window_dt)))
+    elif window_dt is not None:
+        pages, is_write, times = make_timed_stream(
+            spec.traffic, default_rate=spec.agg_rate())
+        n_pages = sim_n_pages(spec, pages)
     else:
         pages, is_write = make_stream(spec.traffic)
         n_pages = sim_n_pages(spec, pages)
     stats, counts = run_distributed(
         spec.store, pages, is_write,
         n_shards=spec.n_shards, mapping=spec.mapping, n_pages=n_pages,
-        n_windows=spec.n_windows,
+        n_windows=n_windows, timestamps=times, window_dt=window_dt,
     )
     owner = np.asarray(
         page_to_shard(jnp.asarray(pages), spec.n_shards, n_pages, spec.mapping)
@@ -294,6 +340,8 @@ def _assemble_counters(corrected_stats, counts, writes) -> Tier1Counters:
         win_tier2_reads=np.asarray(s.win_tier2_reads, np.int64),
         win_tier2_writes=np.asarray(s.win_tier2_writes, np.int64),
         win_evictions=np.asarray(s.win_evictions, np.int64),
+        win_expert_use=np.asarray(s.win_expert_use, np.int64),
+        win_weights=np.asarray(s.win_weights, float),
     )
 
 
@@ -311,6 +359,22 @@ def _shard_rate_vectors(spec: SimSpec, rates: ResolvedRates):
     per = [rates.for_shard(i) for i in range(spec.n_shards)]
     return (np.asarray([r.mu1 for r in per], float),
             np.asarray([r.mu2 for r in per], float))
+
+
+def _ffill_weights(win_weights, win_requests) -> np.ndarray:
+    """Carry expert weights forward over empty windows: a window with no
+    real requests left a zero row in the engine's snapshot accumulator —
+    the learner did not move, so it inherits the previous window's weights
+    (leading empties get the uniform initial weights)."""
+    w = np.array(win_weights, float, copy=True)      # [..., W, E]
+    req = np.asarray(win_requests)
+    n_experts = w.shape[-1]
+    prev = np.full(w.shape[:-2] + (n_experts,), 1.0 / n_experts)
+    for t in range(w.shape[-2]):
+        empty = (req[..., t] == 0)[..., None]
+        w[..., t, :] = np.where(empty, prev, w[..., t, :])
+        prev = w[..., t, :]
+    return w
 
 
 def report_from_counters(spec: SimSpec, ctr: Tier1Counters) -> SimReport:
@@ -346,17 +410,22 @@ def report_from_counters(spec: SimSpec, ctr: Tier1Counters) -> SimReport:
                                    mu1_v, mu2_v, sh_eq)
     sh_resp = expected_response(sh_w1, sh_w2, p12_sh)
 
-    # --- windowed telemetry + piecewise-stationary transient solves -------
+    # --- windowed telemetry + transient solves ----------------------------
     n_windows = ctr.n_windows
     total_req = int(req.sum())
-    # The whole stream arrives at aggregate rate λ·S, so each of the
-    # n_windows equal request-count slices spans this wall-clock duration.
-    # λ ≤ 0 is the idle regime (no arrivals): windows have no duration and
-    # the measured rates below stay 0.
-    duration = (
-        total_req / (spec.lam * spec.n_shards * n_windows)
-        if total_req and spec.lam > 0 else 0.0
-    )
+    _, window_dt = spec.window_grid()
+    if window_dt is not None:
+        # Wall-clock bins: fixed duration, measured per-window rates.
+        duration = float(window_dt)
+    else:
+        # Request-index windows: the whole stream arrives at aggregate rate
+        # λ·S, so each of the n_windows equal request-count slices spans
+        # this duration. λ ≤ 0 is the idle regime (no arrivals): windows
+        # have no duration and the measured rates below stay 0.
+        duration = (
+            total_req / (spec.lam * spec.n_shards * n_windows)
+            if total_req and spec.lam > 0 else 0.0
+        )
     win_req = np.asarray(ctr.win_requests, float)
     lam_sw = win_req / duration if duration > 0 else np.zeros_like(win_req)
     p12_sw = (
@@ -372,13 +441,20 @@ def report_from_counters(spec: SimSpec, ctr: Tier1Counters) -> SimReport:
         tier2_reads=ctr.win_tier2_reads,
         tier2_writes=ctr.win_tier2_writes,
         evictions=ctr.win_evictions,
+        expert_use=ctr.win_expert_use,
+        weights=_ffill_weights(ctr.win_weights, ctr.win_requests),
         lam=lam_sw,
         p12=p12_sw,
     )
+    # Fluid carryover needs a positive window duration; an all-idle stream
+    # (duration 0) degenerates to per-window stationary (= idle) solves.
+    mode = spec.transient_mode if duration > 0 else "piecewise"
+    tr_kw = dict(k=spec.k_servers, flow=spec.flow, mode=mode)
+    if mode == "fluid":
+        tr_kw["dt"] = duration
     # Per-shard transient: measured per-shard rates at per-shard μ.
     sh_tr = transient_two_tier(
-        lam_sw, p12_sw, mu1_v[:, None], mu2_v[:, None],
-        k=spec.k_servers, flow=spec.flow,
+        lam_sw, p12_sw, mu1_v[:, None], mu2_v[:, None], **tr_kw,
     )
     sh_onsets = np.asarray(sh_tr.onset())
     # Pooled transient: per-process pooled arrival rate and miss fraction.
@@ -394,8 +470,7 @@ def report_from_counters(spec: SimSpec, ctr: Tier1Counters) -> SimReport:
         / np.maximum(pool_req, 1)
     )
     transient = transient_two_tier(
-        pool_lam, pool_p12, rates.mu1, rates.mu2,
-        k=spec.k_servers, flow=spec.flow,
+        pool_lam, pool_p12, rates.mu1, rates.mu2, **tr_kw,
     )
     # Report-level onset = the pooled solve's first saturated window (system
     # drifting into overload). Per-shard onsets — which also capture mapping

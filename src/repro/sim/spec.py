@@ -19,11 +19,16 @@ equality of sub-specs to dedupe expensive cache simulations.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 import numpy as np
 
-from repro.core.traffic import TrafficSpec
+from repro.core.traffic import (
+    TrafficSpec,
+    nominal_duration,
+    nominal_duration_std,
+)
 from repro.storage.tier2 import Tier1Sim, Tier2Sim
 from repro.storage.tiered_store import StoreConfig
 
@@ -155,16 +160,36 @@ class SimSpec:
     p12_override: Optional[float] = None
     # Time resolution of the report: every engine counter is additionally
     # resolved over this many equal windows of the request stream, and the
-    # queuing network is re-solved per window (piecewise-stationary
-    # transient analysis + saturation-onset detection). 1 = the historic
-    # steady-state-only report.
+    # queuing network is re-solved per window (transient analysis +
+    # saturation-onset detection). 1 = the historic steady-state-only
+    # report.
     n_windows: int = 1
+    # Wall-clock window duration in seconds. When set, it supersedes the
+    # request-index windows: traffic is generated with arrival timestamps
+    # (rate = traffic.rate, or lam * n_shards when unset), counters are
+    # binned by arrival time (bin = t // window_dt, overflow clipping into
+    # the last bin), and the per-window arrival rate is *measured* rather
+    # than flat by construction. n_windows == 1 derives the window count
+    # from the spec's nominal horizon (n_requests / rate — deterministic,
+    # so compiled shapes do not depend on the sampled timestamps);
+    # n_windows > 1 pins the count explicitly.
+    window_dt: Optional[float] = None
+    # Transient solver fed with the measured per-window rates: "fluid"
+    # (queue-length carryover between windows, the default — see
+    # repro.core.queuing.fluid_two_tier) or "piecewise" (independent
+    # per-window stationary solves, the PR 4 oracle path).
+    transient_mode: str = "fluid"
 
     def __post_init__(self):
         if self.n_shards < 1:
             raise ValueError("n_shards must be >= 1")
         if self.n_windows < 1:
             raise ValueError("n_windows must be >= 1")
+        if self.window_dt is not None and self.window_dt <= 0:
+            raise ValueError("window_dt must be positive (seconds)")
+        if self.transient_mode not in ("fluid", "piecewise"):
+            raise ValueError(
+                f"unknown transient_mode: {self.transient_mode!r}")
         if self.flow not in ("paper", "conserving"):
             raise ValueError(f"unknown flow convention: {self.flow!r}")
         for name in ("mu1_shards", "mu2_shards"):
@@ -176,6 +201,41 @@ class SimSpec:
                 )
         if self.p12_override is not None and not 0.0 <= self.p12_override <= 1.0:
             raise ValueError("p12_override must be in [0, 1]")
+
+    # -- wall-clock time axis ------------------------------------------------
+    def agg_rate(self) -> float:
+        """Aggregate offered arrival rate (req/s) of the workload's
+        wall-clock arrival process: the traffic spec's own ``rate`` when
+        set, else the queuing-side offered load ``lam * n_shards`` (the
+        whole stream arrives at the aggregate rate — exactly the historic
+        request-index assumption, now realized as actual timestamps)."""
+        if self.traffic.rate > 0:
+            return float(self.traffic.rate)
+        return float(self.lam * self.n_shards)
+
+    def window_grid(self) -> tuple[int, Optional[float]]:
+        """The report's time grid ``(n_windows, window_dt)``.
+
+        ``window_dt=None`` (historic): ``n_windows`` equal request-count
+        slices. Otherwise wall-clock bins of ``window_dt`` seconds — the
+        bin *count* comes from the spec's nominal horizon
+        (:func:`repro.core.traffic.nominal_duration`, padded by 4 standard
+        deviations of the realized span so the sampled arrival process
+        almost never overflows into the clipped last bin — trailing
+        windows an early-finishing seed leaves empty are idle-guarded)
+        when ``n_windows`` is the default 1, or from an explicit
+        ``n_windows``. The count is deterministic from the spec (never
+        from sampled timestamps), so compiled engine shapes are stable
+        across seeds.
+        """
+        if self.window_dt is None:
+            return self.n_windows, None
+        if self.n_windows > 1:
+            return self.n_windows, self.window_dt
+        rate = self.agg_rate()
+        horizon = (nominal_duration(self.traffic, rate)
+                   + 4.0 * nominal_duration_std(self.traffic, rate))
+        return max(1, math.ceil(horizon / self.window_dt)), self.window_dt
 
     # -- sweep support -------------------------------------------------------
     def replace(self, **updates) -> "SimSpec":
@@ -204,10 +264,15 @@ class SimSpec:
     def cache_signature(self) -> tuple:
         """Everything the tier-1 counter simulation depends on. Sweep points
         sharing a signature reuse one cache run (queuing params are free).
-        ``n_windows`` is part of the signature: windowed counters depend on
-        the window resolution even though totals do not."""
+        The window grid is part of the signature: windowed counters depend
+        on the time resolution even though totals do not. On the
+        wall-clock path the *rate* of the arrival process matters too
+        (timestamps scale with it), which is why ``agg_rate`` — and hence
+        ``lam`` when the traffic spec carries no rate of its own — joins
+        the signature only when ``window_dt`` is set."""
         return (self.traffic, self.store, self.n_shards, self.mapping,
-                self.n_windows)
+                self.window_grid(),
+                self.agg_rate() if self.window_dt is not None else None)
 
 
 def _replace_nested(obj, updates: dict):

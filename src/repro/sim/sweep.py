@@ -32,7 +32,11 @@ Four levels of work sharing make wide sweeps cheap:
 Windowed telemetry (``SimSpec.n_windows``) rides the same batch: window
 ids are a data operand next to the stream (pads carry the dropped
 out-of-range id), so the ``[point, shard, n_windows]`` counters add no
-compiles beyond the structural split on ``n_windows`` itself.
+compiles beyond the structural split on ``n_windows`` itself. Wall-clock
+windows (``SimSpec.window_dt``) ride it the same way: arrival
+*timestamps* are a ``[point, shard, len]`` data operand (pads carry -1)
+and the per-point window duration a traced scalar, so timestamped grids
+still compile once per structural config.
 
 Compiles of the batched engine are observable via
 :func:`engine_compile_count` (a trace-time counter used by
@@ -52,7 +56,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec
 
-from repro.core.traffic import make_stream
+from repro.core.traffic import make_stream, make_timed_stream
 from repro.launch.compat import device_mesh, shard_map
 from repro.sim.engine import (
     SimReport,
@@ -157,10 +161,13 @@ def _batch_key(spec: SimSpec) -> tuple:
     """Signatures with equal batch keys share one compiled engine: only the
     *structural* store config splits groups — the scalar learning knobs
     (alpha/beta/threshold/policy) are traced operands and stack instead.
-    ``n_windows`` shapes the accumulator arrays, so it is structural too
-    (but window *ids* are data: one compile serves any window layout)."""
+    The window count shapes the accumulator arrays, so it is structural
+    too, as is the choice of time axis (wall-clock timestamp binning vs
+    request-index ids) — but window ids, timestamps and window durations
+    are all data: one compile serves any window layout."""
+    n_windows, window_dt = spec.window_grid()
     return (spec.store.static_config(), spec.n_shards, spec.mapping,
-            spec.n_windows)
+            n_windows, window_dt is not None)
 
 
 def _bucket_cap(n: int) -> int:
@@ -178,37 +185,58 @@ def _stack_hypers(stores: Sequence[StoreConfig]) -> StoreHyper:
 
 
 def _batched_engine(
-    store: StoreConfig, unroll: int, n_dev: int, n_windows: int
+    store: StoreConfig, unroll: int, n_dev: int, n_windows: int,
+    timed: bool = False,
 ) -> Callable:
     """The one-compile megabatch engine for a structural store config:
     ``(hyper [N], pages [N, S, L], writes [N, S, L], win [N, S, L]) ->
     StreamStats [N, S]`` (windowed counters ``[N, S, n_windows]``), point
-    axis sharded over all local devices. Cached so repeated sweeps reuse
-    both the wrapper and jit's compile cache."""
-    key = (store, unroll, n_dev, n_windows)
+    axis sharded over all local devices. With ``timed=True`` the fourth
+    operand is instead arrival timestamps ``[N, S, L]`` plus a per-point
+    window duration ``[N]`` — both traced data, so wall-clock binning
+    shares the one compile. Cached so repeated sweeps reuse both the
+    wrapper and jit's compile cache."""
+    key = (store, unroll, n_dev, n_windows, timed)
     fn = _ENGINE_CACHE.get(key)
     if fn is not None:
         return fn
 
-    def body(hyper, sh_pages, sh_writes, sh_win):
-        _ENGINE_COMPILES[0] += 1  # trace-time: fires once per XLA compile
+    if timed:
+        def body(hyper, sh_pages, sh_writes, sh_times, wdt):
+            _ENGINE_COMPILES[0] += 1  # trace-time: once per XLA compile
 
-        def point(h, p, w, wi):
-            return jax.vmap(
-                lambda pp, ww, wwi: run_stream(
-                    store, pp, ww, hyper=h, unroll=unroll,
-                    n_windows=n_windows, window_ids=wwi,
-                )
-            )(p, w, wi)
+            def point(h, p, w, tt, d):
+                return jax.vmap(
+                    lambda pp, ww, ttt: run_stream(
+                        store, pp, ww, hyper=h, unroll=unroll,
+                        n_windows=n_windows, timestamps=ttt, window_dt=d,
+                    )
+                )(p, w, tt)
 
-        return jax.vmap(point)(hyper, sh_pages, sh_writes, sh_win)
+            return jax.vmap(point)(hyper, sh_pages, sh_writes, sh_times,
+                                   wdt)
+        n_in = 5
+    else:
+        def body(hyper, sh_pages, sh_writes, sh_win):
+            _ENGINE_COMPILES[0] += 1  # trace-time: once per XLA compile
+
+            def point(h, p, w, wi):
+                return jax.vmap(
+                    lambda pp, ww, wwi: run_stream(
+                        store, pp, ww, hyper=h, unroll=unroll,
+                        n_windows=n_windows, window_ids=wwi,
+                    )
+                )(p, w, wi)
+
+            return jax.vmap(point)(hyper, sh_pages, sh_writes, sh_win)
+        n_in = 4
 
     if n_dev > 1:
         spec = PartitionSpec("points")
         fn = jax.jit(shard_map(
             body,
             mesh=device_mesh("points"),
-            in_specs=(spec, spec, spec, spec),
+            in_specs=(spec,) * n_in,
             out_specs=spec,
             check_vma=True,
         ))
@@ -226,9 +254,11 @@ class _Member(NamedTuple):
     spec: SimSpec
     sh_pages: np.ndarray  # [S, own_cap] partitioned stream
     sh_writes: np.ndarray
-    sh_win: np.ndarray   # [S, own_cap] window ids (n_windows = pad/drop)
+    sh_win: np.ndarray   # [S, own_cap] window ids (n_windows = pad/drop),
+                         # or arrival timestamps (-1 = pad) on the timed path
     counts: np.ndarray   # per-shard real request counts
     shard_writes: np.ndarray  # per-shard write counts
+    window_dt: Optional[float]  # wall-clock bin width (None = index path)
 
 
 @dataclasses.dataclass
@@ -260,25 +290,37 @@ def _dispatch_group(
     proceeds while the caller prepares and dispatches later groups."""
     store_static = specs[0].store.static_config()
     n_shards = specs[0].n_shards
-    n_windows = specs[0].n_windows
+    n_windows, window_dt0 = specs[0].window_grid()
+    timed = window_dt0 is not None
     n_dev = jax.local_device_count()
 
     members = []
     for spec, sig in zip(specs, sigs):
-        pages, is_write = make_stream(spec.traffic)
-        sh_p, sh_w, counts, owner, sh_win = partition_streams(
-            pages, is_write, n_shards=n_shards, mapping=spec.mapping,
-            n_pages=sim_n_pages(spec, pages), n_windows=n_windows,
-        )
+        n_windows_i, window_dt = spec.window_grid()
+        assert n_windows_i == n_windows  # grouped by batch key
+        if timed:
+            pages, is_write, times = make_timed_stream(
+                spec.traffic, default_rate=spec.agg_rate())
+            sh_p, sh_w, counts, owner, sh_tw = partition_streams(
+                pages, is_write, n_shards=n_shards, mapping=spec.mapping,
+                n_pages=sim_n_pages(spec, pages), times=times,
+            )
+        else:
+            pages, is_write = make_stream(spec.traffic)
+            sh_p, sh_w, counts, owner, sh_tw = partition_streams(
+                pages, is_write, n_shards=n_shards, mapping=spec.mapping,
+                n_pages=sim_n_pages(spec, pages), n_windows=n_windows,
+            )
         members.append(_Member(
             bucket=_bucket_cap(sh_p.shape[1]),
             sig=sig,
             spec=spec,
             sh_pages=sh_p,
             sh_writes=sh_w,
-            sh_win=sh_win,
+            sh_win=sh_tw,
             counts=counts,
             shard_writes=np.bincount(owner[is_write], minlength=n_shards),
+            window_dt=window_dt,
         ))
 
     buckets: dict[int, list[_Member]] = {}
@@ -291,10 +333,14 @@ def _dispatch_group(
         n_pad = -(-n // n_dev) * n_dev  # point axis must split over devices
         sh_pages = np.zeros((n_pad, n_shards, cap), np.int32)
         sh_writes = np.zeros((n_pad, n_shards, cap), bool)
-        # Bucket-extension positions are padding: window id n_windows drops
-        # them from the windowed counters (so windowed telemetry is
-        # bit-identical across bucket choices).
-        sh_win = np.full((n_pad, n_shards, cap), n_windows, np.int32)
+        # Bucket-extension positions are padding: window id n_windows (or
+        # timestamp -1 on the timed path) drops them from the windowed
+        # counters (so windowed telemetry is bit-identical across bucket
+        # choices).
+        if timed:
+            sh_win = np.full((n_pad, n_shards, cap), -1.0, np.float32)
+        else:
+            sh_win = np.full((n_pad, n_shards, cap), n_windows, np.int32)
         for i, m in enumerate(group):
             w = m.sh_pages.shape[1]
             # Rows come pre-padded with their shard's last page; extending
@@ -310,14 +356,23 @@ def _dispatch_group(
         stores += [stores[0]] * (n_pad - n)
         hyper = _stack_hypers(stores)
 
-        engine = _batched_engine(store_static, unroll, n_dev, n_windows)
+        engine = _batched_engine(store_static, unroll, n_dev, n_windows,
+                                 timed)
         log.info(
             "sweep: dispatch %d points x %d shards @ len %d "
-            "(n_lines=%d, windows=%d, devices=%d)",
-            n, n_shards, cap, store_static.n_lines, n_windows, n_dev,
+            "(n_lines=%d, windows=%d, timed=%s, devices=%d)",
+            n, n_shards, cap, store_static.n_lines, n_windows, timed, n_dev,
         )
-        stats = engine(hyper, jnp.asarray(sh_pages), jnp.asarray(sh_writes),
-                       jnp.asarray(sh_win))
+        if timed:
+            wdt = np.asarray(
+                [m.window_dt for m in group]
+                + [group[0].window_dt] * (n_pad - n), np.float32)
+            stats = engine(hyper, jnp.asarray(sh_pages),
+                           jnp.asarray(sh_writes), jnp.asarray(sh_win),
+                           jnp.asarray(wdt))
+        else:
+            stats = engine(hyper, jnp.asarray(sh_pages),
+                           jnp.asarray(sh_writes), jnp.asarray(sh_win))
         pending.append(_PendingBucket(
             sigs=[m.sig for m in group],
             counts=[m.counts for m in group],

@@ -25,13 +25,22 @@ device-model layer (:mod:`repro.core.queuing`, :mod:`repro.core.device_models`).
 ``n_windows`` accumulator slots carried through the loop (scatter-add by the
 request's time-window id) instead of materializing ``[T]`` per-request
 outputs — memory is O(n_windows), not O(stream length), on the megabatch
-sweep path. A request's window is its *global* stream position ``g`` mapped
-to ``g * n_windows // T``; padding positions carry the out-of-range id
-``n_windows`` and are dropped by the scatter, so windowed counters count
-real requests only and are bit-identical across padding/bucketing choices.
+sweep path. A request's window is either its **wall-clock time bin**
+(``timestamps``/``window_dt`` operands: bin = ``t // window_dt``, clipped
+into the last bin — per-window arrival rates are then *measured*, not flat
+by construction) or, on the historic request-index path, its *global*
+stream position ``g`` mapped to ``g * n_windows // T``. Padding positions
+carry the out-of-range id ``n_windows`` (timestamp ``-1`` on the timed
+path) and are dropped by the scatter, so windowed counters count real
+requests only and are bit-identical across padding/bucketing choices.
 Whole-stream counters are still accumulated separately (pads included,
 corrected by :func:`correct_padded_stats` exactly as before), so windowed
 totals reconcile exactly: ``win_*.sum(-1)`` equals every corrected counter.
+The windowed accumulators also resolve the online learner over time:
+``win_expert_use`` counts evictions per expert per window and
+``win_weights`` snapshots the expert weights at each window's last real
+request (zeros where a window saw none), so adaptation at phase boundaries
+is observable.
 """
 from __future__ import annotations
 
@@ -57,6 +66,7 @@ __all__ = [
     "partition_streams",
     "partition_window_ids",
     "stream_window_ids",
+    "timestamp_window_ids",
     "correct_padded_stats",
 ]
 
@@ -173,6 +183,12 @@ class StreamStats(NamedTuple):
     win_tier2_reads: jnp.ndarray
     win_tier2_writes: jnp.ndarray
     win_evictions: jnp.ndarray
+    # Windowed online-learning telemetry: per-window evictions per expert
+    # (int32[..., n_windows, E]) and the expert weights at each window's
+    # last real request (f32[..., n_windows, E]; zeros where the window saw
+    # no real request).
+    win_expert_use: jnp.ndarray
+    win_weights: jnp.ndarray
 
     @property
     def miss_rate(self):
@@ -319,6 +335,8 @@ class _Accum(NamedTuple):
     win_tier2_reads: jnp.ndarray
     win_tier2_writes: jnp.ndarray
     win_evictions: jnp.ndarray
+    win_expert_use: jnp.ndarray  # int32[W, E]
+    win_weights: jnp.ndarray     # f32[W, E]
 
 
 def _init_accum(n_windows: int) -> _Accum:
@@ -330,13 +348,19 @@ def _init_accum(n_windows: int) -> _Accum:
         expert_use=jnp.zeros((ol.N_EXPERTS,), jnp.int32),
         win_requests=zw, win_hits=zw, win_misses=zw, win_prefetch_hits=zw,
         win_tier2_reads=zw, win_tier2_writes=zw, win_evictions=zw,
+        win_expert_use=jnp.zeros((n_windows, ol.N_EXPERTS), jnp.int32),
+        win_weights=jnp.zeros((n_windows, ol.N_EXPERTS), jnp.float32),
     )
 
 
-def _fold(acc: _Accum, out: dict, win: jnp.ndarray) -> _Accum:
+def _fold(acc: _Accum, out: dict, win: jnp.ndarray,
+          weights: jnp.ndarray) -> _Accum:
     """Fold one request's outcome into the accumulators. ``win`` is the
     request's window id; ``win == n_windows`` (padding) drops out of the
-    windowed scatter but still counts toward the scalar totals."""
+    windowed scatter but still counts toward the scalar totals.
+    ``weights`` is the post-step expert weight vector: overwriting the
+    window's row every step leaves each row holding the weights at that
+    window's *last* real request."""
     hit = out["hit"].astype(jnp.int32)
     miss = out["miss"].astype(jnp.int32)
     pfh = out["prefetch_hit"].astype(jnp.int32)
@@ -359,6 +383,9 @@ def _fold(acc: _Accum, out: dict, win: jnp.ndarray) -> _Accum:
         win_tier2_reads=acc.win_tier2_reads.at[win].add(t2r, mode="drop"),
         win_tier2_writes=acc.win_tier2_writes.at[win].add(t2w, mode="drop"),
         win_evictions=acc.win_evictions.at[win].add(ev, mode="drop"),
+        win_expert_use=acc.win_expert_use.at[win, expert].add(ev,
+                                                              mode="drop"),
+        win_weights=acc.win_weights.at[win].set(weights, mode="drop"),
     )
 
 
@@ -373,6 +400,27 @@ def stream_window_ids(n: int, n_windows: int) -> np.ndarray:
     return (np.arange(n, dtype=np.int64) * n_windows // n).astype(np.int32)
 
 
+def timestamp_window_ids(times: np.ndarray, n_windows: int,
+                         window_dt: float) -> np.ndarray:
+    """Wall-clock window id per request: arrival time ``t`` belongs to bin
+    ``t // window_dt``, clipped into the last bin (arrivals past the nominal
+    horizon still count — windowed counters always reconcile exactly with
+    the whole-stream totals). Negative times mark padding and map to the
+    dropped id ``n_windows``. Host-side float32 mirror of the engine's
+    in-graph binning (bit-identical ids)."""
+    if n_windows < 1:
+        raise ValueError("n_windows must be >= 1")
+    if window_dt <= 0:
+        raise ValueError("window_dt must be positive")
+    t = np.asarray(times, np.float32)
+    # Clip in float space *before* the integer cast: a ratio beyond int32
+    # (epoch-style absolute times) must saturate into the last bin, not
+    # wrap — and identically to the engine's in-graph binning.
+    ids = np.clip(t / np.float32(window_dt), 0,
+                  np.float32(n_windows - 1)).astype(np.int32)
+    return np.where(t >= 0, ids, n_windows).astype(np.int32)
+
+
 def run_stream(
     cfg: StoreConfig,
     pages: jnp.ndarray,
@@ -383,6 +431,8 @@ def run_stream(
     unroll: int = 1,
     n_windows: int = 1,
     window_ids: Optional[jnp.ndarray] = None,
+    timestamps: Optional[jnp.ndarray] = None,
+    window_dt=None,
 ) -> StreamStats:
     """Process a request stream through one tier-1 shard. Jitted scan.
 
@@ -394,17 +444,33 @@ def run_stream(
     iterations on wide batches).
 
     ``n_windows`` resolves the counters over time windows (carried
-    accumulators — O(n_windows) memory, no per-request outputs).
-    ``window_ids`` assigns each position its window explicitly (int32[T],
-    values in [0, n_windows]; ``n_windows`` marks padding, dropped from the
-    windowed counters); by default positions are equal slices of this
-    stream's own length.
+    accumulators — O(n_windows) memory, no per-request outputs). The window
+    of a request is, in precedence order:
+
+    - its wall-clock time bin ``t // window_dt`` when ``timestamps``
+      (f32[T] arrival seconds, ``-1`` marking padding) and ``window_dt``
+      are given — both are *data* operands (traced, so one compile serves
+      any timestamp layout and window duration; only ``n_windows`` is
+      structural), and arrivals past ``n_windows * window_dt`` clip into
+      the last bin;
+    - an explicit ``window_ids`` assignment (int32[T], values in
+      [0, n_windows]; ``n_windows`` marks padding, dropped from the
+      windowed counters);
+    - by default, equal request-count slices of this stream's own length.
     """
     pages = jnp.asarray(pages, jnp.int32)
     is_write = jnp.asarray(is_write, bool)
     if hyper is None:
         hyper = cfg.hyper()
-    if window_ids is None:
+    if timestamps is not None:
+        if window_dt is None:
+            raise ValueError("timestamps need a window_dt (seconds per bin)")
+        ts = jnp.asarray(timestamps, jnp.float32)
+        wdt = jnp.asarray(window_dt, jnp.float32)
+        # Float-space clip before the cast (see timestamp_window_ids).
+        ids = jnp.clip(ts / wdt, 0.0, float(n_windows - 1)).astype(jnp.int32)
+        window_ids = jnp.where(ts >= 0, ids, n_windows)
+    elif window_ids is None:
         window_ids = stream_window_ids(pages.shape[0], n_windows)
     window_ids = jnp.asarray(window_ids, jnp.int32)
 
@@ -412,7 +478,7 @@ def run_stream(
         state, acc = carry
         page, write, win = req
         state, out = _step(cfg, hyper, state, (page, write))
-        return (state, _fold(acc, out, win)), None
+        return (state, _fold(acc, out, win, state.ols.weights)), None
 
     carry0 = (init_store(cfg, seed), _init_accum(n_windows))
     (final, acc), _ = jax.lax.scan(
@@ -435,6 +501,8 @@ def run_stream(
         win_tier2_reads=acc.win_tier2_reads,
         win_tier2_writes=acc.win_tier2_writes,
         win_evictions=acc.win_evictions,
+        win_expert_use=acc.win_expert_use,
+        win_weights=acc.win_weights,
     )
 
 
@@ -453,6 +521,7 @@ def partition_streams(
     n_pages: Optional[int] = None,
     cap: Optional[int] = None,
     n_windows: Optional[int] = None,
+    times: Optional[np.ndarray] = None,
 ):
     """Partition a request stream into per-shard substreams (§III mapping).
 
@@ -461,8 +530,11 @@ def partition_streams(
     ``requests``/``hits`` is unaffected and those two are correctable from
     the pad length. Returns ``(sh_pages [S, cap], sh_writes [S, cap],
     counts [S], owner [n])``; with ``n_windows`` set, additionally returns
-    ``sh_win [S, cap]`` window ids (see :func:`partition_window_ids`) as a
-    fifth element, reusing this call's shard sort instead of re-sorting.
+    ``sh_win [S, cap]`` window ids (see :func:`partition_window_ids`),
+    reusing this call's shard sort instead of re-sorting; with ``times``
+    set (wall-clock arrival seconds, float[n]), additionally returns
+    ``sh_times [S, cap]`` float32 per-shard arrival timestamps (padding
+    positions carry ``-1``, which the engine's time binning drops).
     """
     pages = np.asarray(pages)
     is_write = np.asarray(is_write, bool)
@@ -487,11 +559,18 @@ def partition_streams(
     last = sh_pages[np.arange(n_shards), np.maximum(counts - 1, 0)]
     pad = np.arange(cap)[None, :] >= counts[:, None]
     sh_pages = np.where(pad, last[:, None], sh_pages)
-    if n_windows is None:
-        return sh_pages, sh_writes, counts, owner
-    sh_win = _scatter_window_ids(owner, n_shards, n_windows, cap,
-                                 order, row, col)
-    return sh_pages, sh_writes, counts, owner, sh_win
+    out = [sh_pages, sh_writes, counts, owner]
+    if n_windows is not None:
+        out.append(_scatter_window_ids(owner, n_shards, n_windows, cap,
+                                       order, row, col))
+    if times is not None:
+        times = np.asarray(times, np.float32)
+        if times.shape != owner.shape:
+            raise ValueError("times must align with the request stream")
+        sh_times = np.full((n_shards, cap), -1.0, np.float32)
+        sh_times[row, col] = times[order]
+        out.append(sh_times)
+    return tuple(out)
 
 
 def _shard_positions(owner: np.ndarray, counts: np.ndarray):
@@ -574,6 +653,8 @@ def run_distributed(
     n_pages: Optional[int] = None,
     seed: int = 0,
     n_windows: int = 1,
+    timestamps: Optional[np.ndarray] = None,
+    window_dt: Optional[float] = None,
 ):
     """Distributed tier-1 cache: requests partitioned to per-shard caches by
     the §III mapping policy, shards processed by ``vmap`` (the paper's
@@ -582,16 +663,33 @@ def run_distributed(
     Returns ``(per_shard_stats, shard_request_counts)``; per-shard stats are
     padded streams, so counters are exact but ``requests`` reflects real
     (unpadded) request counts. ``n_windows`` resolves every counter over
-    equal time windows of the *global* request stream (``win_*`` fields,
-    shape ``[n_shards, n_windows]``).
+    time windows of the *global* request stream (``win_*`` fields, shape
+    ``[n_shards, n_windows]``): wall-clock bins of ``window_dt`` seconds
+    when ``timestamps`` (arrival seconds, float[n]) are supplied, equal
+    request-count slices otherwise.
     """
-    sh_pages, sh_writes, counts, owner, sh_win = partition_streams(
-        pages, is_write, n_shards=n_shards, mapping=mapping, n_pages=n_pages,
-        n_windows=n_windows,
-    )
-    stats = jax.vmap(
-        lambda p, w, wi: run_stream(
-            cfg, p, w, seed=seed, n_windows=n_windows, window_ids=wi
+    if timestamps is not None:
+        if window_dt is None:
+            raise ValueError("timestamps need a window_dt (seconds per bin)")
+        sh_pages, sh_writes, counts, owner, sh_times = partition_streams(
+            pages, is_write, n_shards=n_shards, mapping=mapping,
+            n_pages=n_pages, times=timestamps,
         )
-    )(jnp.asarray(sh_pages), jnp.asarray(sh_writes), jnp.asarray(sh_win))
+        stats = jax.vmap(
+            lambda p, w, tt: run_stream(
+                cfg, p, w, seed=seed, n_windows=n_windows,
+                timestamps=tt, window_dt=window_dt,
+            )
+        )(jnp.asarray(sh_pages), jnp.asarray(sh_writes),
+          jnp.asarray(sh_times))
+    else:
+        sh_pages, sh_writes, counts, owner, sh_win = partition_streams(
+            pages, is_write, n_shards=n_shards, mapping=mapping,
+            n_pages=n_pages, n_windows=n_windows,
+        )
+        stats = jax.vmap(
+            lambda p, w, wi: run_stream(
+                cfg, p, w, seed=seed, n_windows=n_windows, window_ids=wi
+            )
+        )(jnp.asarray(sh_pages), jnp.asarray(sh_writes), jnp.asarray(sh_win))
     return correct_padded_stats(stats, counts, sh_pages.shape[1]), counts
