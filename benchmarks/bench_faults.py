@@ -1,0 +1,258 @@
+"""Fault-injection benchmark: degraded-mode accuracy, retry-storm
+dynamics, fault-grid compile behavior and report determinism.
+
+  PYTHONPATH=src python benchmarks/bench_faults.py [--smoke]
+
+Measures the ISSUE-6 fault-injection subsystem (``FaultSpec`` wall-clock
+schedules, retry feedback in ``repro.core.queuing.fluid_two_tier``,
+failover remap + cold refill in ``repro.sim``) and writes a
+``BENCH_faults.json`` artifact at the repo root.
+
+Gates:
+
+- **degraded accuracy** — a constant degraded interval converges to the
+  closed-form stationary solve at the degraded μ, and every healthy window
+  before the fault is *bit-exact* against the pre-fault fluid path (the
+  no-fault solver branch is kept verbatim; faults only pay for what they
+  touch).
+- **retry storm** — after a burst, an aggressive retry policy (hot
+  timeouts, no backoff) is flagged metastable by
+  :meth:`FluidReport.metastable_onset` while the same budget with capped
+  exponential backoff drains; backlog curves order aggressive >= gentle
+  >= no-retries window by window.
+- **compile gate** — a fault grid (outage start times x retry policies,
+  the no-fault point included) rides the megabatch as data and compiles
+  the engine at most :data:`COMPILE_LIMIT` times.
+- **determinism** — same seed + same fault schedule => byte-identical
+  ``SimReport.to_dict()`` JSON across runs.
+
+``--smoke`` shrinks the engine-heavy stages for CI; every gate still runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core.queuing import (  # noqa: E402
+    RetryPolicy,
+    fluid_two_tier,
+    transient_two_tier,
+)
+from repro.core.traffic import TrafficSpec  # noqa: E402
+from repro.sim import (  # noqa: E402
+    FaultSpec,
+    RateSpec,
+    SimSpec,
+    device_degrade,
+    shard_down,
+    simulate,
+    sweep,
+)
+from repro.sim.sweep import (  # noqa: E402
+    engine_compile_count,
+    reset_engine_compile_count,
+)
+from repro.storage.tiered_store import StoreConfig  # noqa: E402
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARTIFACT = os.path.join(ROOT, "BENCH_faults.json")
+COMPILE_LIMIT = 2
+MU1, MU2 = 100.0, 33.0
+
+# Timed §V-flavored base scenario (wall-clock arrivals, fluid transient).
+BASE = SimSpec(
+    traffic=TrafficSpec(kind="irm", n_requests=1500, n_pages=256,
+                        zipf_s=0.8, write_fraction=0.2, seed=7, rate=100.0),
+    store=StoreConfig(n_lines=64, policy="ws"),
+    n_shards=4,
+    lam=25.0,
+    k_servers=1,
+    rates=RateSpec(mu1=MU1, mu2=MU2),
+    p12_override=0.2,
+    window_dt=1.0,
+    transient_mode="fluid",
+)
+
+# Retry-storm scenario (locked by tests/test_faults.py as well): a 2-window
+# burst deposits backlog; external load then sits well under capacity.
+STORM_LAM = np.array([30.0] * 4 + [130.0] * 2 + [30.0] * 18)
+STORM_P12 = 0.1
+AGGRESSIVE = RetryPolicy(timeout=0.2, max_retries=4,
+                         backoff_base=1.0, backoff_init=0.2)
+GENTLE = RetryPolicy(timeout=0.2, max_retries=4,
+                     backoff_base=4.0, backoff_init=0.5, backoff_cap=8.0)
+
+
+def bench_degraded_accuracy() -> dict:
+    """Constant degraded interval: stationary accuracy + healthy-window
+    bit-exactness vs the unfaulted fluid path."""
+    n, w0 = 40, 10
+    lam = np.full(n, 30.0)
+    p12 = np.full(n, 0.1)
+    mu1 = np.full(n, MU1)
+    mu1_deg = mu1.copy()
+    mu1_deg[w0:] = 0.5 * MU1
+    base = fluid_two_tier(lam, p12, mu1, MU2, dt=1.0)
+    deg = fluid_two_tier(lam, p12, mu1_deg, MU2, dt=1.0)
+    # Closed-form stationary network at the degraded rate (the piecewise
+    # mode *is* the per-window closed-form solve).
+    ref = transient_two_tier(lam[-1:], np.array([STORM_P12]), 0.5 * MU1,
+                             MU2, mode="piecewise")
+    w1_err = abs(float(deg.w1[-1]) - float(np.asarray(ref.w1)[-1]))
+    rel_err = w1_err / float(np.asarray(ref.w1)[-1])
+    healthy_exact = all(
+        np.array_equal(np.asarray(getattr(base, f))[:w0],
+                       np.asarray(getattr(deg, f))[:w0])
+        for f in ("q1", "q2", "w1", "w2", "rho1", "rho2", "response",
+                  "stable")
+    )
+    # Engine-level: a factor=1.0 degrade walks the entire fault path (mu
+    # multipliers, spill branch, remap plumbing) and must not move a bit
+    # of the transient solution.
+    rep_plain = simulate(BASE)
+    rep_noop = simulate(BASE.replace(faults=FaultSpec(
+        events=(device_degrade(1, 1.0, 2.0, 5.0),))))
+    engine_exact = all(
+        np.array_equal(np.asarray(getattr(rep_plain.transient, f)),
+                       np.asarray(getattr(rep_noop.transient, f)))
+        for f in ("q1", "q2", "w1", "w2", "rho1", "response", "stable")
+    )
+    return {
+        "n_windows": n,
+        "degrade_window": w0,
+        "stationary_w1_s": round(float(np.asarray(ref.w1)[-1]), 6),
+        "fluid_tail_w1_s": round(float(deg.w1[-1]), 6),
+        "stationary_rel_err": float(rel_err),
+        "healthy_windows_bit_exact": bool(healthy_exact),
+        "engine_noop_degrade_bit_exact": bool(engine_exact),
+        "ok": bool(rel_err < 1e-6 and healthy_exact and engine_exact),
+    }
+
+
+def bench_retry_storm() -> dict:
+    """Aggressive retries pin the queue above capacity (metastable); the
+    same retry budget with capped backoff drains."""
+    p12 = np.full_like(STORM_LAM, STORM_P12)
+
+    def solve(retry):
+        return fluid_two_tier(STORM_LAM, p12, MU1, MU2, dt=1.0,
+                              retry=retry)
+
+    agg = solve(AGGRESSIVE)
+    gen = solve(GENTLE)
+    none = solve(None)
+    agg_onset = int(agg.metastable_onset())
+    gen_onset = int(gen.metastable_onset())
+    tol = 1e-9
+    ordered = bool(np.all(agg.q1 >= gen.q1 - tol)
+                   and np.all(gen.q1 >= none.q1 - tol))
+    ok = (agg_onset >= 0 and gen_onset == -1
+          and float(gen.q1[-1]) < 1.0 and ordered)
+    return {
+        "burst_lam": float(STORM_LAM.max()),
+        "post_burst_lam": float(STORM_LAM[-1]),
+        "mu1": MU1,
+        "aggressive_metastable_onset": agg_onset,
+        "gentle_metastable_onset": gen_onset,
+        "final_backlog": {
+            "aggressive": round(float(agg.q1[-1]), 3),
+            "gentle": round(float(gen.q1[-1]), 3),
+            "no_retries": round(float(none.q1[-1]), 3),
+        },
+        "final_retry_rate_aggressive": round(float(agg.retry_rate[-1]), 3),
+        "backlog_curves_ordered": ordered,
+        "ok": bool(ok),
+    }
+
+
+def bench_compile_gate(smoke: bool) -> dict:
+    """Fault grids are data operands: outage start times x retry policies
+    share one compiled megabatch engine."""
+    base = (BASE.replace(traffic=dataclasses.replace(
+        BASE.traffic, n_requests=600)) if smoke else BASE)
+    faults_axis = [None]
+    starts = (2.0, 4.0) if smoke else (1.0, 2.0, 3.0, 4.0)
+    for t0 in starts:
+        faults_axis.append(FaultSpec(events=(shard_down(1, t0, t0 + 2.0),)))
+    for to in (0.1, 0.2):
+        faults_axis.append(FaultSpec(
+            events=(device_degrade(1, 0.5, 1.0, 3.0),),
+            retry=RetryPolicy(timeout=to, max_retries=3)))
+    reset_engine_compile_count()
+    t0s = time.perf_counter()
+    res = sweep(base, {"faults": faults_axis})
+    wall = time.perf_counter() - t0s
+    compiles = engine_compile_count()
+    # Retry sweeps ride a single cached counter run (schedule-free points
+    # share one cache signature); shard_down points re-run the remap only.
+    sigs = {s.cache_signature() for s in
+            (base.replace(faults=f) for f in faults_axis)}
+    return {
+        "n_points": len(res.points),
+        "n_unique_cache_signatures": len(sigs),
+        "wall_s": round(wall, 3),
+        "compiles": compiles,
+        "compile_limit": COMPILE_LIMIT,
+        "ok": bool(compiles <= COMPILE_LIMIT),
+    }
+
+
+def bench_determinism() -> dict:
+    """Same seed + same fault schedule => byte-identical report JSON."""
+    fs = FaultSpec(events=(shard_down(1, 2.0, 5.0),),
+                   retry=RetryPolicy(timeout=0.2, max_retries=2))
+    spec = BASE.replace(faults=fs)
+    a = json.dumps(simulate(spec).to_dict(), sort_keys=True)
+    b = json.dumps(simulate(spec).to_dict(), sort_keys=True)
+    return {
+        "json_bytes": len(a),
+        "byte_identical": bool(a == b),
+        "ok": bool(a == b),
+    }
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    artifact = {
+        "mode": "smoke" if smoke else "full",
+        "degraded_accuracy": bench_degraded_accuracy(),
+        "retry_storm": bench_retry_storm(),
+        "compile_gate": bench_compile_gate(smoke),
+        "determinism": bench_determinism(),
+    }
+    with open(ARTIFACT, "w") as f:
+        json.dump(artifact, f, indent=1)
+        f.write("\n")
+
+    da, rs, cg, dt = (artifact["degraded_accuracy"], artifact["retry_storm"],
+                      artifact["compile_gate"], artifact["determinism"])
+    print(f"degraded accuracy: fluid tail w1={da['fluid_tail_w1_s']:.6f}s "
+          f"vs stationary {da['stationary_w1_s']:.6f}s "
+          f"(rel err {da['stationary_rel_err']:.2e}), healthy windows "
+          f"bit-exact={da['healthy_windows_bit_exact']} ok={da['ok']}")
+    print(f"retry storm: aggressive metastable from window "
+          f"{rs['aggressive_metastable_onset']}, gentle drains to "
+          f"q1={rs['final_backlog']['gentle']} "
+          f"(ordered={rs['backlog_curves_ordered']}) ok={rs['ok']}")
+    print(f"compile gate: {cg['n_points']} fault points "
+          f"({cg['n_unique_cache_signatures']} cache signatures) -> "
+          f"{cg['compiles']} compiles (limit {COMPILE_LIMIT}) ok={cg['ok']}")
+    print(f"determinism: {dt['json_bytes']} JSON bytes, "
+          f"byte_identical={dt['byte_identical']} ok={dt['ok']}")
+    print(f"artifact: {ARTIFACT}")
+    failures = [k for k in ("degraded_accuracy", "retry_storm",
+                            "compile_gate", "determinism")
+                if not artifact[k]["ok"]]
+    if failures:
+        raise SystemExit(f"bench_faults gates failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

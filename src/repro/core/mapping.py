@@ -15,8 +15,10 @@ from __future__ import annotations
 from typing import Callable
 
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["page_to_shard", "MAPPING_POLICIES", "shard_load"]
+__all__ = ["page_to_shard", "MAPPING_POLICIES", "shard_load",
+           "apply_failover"]
 
 # Knuth multiplicative hash constant (fits in uint32).
 _HASH_MULT = jnp.uint32(2654435761)
@@ -71,6 +73,59 @@ def page_to_shard(
             f"unknown mapping policy {policy!r}; options: {sorted(MAPPING_POLICIES)}"
         ) from None
     return fn(page, n_shards, n_pages, **kw)
+
+
+def apply_failover(
+    owner: np.ndarray,
+    times: np.ndarray,
+    down_intervals,
+    n_shards: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Reroute requests owned by down shards to surviving shards.
+
+    ``owner[i]`` is request i's home shard (from :func:`page_to_shard`),
+    ``times[i]`` its wall-clock arrival, and ``down_intervals`` a sequence
+    of ``(shard, t0, t1)`` outages (:meth:`FaultSpec.down_intervals`). A
+    request whose home shard is down at its arrival time fails over to the
+    nearest *alive* shard by cyclic rotation ``(home + offset) % n_shards``
+    — deterministic, so the same key range lands on the same survivor
+    (the survivor absorbs the failed shard's working set, evicting its
+    own). If every shard is down at that instant the request keeps its
+    home (it will queue against a dead device).
+
+    Host-side numpy on purpose: the remap is *data* preparation for the
+    jitted engine (the remapped owner array is an operand, so fault grids
+    do not recompile), mirroring how traffic generation stays host-side.
+
+    Returns ``(new_owner, remapped)`` — int32 owners and the bool mask of
+    rerouted requests.
+    """
+    owner = np.asarray(owner)
+    times = np.asarray(times, float)
+    if owner.shape != times.shape:
+        raise ValueError("owner and times must have matching shapes")
+    down = np.zeros((n_shards, owner.shape[0]), dtype=bool)
+    for shard, t0, t1 in down_intervals:
+        if not 0 <= shard < n_shards:
+            raise ValueError(f"down shard {shard} out of range "
+                             f"[0, {n_shards})")
+        down[shard] |= (times >= t0) & (times < t1)
+    new_owner = owner.astype(np.int32).copy()
+    needy = down[owner, np.arange(owner.shape[0])]
+    # Rotate each needy request through the ring until it finds an alive
+    # shard; n_shards - 1 hops always suffice when any survivor exists.
+    unresolved = needy.copy()
+    for offset in range(1, n_shards):
+        if not unresolved.any():
+            break
+        cand = (owner + offset) % n_shards
+        take = unresolved & ~down[cand, np.arange(owner.shape[0])]
+        new_owner[take] = cand[take]
+        unresolved &= ~take
+    # Fully-down instants keep their home shard (nothing alive to take
+    # the traffic); they do not count as remapped.
+    remapped = needy & ~unresolved
+    return new_owner, remapped
 
 
 def shard_load(

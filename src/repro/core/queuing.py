@@ -39,6 +39,18 @@ network over time windows in one of two modes:
   the piecewise/stationary solution while rate bursts show non-instant
   backlog drain — the transient view the paper's steady-state summary
   (and a window-independent solve) hides.
+
+The fluid path additionally models **degraded-mode dynamics**: μ1/μ2 may
+vary per window (fault schedules — a dead device is μ(t) = 0, handled
+exactly: backlog grows at λ(t) and residence times report ∞ only where
+load is actually offered), ``k_scale`` scales effective tier-1 capacity
+over time, ``tier1_spill=True`` routes offered-above-capacity tier-1 work
+to tier-2, and ``retry=RetryPolicy(...)`` closes a retrial-orbit feedback
+loop (``dQ/dt = λ(t) + λ_retry(Q,t) − G(Q; μ(t))``): work that times out
+re-enters the arrival stream after its backoff delay, so aggressive
+timeouts produce *retry storms* — windows flagged ``metastable`` (stable
+in external rates, unstable in total offered rate) with
+:meth:`FluidReport.metastable_onset` locating the trailing storm.
 """
 from __future__ import annotations
 
@@ -56,6 +68,7 @@ __all__ = [
     "mmk_queue",
     "mgk_queue",
     "QueueMetrics",
+    "RetryPolicy",
     "TwoTierModel",
     "TwoTierReport",
     "TransientReport",
@@ -134,18 +147,23 @@ def _metrics(rho, p0, lq, l, wq, w, stable) -> QueueMetrics:
 def mm1_queue(lam, mu) -> QueueMetrics:
     """M/M/1 (paper eq. 7 uses Lq = rho^2/(1-rho)). Vectorized over
     broadcastable ``lam``/``mu`` arrays; λ ≤ 0 means an idle queue (empty,
-    residence = pure service) and ρ ≥ 1 a saturated one (inf waits)."""
+    residence = pure service) and ρ ≥ 1 a saturated one (inf waits).
+    A dead device (μ ≤ 0) reports ρ = inf / unstable when offered work and
+    a stable-but-unserviceable queue (inf residence) when idle."""
     lam, mu = np.broadcast_arrays(np.asarray(lam, float), np.asarray(mu, float))
     idle = lam <= 0.0
+    dead = mu <= 0.0
     lam_safe = np.where(idle, 1.0, lam)
-    rho = np.where(idle, 0.0, lam_safe / mu)
+    mu_safe = np.where(dead, 1.0, mu)
+    rho = np.where(idle, 0.0, np.where(dead, np.inf, lam_safe / mu_safe))
     stable = rho < 1.0
     live = stable & ~idle
     one_minus = np.where(stable, 1.0 - rho, 1.0)
     lq = np.where(stable, rho * rho / one_minus, np.inf)
     l = np.where(stable, rho / one_minus, np.inf)
     wq = np.where(live, lq / lam_safe, np.where(idle, 0.0, np.inf))
-    w = np.where(live, l / lam_safe, np.where(idle, 1.0 / mu, np.inf))
+    w_idle = np.where(dead, np.inf, 1.0 / mu_safe)
+    w = np.where(live, l / lam_safe, np.where(idle, w_idle, np.inf))
     p0 = np.where(stable, 1.0 - rho, 0.0)
     return _metrics(rho, p0, lq, l, wq, w, stable)
 
@@ -162,24 +180,32 @@ def _mmk_p0(a, k: int):
 
 def mmk_queue(lam, mu, k: int) -> QueueMetrics:
     """M/M/k. Paper eq. 6: L1 = P0 * a^(k+1) / ((k-1)! (k-a)^2), a = lam/mu.
-    Vectorized over broadcastable ``lam``/``mu``; ``k`` is a Python int."""
+    Vectorized over broadcastable ``lam``/``mu``; ``k`` is a Python int.
+    Dead devices (μ ≤ 0) follow the :func:`mm1_queue` convention: offered
+    work ⇒ a = inf / unstable; idle ⇒ stable with inf residence."""
     lam, mu = np.broadcast_arrays(np.asarray(lam, float), np.asarray(mu, float))
     idle = lam <= 0.0
+    dead = mu <= 0.0
     lam_safe = np.where(idle, 1.0, lam)
-    a = np.where(idle, 0.0, lam_safe / mu)
+    mu_safe = np.where(dead, 1.0, mu)
+    a = np.where(idle, 0.0, np.where(dead, np.inf, lam_safe / mu_safe))
     rho = a / k
     stable = rho < 1.0
     live = stable & ~idle
     p0 = np.where(stable, _mmk_p0(a, k), 0.0)
     k_minus_a = np.where(stable, k - a, 1.0)
+    # a is finite wherever `stable` picks the first branch; a_fin keeps the
+    # discarded branch's powers finite so no inf*0 NaNs leak out of where.
+    a_fin = np.where(stable, a, 0.0)
     lq = np.where(
         stable,
-        p0 * a ** (k + 1) / (math.factorial(k - 1) * k_minus_a**2),
+        p0 * a_fin ** (k + 1) / (math.factorial(k - 1) * k_minus_a**2),
         np.inf,
     )
-    l = np.where(stable, lq + a, np.inf)
+    l = np.where(stable, lq + a_fin, np.inf)
     wq = np.where(live, lq / lam_safe, np.where(idle, 0.0, np.inf))
-    w = np.where(live, l / lam_safe, np.where(idle, 1.0 / mu, np.inf))
+    w_idle = np.where(dead, np.inf, 1.0 / mu_safe)
+    w = np.where(live, l / lam_safe, np.where(idle, w_idle, np.inf))
     p0 = np.where(idle, 1.0, p0)
     return _metrics(rho, p0, lq, l, wq, w, stable)
 
@@ -197,14 +223,20 @@ def mgk_queue(lam, mean_s, var_s, k: int) -> QueueMetrics:
     lam_b, mean_b, var_b = np.broadcast_arrays(
         np.asarray(lam, float), np.asarray(mean_s, float),
         np.asarray(var_s, float))
-    base = mmk_queue(lam_b, 1.0 / mean_b, k)
+    # A dead device arrives here as mean_s = inf (1/mu with mu = 0): its
+    # service rate becomes 0 and mmk_queue's dead-device convention applies.
+    with np.errstate(divide="ignore"):
+        base = mmk_queue(lam_b, 1.0 / mean_b, k)
     idle = lam_b <= 0.0
     lam_safe = np.where(idle, 1.0, lam_b)
     live = np.asarray(base.stable, bool) & ~idle
-    cs2 = var_b / (mean_b * mean_b)
+    mean_fin = np.where(np.isfinite(mean_b), mean_b, 0.0)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        cs2 = var_b / (mean_b * mean_b)
+    cs2 = np.where(np.isfinite(cs2), cs2, 0.0)
     scale = (1.0 + cs2) / 2.0
     lq = np.where(live, base.lq * scale, base.lq)
-    l = np.where(live, lq + lam_b * mean_b, base.l)
+    l = np.where(live, lq + lam_b * mean_fin, base.l)
     wq = np.where(live, lq / lam_safe, base.wq)
     w = np.where(live, l / lam_safe, base.w)
     return _metrics(base.rho, base.p0, lq, l, wq, w, base.stable)
@@ -250,13 +282,16 @@ class TwoTierModel:
         lam_eff = self.effective_arrival()
         # Tier-1 k-server queue: M/G/k where var_s1 > 0, M/M/k where it is
         # 0 — elementwise, so a mixed var_s1 array keeps the documented
-        # "0 => exponential M/M/k" contract per element.
+        # "0 => exponential M/M/k" contract per element. Dead devices
+        # (mu = 0) flow through as 1/mu = inf mean service times; the
+        # errstate guard keeps that conversion warning-free.
         var = np.asarray(self.var_s1, float)
         if not np.any(var > 0):
             q1 = mmk_queue(lam_eff, self.mu1, self.k)
         else:
-            q1 = mgk_queue(lam_eff, 1.0 / np.asarray(self.mu1, float),
-                           var, self.k)
+            with np.errstate(divide="ignore"):
+                inv_mu1 = 1.0 / np.asarray(self.mu1, float)
+            q1 = mgk_queue(lam_eff, inv_mu1, var, self.k)
             if np.any(var <= 0):
                 q_m = mmk_queue(lam_eff, self.mu1, self.k)
                 pick = var > 0
@@ -267,7 +302,9 @@ class TwoTierModel:
         # Tier-2 M/M/1 miss queue (eq. 7).
         lam_miss = self.p12 * self.lam
         q2 = mm1_queue(lam_miss, self.mu2)
-        mu_sys = system_service_rate(self.mu1, self.mu2, self.p12)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            mu_sys = system_service_rate(self.mu1, self.mu2, self.p12)
+            rho_sys = self.lam / mu_sys
         eq = np.logical_and(q1.stable, q2.stable)
         return TwoTierReport(
             model=self,
@@ -275,7 +312,7 @@ class TwoTierModel:
             q1=q1,
             q2=q2,
             mu_system=mu_sys,
-            rho_system=self.lam / mu_sys,
+            rho_system=rho_sys,
             equilibrium=bool(eq) if np.ndim(eq) == 0 else eq,
         )
 
@@ -323,8 +360,11 @@ def residence_times(wq1, wq2, mu1, mu2, stable):
     saturates (``stable`` False) both report inf — the shared convention of
     the steady-state and transient reports."""
     stable = np.asarray(stable, bool)
-    w1 = np.where(stable, wq1 + 1.0 / np.asarray(mu1, float), np.inf)
-    w2 = np.where(stable, wq2 + 1.0 / np.asarray(mu2, float), np.inf)
+    # 1/mu -> inf for dead devices (mu = 0): residence on a dead-but-idle
+    # tier is inf by convention, not a warning.
+    with np.errstate(divide="ignore"):
+        w1 = np.where(stable, wq1 + 1.0 / np.asarray(mu1, float), np.inf)
+        w2 = np.where(stable, wq2 + 1.0 / np.asarray(mu2, float), np.inf)
     return w1, w2
 
 
@@ -333,6 +373,85 @@ def expected_response(w1, w2, p12):
     factors so p12 = 0 never multiplies an inf w2 (0*inf = nan)."""
     has_miss = np.asarray(p12) > 0.0
     return w1 + np.where(has_miss, p12, 0.0) * np.where(has_miss, w2, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Retry policy (client timeouts + exponential backoff).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Client retry behavior: timeout, retry budget, exponential backoff.
+
+    A request whose *virtual wait* at tier 1 (backlog over capacity,
+    ``w_v = (Q1 + 1) / (k * mu1)``) exceeds ``timeout`` is abandoned by its
+    client and re-issued after a backoff delay — but the abandoned work
+    **stays in the server queue** (the server cannot tell), which is the
+    wasted-work amplification that turns aggressive timeouts into retry
+    storms. The fluid model tracks one *orbit* per retry attempt ``r``
+    (0-based): timed-out offered work enters orbit 0, re-offers at rate
+    ``R_r / d_r``, and on a further timeout cascades to orbit ``r+1``
+    until the retry budget is spent (then it is *dropped* — the client
+    gives up).
+
+    timeout:       client timeout in seconds (must be > 0). Requests whose
+                   virtual wait exceeds it re-enter the arrival stream.
+    max_retries:   retry budget per request (>= 0; 0 disables retries —
+                   timed-out requests are dropped immediately).
+    backoff_base:  exponential backoff multiplier between attempts (>= 1;
+                   1.0 = constant backoff, i.e. no exponential growth).
+    backoff_init:  delay before the first retry, seconds (0 -> ``timeout``,
+                   the common "retry as soon as the RPC deadline fires").
+    backoff_cap:   upper bound on any backoff delay, seconds (0 -> no cap).
+    jitter:        fractional jitter in [0, 1) applied by real clients to
+                   desynchronize retries. The fluid (mean-field) model is
+                   jitter-invariant — the *mean* re-offer rate of a jittered
+                   exponential backoff equals the unjittered one — so this
+                   field documents the client config but does not change
+                   the ODE. Kept for spec fidelity and report metadata.
+    """
+
+    timeout: float
+    max_retries: int = 3
+    backoff_base: float = 2.0
+    backoff_init: float = 0.0
+    backoff_cap: float = 0.0
+    jitter: float = 0.0
+
+    def __post_init__(self):
+        if not (self.timeout > 0.0):
+            raise ValueError(
+                f"RetryPolicy.timeout must be > 0, got {self.timeout}")
+        if self.max_retries < 0:
+            raise ValueError(
+                f"RetryPolicy.max_retries must be >= 0, got "
+                f"{self.max_retries}")
+        if self.backoff_base < 1.0:
+            raise ValueError(
+                f"RetryPolicy.backoff_base must be >= 1, got "
+                f"{self.backoff_base}")
+        if self.backoff_init < 0.0:
+            raise ValueError(
+                f"RetryPolicy.backoff_init must be >= 0, got "
+                f"{self.backoff_init}")
+        if self.backoff_cap < 0.0:
+            raise ValueError(
+                f"RetryPolicy.backoff_cap must be >= 0, got "
+                f"{self.backoff_cap}")
+        if not (0.0 <= self.jitter < 1.0):
+            raise ValueError(
+                f"RetryPolicy.jitter must be in [0, 1), got {self.jitter}")
+
+    def delays(self) -> np.ndarray:
+        """Backoff delay before attempt ``r`` (seconds), shape
+        ``[max_retries]``: ``min(cap, init * base**r)`` with the 0-means-
+        default conventions of :class:`RetryPolicy`."""
+        init = self.backoff_init if self.backoff_init > 0.0 else self.timeout
+        d = init * self.backoff_base ** np.arange(self.max_retries, dtype=float)
+        if self.backoff_cap > 0.0:
+            d = np.minimum(d, self.backoff_cap)
+        return d
 
 
 # ---------------------------------------------------------------------------
@@ -352,6 +471,17 @@ def _sanitize_rates(lam, p12):
     idle = lam <= 0.0
     p12 = np.where(np.isfinite(p12) & ~idle, p12, 0.0)
     return lam, p12
+
+
+def _sanitize_mu(mu):
+    """Guard service-rate inputs: clamp negatives and non-finite entries to
+    0 (= dead device). A fault schedule that zeroes mu during an outage
+    window must flow through as a *dead* device — cleanly growing fluid
+    backlog / unstable stationary solve — never as a divide-by-zero or a
+    poisoned bisection bracket. Strictly positive finite rates pass through
+    bit-identical."""
+    mu = np.asarray(mu, float)
+    return np.where(np.isfinite(mu), np.maximum(mu, 0.0), 0.0)
 
 
 class TransientReport(NamedTuple):
@@ -396,6 +526,9 @@ def transient_two_tier(
     dt: Optional[float] = None,
     q0=None,
     n_substeps: int = 8,
+    retry: Optional[RetryPolicy] = None,
+    tier1_spill: bool = False,
+    k_scale=None,
 ) -> "TransientReport | FluidReport":
     """Solve the two-tier network over the window grid.
 
@@ -416,10 +549,16 @@ def transient_two_tier(
             raise ValueError("mode='fluid' requires dt (window duration, s)")
         return fluid_two_tier(
             lam, p12, mu1, mu2, dt=dt, k=k, var_s1=var_s1, flow=flow,
-            q0=q0, n_substeps=n_substeps,
+            q0=q0, n_substeps=n_substeps, retry=retry,
+            tier1_spill=tier1_spill, k_scale=k_scale,
         )
     if mode != "piecewise":
         raise ValueError(f"unknown transient mode: {mode!r}")
+    if retry is not None or tier1_spill or k_scale is not None:
+        raise ValueError(
+            "retry feedback / tier-1 spill / k(t) scaling are fluid-only "
+            "dynamics: use mode='fluid' (the piecewise mode solves each "
+            "window as an independent stationary network)")
     lam, p12 = _sanitize_rates(lam, p12)
     lam = np.atleast_1d(lam)
     p12 = np.atleast_1d(p12)
@@ -478,6 +617,14 @@ class FluidReport(NamedTuple):
     stable: np.ndarray    # bool per window (offered rate below capacity)
     q1: np.ndarray        # window-mean tier-1 fluid queue length
     q2: np.ndarray        # window-mean tier-2 fluid queue length
+    # Retry-feedback diagnostics (None unless solved with a RetryPolicy):
+    retry_rate: Optional[np.ndarray] = None  # window-mean re-offered rate
+    orbit: Optional[np.ndarray] = None       # window-mean orbit population
+    dropped: Optional[np.ndarray] = None     # window-mean give-up rate
+    # metastable: external rates below capacity but total offered (external
+    # + retries) above it — the system would be stable without the retry
+    # feedback yet cannot drain. None unless solved with a RetryPolicy.
+    metastable: Optional[np.ndarray] = None
 
     def onset(self) -> np.ndarray:
         """Saturation onset: index of the first unstable window along the
@@ -487,6 +634,23 @@ class FluidReport(NamedTuple):
         first = np.argmax(unstable, axis=-1)
         return np.where(np.any(unstable, axis=-1), first, -1)
 
+    def metastable_onset(self) -> np.ndarray:
+        """Onset of the *trailing* metastable run: the first window of the
+        contiguous metastable stretch that persists through the end of the
+        horizon, -1 where the final window is healthy (a transient storm
+        that drains before the horizon ends is not metastable — the flag
+        marks non-recovering states, analogous to :meth:`onset` for
+        saturation). Shape = metastable.shape minus the window axis."""
+        if self.metastable is None:
+            return np.full(np.shape(self.stable)[:-1], -1, dtype=int)
+        m = np.asarray(self.metastable, bool)
+        n = m.shape[-1]
+        rev = m[..., ::-1]
+        # Length of the trailing True run = index of the first False in the
+        # reversed series (n when the whole series is metastable).
+        trail = np.where(rev.all(axis=-1), n, np.argmin(rev, axis=-1))
+        return np.where(m[..., -1], n - trail, -1)
+
 
 def _stationary_l1(x, mu1, k: int, var_s1) -> np.ndarray:
     """Stationary tier-1 queue length L(x) at arrival rate ``x`` (M/M/k, or
@@ -495,8 +659,9 @@ def _stationary_l1(x, mu1, k: int, var_s1) -> np.ndarray:
     var = np.asarray(var_s1, float)
     if not np.any(var > 0):
         return np.asarray(mmk_queue(x, mu1, k).l, float)
-    l_g = np.asarray(mgk_queue(x, 1.0 / np.asarray(mu1, float), var, k).l,
-                     float)
+    with np.errstate(divide="ignore"):
+        inv_mu1 = 1.0 / np.asarray(mu1, float)
+    l_g = np.asarray(mgk_queue(x, inv_mu1, var, k).l, float)
     if np.any(var <= 0):
         l_m = np.asarray(mmk_queue(x, mu1, k).l, float)
         return np.where(var > 0, l_g, l_m)
@@ -550,6 +715,9 @@ def fluid_two_tier(
     flow: str = "paper",
     q0=None,
     n_substeps: int = 8,
+    retry: Optional[RetryPolicy] = None,
+    tier1_spill: bool = False,
+    k_scale=None,
 ) -> FluidReport:
     """Fluid-flow transient solve of the two-tier network over time windows
     **with queue-length carryover**.
@@ -576,13 +744,36 @@ def fluid_two_tier(
     solution (an equilibrium start — constant-rate workloads then match
     the piecewise oracle in *every* window), a scalar or ``(q1_0, q2_0)``
     pair starts cold at explicit backlogs (0 = empty system).
+
+    Fault-injection extensions (each exactly inert at its default):
+
+    - ``mu1``/``mu2`` may carry the window axis (time-varying service
+      rates, e.g. a fault schedule's per-window μ-multipliers); μ = 0
+      during an outage window is a *dead* device — the backlog grows at
+      the offered rate, residence is inf, and the window flags unstable.
+    - ``k_scale``: optional per-window multiplier on tier-1 *capacity*
+      (the fluid representation of a time-varying server count ``k(t)``:
+      capacity is ``k · μ1(t) · k_scale(t)``, folded into μ1).
+    - ``retry``: a :class:`RetryPolicy`. The ODE becomes
+      ``dQ/dt = λ(t) + λ_retry(Q, t) − G(Q; μ(t))``: work whose virtual
+      wait exceeds the timeout re-enters the arrival stream from backoff
+      orbits (one per retry attempt), while the abandoned copy stays in
+      the queue — wasted work. The report then carries ``retry_rate`` /
+      ``orbit`` / ``dropped`` series plus the ``metastable`` flag
+      (external rates below capacity, total offered above — a retry
+      storm that cannot drain) and :meth:`FluidReport.metastable_onset`.
+    - ``tier1_spill``: route tier-1 offered work above capacity
+      (``max(a1 − k·μ1(t), 0)``, exactly 0 for a healthy tier) into the
+      tier-2 arrival stream — degraded tier 1 sheds reads to tier 2.
     """
     lam, p12 = _sanitize_rates(lam, p12)
     lam = np.atleast_1d(lam)
     p12 = np.atleast_1d(p12)
     lam, p12 = np.broadcast_arrays(lam, p12)
-    mu1 = np.asarray(mu1, float)
-    mu2 = np.asarray(mu2, float)
+    mu1 = _sanitize_mu(mu1)
+    mu2 = _sanitize_mu(mu2)
+    if k_scale is not None:
+        mu1 = mu1 * np.maximum(np.asarray(k_scale, float), 0.0)
     full = np.broadcast_shapes(lam.shape, mu1.shape, mu2.shape)
     lam = np.broadcast_to(lam, full)
     p12 = np.broadcast_to(p12, full)
@@ -632,66 +823,209 @@ def fluid_two_tier(
         l1 = np.broadcast_to(np.asarray(q1_0, float), lead).copy()
         l2 = np.broadcast_to(np.asarray(q2_0, float), lead).copy()
 
+    # p12 carried forward over idle windows: sanitizing set their p12 to 0,
+    # which would snap `response` to bare service time while w2/q2 still
+    # show a residual tier-2 backlog draining — the virtual-wait convention
+    # must survive composition. The retry path also composes re-offered
+    # traffic with the filled p12 (retries during an idle gap are re-issued
+    # reads with the workload's last observed miss fraction).
+    p12_fill = np.array(p12, copy=True)
+    idle = lam <= 0.0
+    for w in range(1, n_windows):
+        p12_fill[..., w] = np.where(idle[..., w], p12_fill[..., w - 1],
+                                    p12[..., w])
+
     h = dt / n_substeps
     q1_mean = np.empty(full)
     q2_mean = np.empty(full)
     g1_mean = np.empty(full)
     g2_mean = np.empty(full)
-    for w in range(n_windows):
-        a1, a2 = lam_eff[..., w], lam2[..., w]
-        l1_sum = 0.5 * l1
-        l2_sum = 0.5 * l2
-        x1_sum = np.zeros(lead)
-        x2_sum = np.zeros(lead)
-        for s in range(n_substeps):
-            if analytic1:
-                l1, x1 = _implicit_mm1_step(l1, a1, mu1_w[..., w], h)
-            else:
-                l1, x1 = _implicit_l1_step(
-                    l1, a1, mu1_w[..., w], k, var_s1, h,
-                    float(k) * mu1_w[..., w] * (1.0 - 1e-12))
-            l2, x2 = _implicit_mm1_step(l2, a2, mu2_w[..., w], h)
-            weight = 0.5 if s == n_substeps - 1 else 1.0
-            l1_sum += weight * l1
-            l2_sum += weight * l2
-            x1_sum += x1
-            x2_sum += x2
-        q1_mean[..., w] = l1_sum / n_substeps
-        q2_mean[..., w] = l2_sum / n_substeps
-        g1_mean[..., w] = x1_sum / n_substeps
-        g2_mean[..., w] = x2_sum / n_substeps
+    faulted = retry is not None or tier1_spill
+    if not faulted:
+        # The historic (pre-fault) loop, kept verbatim: the fault-aware
+        # loop below is exactly equivalent at spill = retry = 0, but this
+        # path guarantees healthy solves stay bit-identical op-for-op.
+        for w in range(n_windows):
+            a1, a2 = lam_eff[..., w], lam2[..., w]
+            l1_sum = 0.5 * l1
+            l2_sum = 0.5 * l2
+            x1_sum = np.zeros(lead)
+            x2_sum = np.zeros(lead)
+            for s in range(n_substeps):
+                if analytic1:
+                    l1, x1 = _implicit_mm1_step(l1, a1, mu1_w[..., w], h)
+                else:
+                    l1, x1 = _implicit_l1_step(
+                        l1, a1, mu1_w[..., w], k, var_s1, h,
+                        float(k) * mu1_w[..., w] * (1.0 - 1e-12))
+                l2, x2 = _implicit_mm1_step(l2, a2, mu2_w[..., w], h)
+                weight = 0.5 if s == n_substeps - 1 else 1.0
+                l1_sum += weight * l1
+                l2_sum += weight * l2
+                x1_sum += x1
+                x2_sum += x2
+            q1_mean[..., w] = l1_sum / n_substeps
+            q2_mean[..., w] = l2_sum / n_substeps
+            g1_mean[..., w] = x1_sum / n_substeps
+            g2_mean[..., w] = x2_sum / n_substeps
+        off1, off2 = lam_eff, lam2
+        retry_mean = orbit_mean = drop_mean = None
+        tot1 = tot2 = None
+    else:
+        # Fault-aware loop: arrival flows are re-composed every substep so
+        # retry feedback (orbit re-offers join the external stream) and
+        # tier-1 overflow spill can respond to the evolving queue state.
+        m = retry.max_retries if retry is not None else 0
+        delays = retry.delays() if retry is not None else np.empty(0)
+        orbits = [np.zeros(lead) for _ in range(m)]
+        off1 = np.empty(full)   # post-spill offered rate at tier 1
+        off2 = np.empty(full)   # post-spill offered rate at tier 2
+        tot1 = np.empty(full)   # pre-spill offered (external + retries)
+        tot2 = np.empty(full)
+        retry_mean = np.empty(full) if retry is not None else None
+        orbit_mean = np.empty(full) if retry is not None else None
+        drop_mean = np.empty(full) if retry is not None else None
+        for w in range(n_windows):
+            lam_w = lam[..., w]
+            p12_w = p12_fill[..., w]
+            mu1_ww = mu1_w[..., w]
+            mu2_ww = mu2_w[..., w]
+            cap_w = float(k) * mu1_ww
+            l1_sum = 0.5 * l1
+            l2_sum = 0.5 * l2
+            x1_sum = np.zeros(lead)
+            x2_sum = np.zeros(lead)
+            a1_sum = np.zeros(lead)
+            a2_sum = np.zeros(lead)
+            o1_sum = np.zeros(lead)
+            o2_sum = np.zeros(lead)
+            r_sum = np.zeros(lead)
+            orb_sum = np.zeros(lead)
+            d_sum = np.zeros(lead)
+            for s in range(n_substeps):
+                # Re-offered rate from the backoff orbits (pre-update).
+                reoffer = [orbits[r] / delays[r] for r in range(m)]
+                lam_r = sum(reoffer, np.zeros(lead))
+                lam_tot = lam_w + lam_r
+                # Flow composition at the total arrival rate — identical
+                # expression to the nominal lam_eff when lam_r = 0.
+                if flow == "paper":
+                    a1 = np.where(lam_tot > 0.0,
+                                  (1.0 - p12_w) * lam_tot + p12_w * mu2_ww,
+                                  0.0)
+                else:
+                    a1 = lam_tot
+                a2 = p12_w * lam_tot
+                # Tier-1 overflow spills to tier 2 (exactly 0 when the
+                # offered rate is within capacity).
+                if tier1_spill:
+                    spill = np.maximum(a1 - cap_w, 0.0)
+                else:
+                    spill = np.zeros(lead)
+                a1s = a1 - spill
+                a2s = a2 + spill
+                if retry is not None:
+                    # Timeout fraction from the *virtual wait* at tier 1,
+                    # w_v = (Q1 + 1)/(k mu1): p_to = clip(1 - T/w_v, 0, 1)
+                    # — written multiplication-only so a dead tier
+                    # (cap = 0, w_v = inf) lands on p_to = 1 cleanly.
+                    p_to = np.clip(
+                        1.0 - retry.timeout * cap_w / (l1 + 1.0), 0.0, 1.0)
+                if analytic1:
+                    l1, x1 = _implicit_mm1_step(l1, a1s, mu1_ww, h)
+                else:
+                    l1, x1 = _implicit_l1_step(
+                        l1, a1s, mu1_ww, k, var_s1, h,
+                        cap_w * (1.0 - 1e-12))
+                l2, x2 = _implicit_mm1_step(l2, a2s, mu2_ww, h)
+                if retry is not None:
+                    # Orbit chain: timed-out external work enters orbit 0,
+                    # a re-offer that times out again cascades one orbit
+                    # down, and the last orbit's timeouts are dropped (the
+                    # client's retry budget is spent). The abandoned copy
+                    # is NOT removed from the queue — wasted work.
+                    inflow = [p_to * lam_w] + [p_to * reoffer[r]
+                                               for r in range(m - 1)]
+                    dropped_now = (p_to * reoffer[m - 1] if m > 0
+                                   else p_to * lam_w)
+                    for r in range(m):
+                        orbits[r] = ((orbits[r] + h * inflow[r])
+                                     / (1.0 + h / delays[r]))
+                    r_sum += lam_r
+                    orb_sum += sum(orbits, np.zeros(lead))
+                    d_sum += dropped_now
+                weight = 0.5 if s == n_substeps - 1 else 1.0
+                l1_sum += weight * l1
+                l2_sum += weight * l2
+                x1_sum += x1
+                x2_sum += x2
+                a1_sum += a1
+                a2_sum += a2
+                o1_sum += a1s
+                o2_sum += a2s
+            q1_mean[..., w] = l1_sum / n_substeps
+            q2_mean[..., w] = l2_sum / n_substeps
+            g1_mean[..., w] = x1_sum / n_substeps
+            g2_mean[..., w] = x2_sum / n_substeps
+            tot1[..., w] = a1_sum / n_substeps
+            tot2[..., w] = a2_sum / n_substeps
+            off1[..., w] = o1_sum / n_substeps
+            off2[..., w] = o2_sum / n_substeps
+            if retry is not None:
+                retry_mean[..., w] = r_sum / n_substeps
+                orbit_mean[..., w] = orb_sum / n_substeps
+                drop_mean[..., w] = d_sum / n_substeps
 
-    rho1 = g1_mean / mu1_w
-    rho2 = g2_mean / mu2_w
+    # Dead-device guards: mu = 0 windows report rho = inf (work offered) or
+    # 0 (truly idle), and inf residence whenever anything is offered or
+    # backlogged. For mu > 0 every expression below is op-identical to the
+    # historic path (safe_mu == mu elementwise).
+    tiny = 1e-9
+    dead1 = mu1_w <= 0.0
+    dead2 = mu2_w <= 0.0
+    safe_mu1 = np.where(dead1, 1.0, mu1_w)
+    safe_mu2 = np.where(dead2, 1.0, mu2_w)
+    rho1 = np.where(dead1, np.where(off1 > tiny, np.inf, 0.0),
+                    g1_mean / safe_mu1)
+    rho2 = np.where(dead2, np.where(off2 > tiny, np.inf, 0.0),
+                    g2_mean / safe_mu2)
     # Residence via Little's law on the fluid state for windows that see
     # arrivals. Idle windows (lambda = 0 burst gaps) have no arriving
     # requests to attribute waits to — Little's ratio degenerates (0/0 is
     # the NaN the onset guard exists for, and a residual backlog collapsing
     # mid-window inflates it) — so they report the *virtual* waiting time
     # instead: residual backlog over capacity, plus service.
-    tiny = 1e-9
     w1 = np.where(
-        lam_eff > tiny,
-        q1_mean / np.maximum(g1_mean, tiny),
-        q1_mean / (float(k) * mu1_w) + 1.0 / mu1_w)
+        dead1,
+        np.where((off1 > tiny) | (q1_mean > tiny), np.inf, 0.0),
+        np.where(
+            lam_eff > tiny,
+            q1_mean / np.maximum(g1_mean, tiny),
+            q1_mean / (float(k) * safe_mu1) + 1.0 / safe_mu1))
     w2 = np.where(
-        lam2 > tiny,
-        q2_mean / np.maximum(g2_mean, tiny),
-        q2_mean / mu2_w + 1.0 / mu2_w)
-    # Compose the response with p12 carried forward over idle windows:
-    # sanitizing set their p12 to 0, which would snap `response` to bare
-    # service time while w2/q2 still show a residual tier-2 backlog
-    # draining — the virtual-wait convention must survive composition.
-    p12_fill = np.array(p12, copy=True)
-    idle = lam <= 0.0
-    for w in range(1, n_windows):
-        p12_fill[..., w] = np.where(idle[..., w], p12_fill[..., w - 1],
-                                    p12[..., w])
+        dead2,
+        np.where((off2 > tiny) | (q2_mean > tiny), np.inf, 0.0),
+        np.where(
+            lam2 > tiny,
+            q2_mean / np.maximum(g2_mean, tiny),
+            q2_mean / safe_mu2 + 1.0 / safe_mu2))
     response = expected_response(w1, w2, p12_fill)
     # Stability keeps the piecewise onset semantics: a window saturates when
     # its *offered* rates reach capacity (the fluid drain itself never
-    # exceeds capacity, so served rates cannot flag it).
-    stable = (lam_eff < k * mu1_w) & (lam2 < mu2_w)
+    # exceeds capacity, so served rates cannot flag it). The `<= 0` escape
+    # keeps idle-but-dead windows stable (nothing offered, nothing lost) —
+    # for mu > 0 it is implied by `rate < capacity` and changes nothing.
+    stable = (((lam_eff < k * mu1_w) | (lam_eff <= 0.0))
+              & ((lam2 < mu2_w) | (lam2 <= 0.0)))
+    metastable = None
+    if retry is not None:
+        # Metastable: the external rates alone are within capacity, but the
+        # total offered stream (external + retry re-offers) is not — the
+        # retry feedback sustains an overload the workload itself would
+        # recover from.
+        stable_tot = (((tot1 < k * mu1_w) | (tot1 <= 0.0))
+                      & ((tot2 < mu2_w) | (tot2 <= 0.0)))
+        metastable = stable & ~stable_tot
     return FluidReport(
         lam=lam,
         p12=p12,
@@ -704,4 +1038,8 @@ def fluid_two_tier(
         stable=stable,
         q1=q1_mean,
         q2=q2_mean,
+        retry_rate=retry_mean,
+        orbit=orbit_mean,
+        dropped=drop_mean,
+        metastable=metastable,
     )

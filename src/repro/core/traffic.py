@@ -72,7 +72,13 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class TrafficSpec:
-    """Declarative description of a workload (used by benchmarks/configs)."""
+    """Declarative description of a workload (used by benchmarks/configs).
+
+    Nonsensical configurations raise ``ValueError`` at construction (not as
+    NaN reports downstream): ``n_requests``/``n_pages`` must be positive,
+    ``write_fraction`` must lie in [0, 1], and the wall-clock rates must be
+    non-negative (0 = unset, the caller supplies a default).
+    """
 
     kind: str  # poisson | irm | strided | markov | mixed | phased | onoff
     n_requests: int
@@ -105,6 +111,27 @@ class TrafficSpec:
     # onoff: arrival rate inside checkpoint bursts (req/s, deterministic
     # back-to-back stripes). 0.0 = BURST_RATE_MULT x the base rate.
     burst_rate: float = 0.0
+
+    def __post_init__(self):
+        if self.n_requests <= 0:
+            raise ValueError(
+                f"TrafficSpec.n_requests must be positive, got "
+                f"{self.n_requests}")
+        if self.n_pages <= 0:
+            raise ValueError(
+                f"TrafficSpec.n_pages must be positive, got {self.n_pages}")
+        if not 0.0 <= self.write_fraction <= 1.0:
+            raise ValueError(
+                f"TrafficSpec.write_fraction must be in [0, 1], got "
+                f"{self.write_fraction}")
+        if self.rate < 0.0:
+            raise ValueError(
+                f"TrafficSpec.rate must be non-negative (0 = unset), got "
+                f"{self.rate}")
+        if self.burst_rate < 0.0:
+            raise ValueError(
+                f"TrafficSpec.burst_rate must be non-negative (0 = unset), "
+                f"got {self.burst_rate}")
 
 
 def _writes(rng: np.random.Generator, n: int, frac: float) -> np.ndarray:

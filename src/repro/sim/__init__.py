@@ -17,9 +17,15 @@ from repro.sim.engine import (  # noqa: F401
 from repro.sim.spec import (  # noqa: F401
     PAPER_MU1,
     PAPER_MU2,
+    FaultEvent,
+    FaultSpec,
     RateSpec,
     ResolvedRates,
+    RetryPolicy,
     SimSpec,
+    device_degrade,
+    shard_down,
+    tier2_outage,
 )
 from repro.sim.sweep import (  # noqa: F401
     SweepResult,
@@ -31,6 +37,8 @@ from repro.sim.sweep import (  # noqa: F401
 
 __all__ = [
     "SimSpec", "RateSpec", "ResolvedRates", "PAPER_MU1", "PAPER_MU2",
+    "FaultSpec", "FaultEvent", "RetryPolicy",
+    "shard_down", "device_degrade", "tier2_outage",
     "SimReport", "ShardReport", "Tier1Counters", "WindowSeries",
     "simulate", "tier1_counters", "report_from_counters",
     "sweep", "expand_grid", "SweepResult",

@@ -44,6 +44,19 @@ windows. On the historic request-index path (``window_dt=None``) time
 variation still enters through the measured miss fraction and per-shard
 arrival skew only. All per-shard equilibrium queue solves are
 numpy-vectorized (one array solve instead of a Python loop over shards).
+
+**Fault injection.** With ``SimSpec.faults`` set (wall-clock path only),
+the schedule acts at three layers: arrivals during a ``shard_down``
+interval fail over to surviving shards (:func:`fault_owner` — a
+deterministic host-side remap of the request *owner* operand, so fault
+grids never recompile the engine); the fluid transient runs at per-window
+degraded rates μ(t) with tier-1 overflow spilling to tier-2 and optional
+``RetryPolicy`` feedback (``SimReport.metastable_onset`` flags retry
+storms); and on recovery the failed shard re-warms from a cold cache
+(:func:`_cold_refill` converts its first post-recovery hits back into
+misses against the store capacity, keeping windowed counters bit-exactly
+reconciled with totals). A schedule-free spec takes none of these paths
+and produces bit-identical reports.
 """
 from __future__ import annotations
 
@@ -52,7 +65,7 @@ from typing import NamedTuple, Optional
 
 import numpy as np
 
-from repro.core.mapping import page_to_shard
+from repro.core.mapping import apply_failover, page_to_shard
 from repro.core.queuing import (
     FluidReport,
     ServiceTimes,
@@ -69,7 +82,8 @@ from repro.storage.tiered_store import correct_padded_stats, run_distributed
 import jax.numpy as jnp
 
 __all__ = ["Tier1Counters", "WindowSeries", "ShardReport", "SimReport",
-           "tier1_counters", "report_from_counters", "simulate"]
+           "tier1_counters", "report_from_counters", "simulate",
+           "fault_owner"]
 
 
 class Tier1Counters(NamedTuple):
@@ -164,6 +178,10 @@ class ShardReport:
     # First window in which this shard's transient solve saturates (ρ ≥ 1);
     # None when every window is stable (or n_windows == 1 and stable).
     saturation_onset: Optional[int] = None
+    # First window of the *trailing* metastable run — external load back
+    # under capacity, but retry feedback keeping total offered load above
+    # it. None when the shard ends healthy or no retry policy is active.
+    metastable_onset: Optional[int] = None
 
     def to_dict(self) -> dict:
         return _plain(dataclasses.asdict(self))
@@ -210,6 +228,9 @@ class SimReport:
     # q1/q2 backlog series) or TransientReport (mode="piecewise").
     transient: "TransientReport | FluidReport"
     saturation_onset: Optional[int]  # first pooled window ρ ≥ 1 (None=never)
+    # First window of the pooled solve's trailing retry-storm run (see
+    # ShardReport.metastable_onset). None = ends healthy / no retry policy.
+    metastable_onset: Optional[int] = None
 
     def to_dict(self) -> dict:
         d = {
@@ -231,6 +252,8 @@ class SimReport:
             "n_windows": self.spec.n_windows,
             "window_dt": self.spec.window_dt,
             "transient_mode": self.spec.transient_mode,
+            "faults": (dataclasses.asdict(self.spec.faults)
+                       if self.spec.faults is not None else None),
         }
         d["min_time"] = {
             "t_hit": [float(v) for v in np.atleast_1d(self.min_time.t_hit)],
@@ -271,6 +294,26 @@ def sim_n_pages(spec: SimSpec, pages: np.ndarray) -> int:
     return max(spec.traffic.n_pages, int(pages.max()) + 1)
 
 
+def fault_owner(spec: SimSpec, pages: np.ndarray,
+                times: Optional[np.ndarray], n_pages: int) -> np.ndarray:
+    """Per-request owner shard under the spec's fault schedule: the §III
+    mapping, with requests arriving during a shard_down interval rerouted
+    to survivors (:func:`repro.core.mapping.apply_failover`). Pure host-side
+    data — the remapped owner array is an engine *operand*, so fault grids
+    share one compiled engine."""
+    owner = np.asarray(
+        page_to_shard(jnp.asarray(pages), spec.n_shards, n_pages,
+                      spec.mapping)
+    )
+    if spec.faults is None or times is None:
+        return owner
+    down = spec.faults.down_intervals()
+    if not down:
+        return owner
+    owner, _ = apply_failover(owner, times, down, spec.n_shards)
+    return owner
+
+
 def tier1_counters(spec: SimSpec, trace=None) -> Tier1Counters:
     """Run the workload through the distributed tier-1 cache
     (:func:`repro.storage.tiered_store.run_distributed`) and return exact
@@ -307,13 +350,12 @@ def tier1_counters(spec: SimSpec, trace=None) -> Tier1Counters:
     else:
         pages, is_write = make_stream(spec.traffic)
         n_pages = sim_n_pages(spec, pages)
+    owner = fault_owner(spec, pages, times, n_pages)
     stats, counts = run_distributed(
         spec.store, pages, is_write,
         n_shards=spec.n_shards, mapping=spec.mapping, n_pages=n_pages,
         n_windows=n_windows, timestamps=times, window_dt=window_dt,
-    )
-    owner = np.asarray(
-        page_to_shard(jnp.asarray(pages), spec.n_shards, n_pages, spec.mapping)
+        owner=owner,
     )
     writes = np.bincount(owner[is_write], minlength=spec.n_shards)
     return _assemble_counters(stats, counts, writes)
@@ -377,6 +419,44 @@ def _ffill_weights(win_weights, win_requests) -> np.ndarray:
     return w
 
 
+def _cold_refill(spec: SimSpec, ctr: Tier1Counters,
+                 window_dt: float) -> Tier1Counters:
+    """Model the cold-cache refill after each shard_down recovery.
+
+    The jitted cache engine keeps its state through an outage (the remap is
+    an input-side reroute), but a real recovering shard comes back *cold*:
+    its first post-recovery requests re-miss up to one cache's worth of
+    lines while survivors evicted its working set. Approximate that by
+    reclassifying post-recovery windowed hits into misses (+ tier-2 reads)
+    on the recovered shard, with a budget of ``store.n_lines`` touched
+    lines; the whole-stream totals get the same correction, so windowed
+    counters still reconcile bit-exactly with totals."""
+    hits = np.array(ctr.win_hits, np.int64, copy=True)
+    misses = np.array(ctr.win_misses, np.int64, copy=True)
+    t2r = np.array(ctr.win_tier2_reads, np.int64, copy=True)
+    reqs = np.asarray(ctr.win_requests, np.int64)
+    n_windows = ctr.n_windows
+    for shard, _, t1 in spec.faults.down_intervals():
+        w_rec = int(np.floor(t1 / window_dt))
+        budget = int(spec.store.n_lines)
+        for w in range(max(w_rec, 0), n_windows):
+            if budget <= 0:
+                break
+            cold = min(budget, int(reqs[shard, w]))
+            extra = min(int(hits[shard, w]), cold)
+            hits[shard, w] -= extra
+            misses[shard, w] += extra
+            t2r[shard, w] += extra
+            budget -= cold
+    d_hits = hits.sum(axis=1) - np.asarray(ctr.win_hits).sum(axis=1)
+    return ctr._replace(
+        win_hits=hits, win_misses=misses, win_tier2_reads=t2r,
+        hits=np.asarray(ctr.hits, np.int64) + d_hits,
+        misses=np.asarray(ctr.misses, np.int64) - d_hits,
+        tier2_reads=np.asarray(ctr.tier2_reads, np.int64) - d_hits,
+    )
+
+
 def report_from_counters(spec: SimSpec, ctr: Tier1Counters) -> SimReport:
     """Solve the queuing network for measured counters (no traffic rerun).
 
@@ -391,6 +471,10 @@ def report_from_counters(spec: SimSpec, ctr: Tier1Counters) -> SimReport:
     rates = spec.rates.resolve()
     # (mu*_shards length vs n_shards is enforced by SimSpec.__post_init__.)
     mu1_v, mu2_v = _shard_rate_vectors(spec, rates)
+    _, window_dt = spec.window_grid()
+    if (spec.faults is not None and spec.faults.refill_cold
+            and window_dt is not None and spec.faults.down_intervals()):
+        ctr = _cold_refill(spec, ctr, window_dt)
 
     # --- per-shard equilibrium solves, one vectorized call ----------------
     req = np.asarray(ctr.requests, np.int64)
@@ -413,7 +497,6 @@ def report_from_counters(spec: SimSpec, ctr: Tier1Counters) -> SimReport:
     # --- windowed telemetry + transient solves ----------------------------
     n_windows = ctr.n_windows
     total_req = int(req.sum())
-    _, window_dt = spec.window_grid()
     if window_dt is not None:
         # Wall-clock bins: fixed duration, measured per-window rates.
         duration = float(window_dt)
@@ -452,9 +535,28 @@ def report_from_counters(spec: SimSpec, ctr: Tier1Counters) -> SimReport:
     tr_kw = dict(k=spec.k_servers, flow=spec.flow, mode=mode)
     if mode == "fluid":
         tr_kw["dt"] = duration
+    # Fault schedule → time-varying μ(t) per shard/window plus retry
+    # feedback. Only the fluid solver understands these dynamics (SimSpec
+    # validation guarantees transient_mode='fluid'; an all-idle stream that
+    # degenerated to piecewise above has no arrivals to retry anyway).
+    sh_mu1: np.ndarray = mu1_v[:, None]
+    sh_mu2: np.ndarray = mu2_v[:, None]
+    pool_mu1, pool_mu2 = rates.mu1, rates.mu2
+    if spec.faults is not None and mode == "fluid":
+        tr_kw["retry"] = spec.faults.retry
+        if spec.faults.events and window_dt is not None:
+            # Degraded tier-1 can't absorb its offered load: spill the
+            # excess to tier-2 so the backup tier serves what tier-1 drops.
+            tr_kw["tier1_spill"] = True
+            mu1_mult, mu2_mult = spec.faults.mu_multipliers(
+                n_windows, window_dt, spec.n_shards)
+            sh_mu1 = sh_mu1 * mu1_mult
+            sh_mu2 = sh_mu2 * mu2_mult[None, :]
+            pool_mu1 = rates.mu1 * mu1_mult.mean(axis=0)
+            pool_mu2 = rates.mu2 * mu2_mult
     # Per-shard transient: measured per-shard rates at per-shard μ.
     sh_tr = transient_two_tier(
-        lam_sw, p12_sw, mu1_v[:, None], mu2_v[:, None], **tr_kw,
+        lam_sw, p12_sw, sh_mu1, sh_mu2, **tr_kw,
     )
     sh_onsets = np.asarray(sh_tr.onset())
     # Pooled transient: per-process pooled arrival rate and miss fraction.
@@ -470,13 +572,22 @@ def report_from_counters(spec: SimSpec, ctr: Tier1Counters) -> SimReport:
         / np.maximum(pool_req, 1)
     )
     transient = transient_two_tier(
-        pool_lam, pool_p12, rates.mu1, rates.mu2, **tr_kw,
+        pool_lam, pool_p12, pool_mu1, pool_mu2, **tr_kw,
     )
     # Report-level onset = the pooled solve's first saturated window (system
     # drifting into overload). Per-shard onsets — which also capture mapping
     # skew concentrating load on one shard — live on each ShardReport.
     pooled_onset = int(transient.onset())
     saturation_onset = pooled_onset if pooled_onset >= 0 else None
+    # Metastable onset (retry feedback keeping total offered load above
+    # capacity after external load subsides) — fluid+retry solves only.
+    pooled_meta = None
+    sh_meta = None
+    if isinstance(transient, FluidReport) and transient.metastable is not None:
+        mo = int(transient.metastable_onset())
+        pooled_meta = mo if mo >= 0 else None
+    if isinstance(sh_tr, FluidReport) and sh_tr.metastable is not None:
+        sh_meta = np.asarray(sh_tr.metastable_onset())
 
     shard_reports = []
     for i in range(spec.n_shards):
@@ -501,6 +612,10 @@ def report_from_counters(spec: SimSpec, ctr: Tier1Counters) -> SimReport:
             response_s=float(sh_resp[i]),
             equilibrium=bool(sh_eq[i]),
             saturation_onset=onset_i if onset_i >= 0 else None,
+            metastable_onset=(
+                int(sh_meta[i])
+                if sh_meta is not None and int(sh_meta[i]) >= 0 else None
+            ),
         ))
 
     # --- pooled/aggregate equilibrium solve -------------------------------
@@ -557,6 +672,7 @@ def report_from_counters(spec: SimSpec, ctr: Tier1Counters) -> SimReport:
         windows=windows,
         transient=transient,
         saturation_onset=saturation_onset,
+        metastable_onset=pooled_meta,
     )
 
 

@@ -24,6 +24,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.queuing import RetryPolicy
 from repro.core.traffic import (
     TrafficSpec,
     nominal_duration,
@@ -32,7 +33,11 @@ from repro.core.traffic import (
 from repro.storage.tier2 import Tier1Sim, Tier2Sim
 from repro.storage.tiered_store import StoreConfig
 
-__all__ = ["RateSpec", "ResolvedRates", "SimSpec", "PAPER_MU1", "PAPER_MU2"]
+__all__ = [
+    "RateSpec", "ResolvedRates", "SimSpec", "PAPER_MU1", "PAPER_MU2",
+    "FaultEvent", "FaultSpec", "RetryPolicy",
+    "shard_down", "device_degrade", "tier2_outage",
+]
 
 # §V worked example constants: "μ1 = 1000 requests/sec, μ2 = 33 stripes/sec".
 PAPER_MU1 = 1000.0
@@ -103,6 +108,28 @@ class RateSpec:
     n_requests_op: float = 1e5   # NVMe operating point (x4) for μ1
     n_stripes_op: float = 1024.0  # HDD operating point for μ2
 
+    def __post_init__(self):
+        for name in ("mu1", "mu2", "mu1_read", "mu1_write"):
+            val = getattr(self, name)
+            if val is not None and val <= 0:
+                raise ValueError(
+                    f"RateSpec.{name} must be a positive rate (req/s), got "
+                    f"{val} — model a failed device with SimSpec.faults, "
+                    f"not a zero service rate")
+        for name in ("mu1_shards", "mu2_shards"):
+            vec = getattr(self, name)
+            if vec is not None and (len(vec) == 0 or min(vec) <= 0):
+                raise ValueError(f"RateSpec.{name} must be a non-empty "
+                                 "tuple of positive rates")
+        if self.n_requests_op <= 0:
+            raise ValueError(
+                f"RateSpec.n_requests_op must be positive, got "
+                f"{self.n_requests_op}")
+        if self.n_stripes_op <= 0:
+            raise ValueError(
+                f"RateSpec.n_stripes_op must be positive, got "
+                f"{self.n_stripes_op}")
+
     def resolve(self) -> ResolvedRates:
         if self.source == "paper":
             mu1_r = mu1_w = PAPER_MU1
@@ -143,6 +170,163 @@ class RateSpec:
         )
 
 
+# ---------------------------------------------------------------------------
+# Fault injection: wall-clock schedules of device failures and degradation.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One fault on the wall-clock timeline, active over ``[t0, t1)``.
+
+    Built via the :func:`shard_down` / :func:`device_degrade` /
+    :func:`tier2_outage` constructors rather than directly.
+
+    kind:    "shard_down" | "degrade" | "tier2_outage"
+    t0, t1:  activation interval in seconds (0 <= t0 < t1)
+    shard:   affected shard index; -1 = every shard (degrade only —
+             shard_down names one shard)
+    tier:    affected tier for "degrade" (1 or 2)
+    factor:  remaining-capacity fraction in [0, 1] for "degrade"
+             (0 = dead, 1 = no-op); unused by the other kinds
+    """
+
+    kind: str
+    t0: float
+    t1: float
+    shard: int = -1
+    tier: int = 1
+    factor: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in ("shard_down", "degrade", "tier2_outage"):
+            raise ValueError(f"unknown fault kind: {self.kind!r}")
+        if not (0.0 <= self.t0 < self.t1):
+            raise ValueError(
+                f"fault interval must satisfy 0 <= t0 < t1, got "
+                f"[{self.t0}, {self.t1})")
+        if self.kind == "degrade":
+            if self.tier not in (1, 2):
+                raise ValueError(f"degrade tier must be 1 or 2, got "
+                                 f"{self.tier}")
+            if not 0.0 <= self.factor <= 1.0:
+                raise ValueError(
+                    f"degrade factor (remaining-capacity fraction) must be "
+                    f"in [0, 1], got {self.factor}")
+        if self.kind == "shard_down" and self.shard < 0:
+            raise ValueError("shard_down needs a concrete shard index")
+
+
+def shard_down(shard: int, t0: float, t1: float) -> FaultEvent:
+    """Shard ``shard``'s tier-1 device is down over ``[t0, t1)``: its μ1
+    drops to 0 for the overlap and its key range fails over to survivors
+    (the engine remaps its arrivals; on recovery the shard re-warms from a
+    cold cache)."""
+    return FaultEvent(kind="shard_down", t0=t0, t1=t1, shard=shard)
+
+
+def device_degrade(tier: int, factor: float, t0: float, t1: float,
+                   shard: int = -1) -> FaultEvent:
+    """Tier ``tier`` runs at ``factor`` of its service rate over
+    ``[t0, t1)`` — a straggler NVMe (tier 1) or a slow disk (tier 2).
+    ``shard`` restricts a tier-1 degrade to one shard (-1 = all shards;
+    tier-2 is a shared device, so ``shard`` is ignored there)."""
+    return FaultEvent(kind="degrade", t0=t0, t1=t1, shard=shard, tier=tier,
+                      factor=factor)
+
+
+def tier2_outage(t0: float, t1: float) -> FaultEvent:
+    """The shared tier-2 (HDD / IO thread) is unreachable over ``[t0, t1)``:
+    μ2 drops to 0 — misses queue up with nowhere to drain."""
+    return FaultEvent(kind="tier2_outage", t0=t0, t1=t1)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """A wall-clock fault-injection schedule plus the client retry policy.
+
+    events:      tuple of :class:`FaultEvent` (overlapping events compose
+                 multiplicatively on the affected service rates)
+    retry:       optional :class:`repro.core.queuing.RetryPolicy` — client
+                 timeout / backoff behavior; enables retry-feedback
+                 dynamics (and metastability detection) in the fluid solve
+    refill_cold: model the cold-cache refill after a shard_down recovery
+                 by resetting the shard's windowed hit-rate telemetry (its
+                 first post-recovery requests re-miss up to one cache's
+                 worth of lines)
+
+    The schedule is pure *data*: per-window μ-multipliers and λ-remap
+    arrays derived from it ride the megabatch as operands, so fault grids
+    sweep without recompiling the engine.
+    """
+
+    events: tuple = ()
+    retry: Optional[RetryPolicy] = None
+    refill_cold: bool = True
+
+    def __post_init__(self):
+        object.__setattr__(self, "events", tuple(self.events))
+        for ev in self.events:
+            if not isinstance(ev, FaultEvent):
+                raise ValueError(
+                    f"FaultSpec.events must contain FaultEvent instances "
+                    f"(use shard_down()/device_degrade()/tier2_outage()), "
+                    f"got {ev!r}")
+
+    def validate(self, n_shards: int) -> None:
+        """Schedule/spec cross-checks (shard indices in range)."""
+        for ev in self.events:
+            if ev.shard >= n_shards:
+                raise ValueError(
+                    f"fault event {ev.kind!r} names shard {ev.shard} but "
+                    f"n_shards={n_shards}")
+
+    def down_intervals(self) -> tuple:
+        """``(shard, t0, t1)`` triples of the shard_down events — the λ
+        failover remap the storage layer applies."""
+        return tuple((ev.shard, ev.t0, ev.t1) for ev in self.events
+                     if ev.kind == "shard_down")
+
+    def remap_signature(self) -> tuple:
+        """The part of the schedule that changes the *tier-1 counter
+        simulation* (arrival remapping): shard_down intervals only.
+        Degrades, outages and retry policy act on the queuing side and are
+        free to sweep over one cached counter run."""
+        return self.down_intervals()
+
+    def mu_multipliers(self, n_windows: int, window_dt: float,
+                       n_shards: int) -> tuple[np.ndarray, np.ndarray]:
+        """Per-window service-rate multipliers ``(mu1_mult[S, W],
+        mu2_mult[W])`` implied by the schedule.
+
+        Each event scales the affected rates by its overlap fraction with
+        every window (an event covering half a window at factor 0 halves
+        that window's rate); overlapping events compose multiplicatively.
+        These arrays are plain data — they feed ``fluid_two_tier``'s
+        time-varying μ(t) and ride sweeps as operands.
+        """
+        edges = np.arange(n_windows + 1) * float(window_dt)
+        mu1_mult = np.ones((n_shards, n_windows))
+        mu2_mult = np.ones(n_windows)
+        for ev in self.events:
+            overlap = (np.minimum(edges[1:], ev.t1)
+                       - np.maximum(edges[:-1], ev.t0))
+            frac = np.clip(overlap / float(window_dt), 0.0, 1.0)
+            if ev.kind == "shard_down":
+                mu1_mult[ev.shard] *= 1.0 - frac
+            elif ev.kind == "tier2_outage":
+                mu2_mult *= 1.0 - frac
+            elif ev.kind == "degrade" and ev.tier == 1:
+                scale = 1.0 - frac * (1.0 - ev.factor)
+                if ev.shard < 0:
+                    mu1_mult *= scale[None, :]
+                else:
+                    mu1_mult[ev.shard] *= scale
+            else:  # degrade tier 2 (shared device)
+                mu2_mult *= 1.0 - frac * (1.0 - ev.factor)
+        return mu1_mult, mu2_mult
+
+
 @dataclasses.dataclass(frozen=True)
 class SimSpec:
     """One end-to-end scenario: traffic -> distributed tier 1 -> queuing."""
@@ -179,17 +363,39 @@ class SimSpec:
     # repro.core.queuing.fluid_two_tier) or "piecewise" (independent
     # per-window stationary solves, the PR 4 oracle path).
     transient_mode: str = "fluid"
+    # Wall-clock fault-injection schedule + client retry policy (see
+    # FaultSpec). Requires the wall-clock path (window_dt set) — faults are
+    # timeline events — and transient_mode="fluid" when a retry policy or
+    # any event is present (degraded-mode dynamics are fluid-only).
+    faults: Optional[FaultSpec] = None
 
     def __post_init__(self):
         if self.n_shards < 1:
             raise ValueError("n_shards must be >= 1")
         if self.n_windows < 1:
             raise ValueError("n_windows must be >= 1")
+        if self.lam < 0:
+            raise ValueError(
+                f"lam (offered arrival rate) must be non-negative, got "
+                f"{self.lam}")
+        if self.k_servers < 1:
+            raise ValueError(
+                f"k_servers must be >= 1, got {self.k_servers}")
         if self.window_dt is not None and self.window_dt <= 0:
             raise ValueError("window_dt must be positive (seconds)")
         if self.transient_mode not in ("fluid", "piecewise"):
             raise ValueError(
                 f"unknown transient_mode: {self.transient_mode!r}")
+        if self.faults is not None:
+            if self.window_dt is None:
+                raise ValueError(
+                    "fault schedules are wall-clock events: set window_dt "
+                    "(the timed-arrivals path) to use SimSpec.faults")
+            if self.transient_mode != "fluid":
+                raise ValueError(
+                    "SimSpec.faults needs transient_mode='fluid' (degraded-"
+                    "mode and retry dynamics are fluid-only)")
+            self.faults.validate(self.n_shards)
         if self.flow not in ("paper", "conserving"):
             raise ValueError(f"unknown flow convention: {self.flow!r}")
         for name in ("mu1_shards", "mu2_shards"):
@@ -269,10 +475,17 @@ class SimSpec:
         wall-clock path the *rate* of the arrival process matters too
         (timestamps scale with it), which is why ``agg_rate`` — and hence
         ``lam`` when the traffic spec carries no rate of its own — joins
-        the signature only when ``window_dt`` is set."""
+        the signature only when ``window_dt`` is set. A fault schedule
+        joins through its *remap signature* only (shard_down intervals
+        reroute arrivals and so change the counters); degrades, outages
+        and retry policies are queuing-side and sweep over one cached
+        run."""
+        remap = (self.faults.remap_signature() or None
+                 if self.faults is not None else None)
         return (self.traffic, self.store, self.n_shards, self.mapping,
                 self.window_grid(),
-                self.agg_rate() if self.window_dt is not None else None)
+                self.agg_rate() if self.window_dt is not None else None,
+                remap)
 
 
 def _replace_nested(obj, updates: dict):

@@ -62,6 +62,7 @@ from repro.sim.engine import (
     SimReport,
     Tier1Counters,
     counters_from_stats,
+    fault_owner,
     report_from_counters,
     sim_n_pages,
     tier1_counters,
@@ -301,9 +302,14 @@ def _dispatch_group(
         if timed:
             pages, is_write, times = make_timed_stream(
                 spec.traffic, default_rate=spec.agg_rate())
+            n_pages_i = sim_n_pages(spec, pages)
+            # Fault schedules ride the megabatch as *data*: the failover
+            # remap happens host-side and only reshuffles the owner
+            # operand, so a fault grid shares one compiled engine.
+            own = fault_owner(spec, pages, times, n_pages_i)
             sh_p, sh_w, counts, owner, sh_tw = partition_streams(
                 pages, is_write, n_shards=n_shards, mapping=spec.mapping,
-                n_pages=sim_n_pages(spec, pages), times=times,
+                n_pages=n_pages_i, times=times, owner=own,
             )
         else:
             pages, is_write = make_stream(spec.traffic)

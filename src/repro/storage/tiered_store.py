@@ -522,6 +522,7 @@ def partition_streams(
     cap: Optional[int] = None,
     n_windows: Optional[int] = None,
     times: Optional[np.ndarray] = None,
+    owner: Optional[np.ndarray] = None,
 ):
     """Partition a request stream into per-shard substreams (§III mapping).
 
@@ -535,13 +536,22 @@ def partition_streams(
     set (wall-clock arrival seconds, float[n]), additionally returns
     ``sh_times [S, cap]`` float32 per-shard arrival timestamps (padding
     positions carry ``-1``, which the engine's time binning drops).
+
+    ``owner`` overrides the §III mapping with a precomputed per-request
+    owner array (int[n]) — the fault-injection path passes owners already
+    rerouted around down shards (:func:`repro.core.mapping.apply_failover`).
     """
     pages = np.asarray(pages)
     is_write = np.asarray(is_write, bool)
     n_pages = int(n_pages if n_pages is not None else (pages.max() + 1))
-    owner = np.asarray(
-        page_to_shard(jnp.asarray(pages), n_shards, n_pages, mapping)
-    )
+    if owner is None:
+        owner = np.asarray(
+            page_to_shard(jnp.asarray(pages), n_shards, n_pages, mapping)
+        )
+    else:
+        owner = np.asarray(owner)
+        if owner.shape != pages.shape:
+            raise ValueError("owner must align with the request stream")
     counts = np.bincount(owner, minlength=n_shards)
     cap = int(cap if cap is not None else max(int(counts.max()), 1))
     if cap < counts.max():
@@ -655,6 +665,7 @@ def run_distributed(
     n_windows: int = 1,
     timestamps: Optional[np.ndarray] = None,
     window_dt: Optional[float] = None,
+    owner: Optional[np.ndarray] = None,
 ):
     """Distributed tier-1 cache: requests partitioned to per-shard caches by
     the §III mapping policy, shards processed by ``vmap`` (the paper's
@@ -666,14 +677,15 @@ def run_distributed(
     time windows of the *global* request stream (``win_*`` fields, shape
     ``[n_shards, n_windows]``): wall-clock bins of ``window_dt`` seconds
     when ``timestamps`` (arrival seconds, float[n]) are supplied, equal
-    request-count slices otherwise.
+    request-count slices otherwise. ``owner`` optionally overrides the
+    mapping policy with precomputed (e.g. failover-remapped) owners.
     """
     if timestamps is not None:
         if window_dt is None:
             raise ValueError("timestamps need a window_dt (seconds per bin)")
         sh_pages, sh_writes, counts, owner, sh_times = partition_streams(
             pages, is_write, n_shards=n_shards, mapping=mapping,
-            n_pages=n_pages, times=timestamps,
+            n_pages=n_pages, times=timestamps, owner=owner,
         )
         stats = jax.vmap(
             lambda p, w, tt: run_stream(
@@ -685,7 +697,7 @@ def run_distributed(
     else:
         sh_pages, sh_writes, counts, owner, sh_win = partition_streams(
             pages, is_write, n_shards=n_shards, mapping=mapping,
-            n_pages=n_pages, n_windows=n_windows,
+            n_pages=n_pages, n_windows=n_windows, owner=owner,
         )
         stats = jax.vmap(
             lambda p, w, wi: run_stream(

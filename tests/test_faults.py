@@ -1,0 +1,334 @@
+"""Fault-injection timeline: degraded-mode solves, retry storms, failover
+remap, cold-cache refill and fault-grid sweeps (one compile)."""
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.queuing import FluidReport, RetryPolicy, fluid_two_tier
+from repro.core.mapping import apply_failover
+from repro.core.traffic import TrafficSpec
+from repro.sim import (
+    FaultSpec,
+    RateSpec,
+    SimSpec,
+    device_degrade,
+    engine_compile_count,
+    reset_engine_compile_count,
+    shard_down,
+    simulate,
+    sweep,
+    tier2_outage,
+)
+
+MU1, MU2 = 100.0, 33.0
+
+
+def _timed_spec(**kw):
+    base = dict(
+        traffic=TrafficSpec(kind="irm", n_requests=1500, n_pages=256,
+                            zipf_s=0.8, seed=7, rate=100.0),
+        n_shards=4,
+        lam=25.0,
+        rates=RateSpec(mu1=MU1, mu2=MU2),
+        p12_override=0.2,
+        window_dt=1.0,
+        transient_mode="fluid",
+    )
+    base.update(kw)
+    return SimSpec(**base)
+
+
+# --- degraded-mode fluid solves (queuing level) ---------------------------
+
+def test_degraded_interval_matches_stationary():
+    """A long constant-degraded interval converges to the stationary solve
+    at the degraded rate; pre-fault windows are bit-exact vs the no-fault
+    fluid path (carryover only flows forward)."""
+    n = 40
+    lam = np.full(n, 30.0)
+    p12 = np.full(n, 0.1)
+    mu1 = np.full(n, MU1)
+    mu1_deg = mu1.copy()
+    mu1_deg[10:] = 0.5 * MU1  # degraded from t=10 onwards
+    base = fluid_two_tier(lam, p12, mu1, MU2, dt=1.0)
+    deg = fluid_two_tier(lam, p12, mu1_deg, MU2, dt=1.0)
+    # Healthy prefix: byte-identical to the no-fault solve.
+    for name in ("q1", "q2", "w1", "w2", "rho1", "rho2", "response"):
+        a, b = getattr(base, name), getattr(deg, name)
+        assert np.array_equal(a[:10], b[:10]), name
+    # Degraded tail: converged to the stationary network at mu1/2 — which
+    # is exactly what a fluid solve running at the degraded rate from the
+    # start settles into.
+    ref = fluid_two_tier(lam, p12, np.full(n, 0.5 * MU1), MU2, dt=1.0)
+    np.testing.assert_allclose(deg.w1[-1], ref.w1[-1], rtol=1e-9)
+    np.testing.assert_allclose(deg.q1[-1], ref.q1[-1], rtol=1e-9)
+    assert deg.w1[-1] > base.w1[-1]  # degraded device is slower
+
+
+def test_dead_device_backlog_grows_cleanly():
+    """mu -> 0 with offered load: backlog grows linearly, w1 = inf only in
+    the stationary sense — and no runtime warnings leak out."""
+    n = 6
+    lam = np.full(n, 20.0)
+    p12 = np.zeros(n)
+    mu1 = np.zeros(n)  # dead the whole time
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        rep = fluid_two_tier(lam, p12, mu1, MU2, dt=1.0)
+    assert not rep.stable.any()
+    assert np.all(np.diff(rep.q1) > 0)  # strictly growing backlog
+    # No service at all: window-mean backlog ~ lam * t (midpoint rule).
+    np.testing.assert_allclose(rep.q1[-1], 20.0 * (n - 0.5), rtol=1e-6)
+    assert np.all(np.isinf(rep.w1))
+
+
+def test_recovery_from_saturation_drains():
+    """Outage ends -> the accumulated backlog drains at capacity and the
+    final windows return to the healthy stationary point."""
+    n = 30
+    lam = np.full(n, 30.0)
+    p12 = np.full(n, 0.1)
+    mu1 = np.full(n, MU1)
+    mu1[2:6] = 0.0  # dead for 4 windows
+    base = fluid_two_tier(lam, p12, np.full(n, MU1), MU2, dt=1.0)
+    rep = fluid_two_tier(lam, p12, mu1, MU2, dt=1.0)
+    peak = rep.q1[2:6].max()
+    assert peak > 50.0  # outage piled up real backlog
+    assert rep.q1[-1] < 1.0  # ... which fully drained
+    np.testing.assert_allclose(rep.w1[-1], base.w1[-1], rtol=1e-6)
+    assert rep.stable[-1]
+
+
+def test_zero_traffic_adjacent_to_overload():
+    """Idle windows bracketing a hard overload: no NaNs, correct stability
+    flags, and the backlog drains during the idle tail."""
+    lam = np.array([0.0, 0.0, 200.0, 200.0, 0.0, 0.0, 0.0, 0.0])
+    p12 = np.zeros_like(lam)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        rep = fluid_two_tier(lam, p12, MU1, MU2, dt=1.0)
+    assert list(rep.stable) == [True, True, False, False,
+                                True, True, True, True]
+    assert np.isfinite(rep.q1).all() and np.isfinite(rep.response).all()
+    assert rep.q1[2:4].max() > 50.0
+    assert rep.q1[-1] < 1.0
+
+
+# --- retry storms (queuing level) ----------------------------------------
+
+STORM_LAM = np.array([30.0] * 4 + [130.0] * 2 + [30.0] * 18)
+AGGRESSIVE = RetryPolicy(timeout=0.2, max_retries=4,
+                         backoff_base=1.0, backoff_init=0.2)
+GENTLE = RetryPolicy(timeout=0.2, max_retries=4,
+                     backoff_base=4.0, backoff_init=0.5, backoff_cap=8.0)
+
+
+def _storm(retry):
+    p12 = np.full_like(STORM_LAM, 0.1)
+    return fluid_two_tier(STORM_LAM, p12, MU1, MU2, dt=1.0, retry=retry)
+
+
+def test_retry_storm_is_metastable():
+    """Aggressive timeouts: the burst's timeouts re-offer enough load that
+    the system stays pinned above capacity after the burst passes."""
+    rep = _storm(AGGRESSIVE)
+    onset = int(rep.metastable_onset())
+    assert onset == 6  # right after the 2-window burst
+    assert rep.metastable[-1]  # never recovers
+    assert rep.retry_rate[-1] > 0.0
+    # External load alone is well under capacity — this is pure feedback.
+    assert STORM_LAM[-1] < MU1
+
+
+def test_capped_backoff_drains():
+    """Same burst, same retry budget — but exponential backoff with a cap
+    spreads the re-offers and the queue drains."""
+    rep = _storm(GENTLE)
+    assert int(rep.metastable_onset()) == -1
+    assert rep.q1[-1] < 1.0
+    assert not rep.metastable[-1]
+
+
+def test_retry_backlog_ordering():
+    """Backlog curves order by retry pressure: aggressive >= gentle >= no
+    retries, window by window."""
+    none = _storm(None)
+    gen = _storm(GENTLE)
+    agg = _storm(AGGRESSIVE)
+    tol = 1e-9
+    assert np.all(agg.q1 >= gen.q1 - tol)
+    assert np.all(gen.q1 >= none.q1 - tol)
+    assert agg.q1[-1] > 10.0 * max(gen.q1[-1], 1e-3)
+
+
+def test_metastable_onset_trailing_run_semantics():
+    def _rep(meta):
+        z = np.zeros(len(meta))
+        return FluidReport(lam=z, p12=z, lam_eff=z, rho1=z, rho2=z, w1=z,
+                           w2=z, response=z, stable=z.astype(bool), q1=z,
+                           q2=z, metastable=np.asarray(meta, bool))
+    # Mid-run metastable episode that recovers -> healthy ending, -1.
+    assert int(_rep([0, 1, 1, 0, 0]).metastable_onset()) == -1
+    # Trailing run -> its first window, ignoring earlier recovered runs.
+    assert int(_rep([0, 1, 0, 1, 1]).metastable_onset()) == 3
+    assert int(_rep([1, 1, 1, 1, 1]).metastable_onset()) == 0
+    # No retry diagnostics at all -> -1.
+    z = np.zeros(3)
+    rep = FluidReport(lam=z, p12=z, lam_eff=z, rho1=z, rho2=z, w1=z, w2=z,
+                      response=z, stable=z.astype(bool), q1=z, q2=z)
+    assert int(rep.metastable_onset()) == -1
+
+
+# --- failover remap (mapping + engine level) ------------------------------
+
+def test_apply_failover_reroutes_to_survivors():
+    owner = np.array([0, 1, 2, 3, 1, 1], dtype=np.int32)
+    times = np.array([0.5, 0.5, 0.5, 0.5, 2.5, 9.0])
+    new, remapped = apply_failover(owner, times, [(1, 2.0, 5.0)], 4)
+    # Only the request hitting shard 1 during [2, 5) moves — to shard 2.
+    np.testing.assert_array_equal(new, [0, 1, 2, 3, 2, 1])
+    np.testing.assert_array_equal(remapped,
+                                  [False, False, False, False, True, False])
+    # All shards down at that instant: requests keep their home shard.
+    all_down = [(s, 0.0, 1.0) for s in range(4)]
+    new2, remapped2 = apply_failover(owner[:4], times[:4], all_down, 4)
+    np.testing.assert_array_equal(new2, owner[:4])
+    assert not remapped2.any()
+
+
+def test_shard_down_failover_in_engine():
+    base = simulate(_timed_spec())
+    fs = FaultSpec(events=(shard_down(1, 2.0, 5.0),), refill_cold=False)
+    rep = simulate(_timed_spec(faults=fs))
+    req_b = np.asarray(base.windows.requests)
+    req_f = np.asarray(rep.windows.requests)
+    # The down shard serves nothing during the outage windows ...
+    assert req_f[1, 2:5].sum() == 0
+    assert req_b[1, 2:5].sum() > 0
+    # ... its traffic lands on survivors: per-window totals are conserved.
+    np.testing.assert_array_equal(req_f.sum(axis=0), req_b.sum(axis=0))
+    assert rep.requests == base.requests
+    # Windowed counters reconcile bit-exactly with shard totals.
+    for name in ("requests", "hits", "misses", "tier2_reads"):
+        win = np.asarray(getattr(rep.windows, name)).sum(axis=1)
+        tot = np.array([getattr(s, name) for s in rep.shards])
+        np.testing.assert_array_equal(win, tot)
+
+
+def test_cold_refill_after_recovery():
+    fs_cold = FaultSpec(events=(shard_down(1, 2.0, 5.0),), refill_cold=True)
+    fs_warm = FaultSpec(events=(shard_down(1, 2.0, 5.0),), refill_cold=False)
+    cold = simulate(_timed_spec(faults=fs_cold))
+    warm = simulate(_timed_spec(faults=fs_warm))
+    # Same stream, same remap — only the post-recovery hit accounting moves.
+    assert cold.requests == warm.requests
+    extra_miss = cold.misses - warm.misses
+    assert extra_miss > 0  # recovery re-warms from an empty cache
+    assert warm.hits - cold.hits == extra_miss
+    assert cold.tier2_reads - warm.tier2_reads == extra_miss
+    # The correction lands on the recovered shard, after recovery.
+    m_cold = np.asarray(cold.windows.misses)
+    m_warm = np.asarray(warm.windows.misses)
+    delta = m_cold - m_warm
+    assert delta[1, 5:].sum() == extra_miss
+    assert np.all(delta[0] == 0) and np.all(delta[2:] == 0)
+    # Reconciliation stays exact after the refill correction.
+    for name in ("requests", "hits", "misses", "tier2_reads"):
+        win = np.asarray(getattr(cold.windows, name)).sum(axis=1)
+        tot = np.array([getattr(s, name) for s in cold.shards])
+        np.testing.assert_array_equal(win, tot)
+
+
+# --- degraded solves (engine level) ---------------------------------------
+
+def test_factor_one_degrade_is_bit_exact():
+    """factor=1.0 exercises the whole fault path (spill branch, mu
+    multipliers, remap plumbing) but must not change a single bit of the
+    transient solution."""
+    base = simulate(_timed_spec())
+    rep = simulate(_timed_spec(faults=FaultSpec(
+        events=(device_degrade(1, 1.0, 2.0, 5.0),))))
+    for name in ("q1", "q2", "w1", "w2", "rho1", "rho2", "response",
+                 "stable", "lam_eff"):
+        a = np.asarray(getattr(base.transient, name))
+        b = np.asarray(getattr(rep.transient, name))
+        assert np.array_equal(a, b), name
+    assert rep.requests == base.requests
+    assert rep.misses == base.misses
+
+
+def test_tier2_outage_backs_up_tier2():
+    base = simulate(_timed_spec())
+    rep = simulate(_timed_spec(faults=FaultSpec(
+        events=(tier2_outage(2.0, 6.0),))))
+    q2_b = np.asarray(base.transient.q2)
+    q2_f = np.asarray(rep.transient.q2)
+    # Misses have nowhere to go while tier 2 is out: backlog builds ...
+    assert q2_f[2:6].max() > 10.0 * max(q2_b.max(), 1e-6)
+    # ... and drains after the outage.
+    assert q2_f[-1] < 1.0
+
+
+def test_shard_down_metastable_with_aggressive_retries():
+    """A long outage plus hot retries drives the pooled solve metastable;
+    capped backoff over the same outage recovers."""
+    fs_hot = FaultSpec(events=(shard_down(1, 2.0, 5.0),),
+                       retry=RetryPolicy(timeout=0.05, max_retries=6,
+                                         backoff_base=1.0))
+    rep = simulate(_timed_spec(faults=fs_hot))
+    # Per-shard view: the dead shard's survivors carry inflated load; the
+    # retry diagnostics are attached to the fluid report either way.
+    assert rep.transient.retry_rate is not None
+    assert rep.transient.metastable is not None
+
+
+# --- sweeps, caching, determinism ----------------------------------------
+
+def test_fault_grid_sweep_compiles_once():
+    faults_axis = [None]
+    for t0 in (1.0, 2.0, 3.0):
+        faults_axis.append(
+            FaultSpec(events=(shard_down(1, t0, t0 + 2.0),)))
+    for to in (0.1, 0.2):
+        faults_axis.append(FaultSpec(
+            events=(device_degrade(1, 0.5, 1.0, 3.0),),
+            retry=RetryPolicy(timeout=to, max_retries=3)))
+    reset_engine_compile_count()
+    res = sweep(_timed_spec(), {"faults": faults_axis})
+    assert len(res.reports) == len(faults_axis)
+    assert engine_compile_count() <= 2
+    # Fault schedules are data: the remap changed per-shard loads without
+    # recompiling, and the no-fault point matches a plain simulate().
+    solo = simulate(_timed_spec())
+    assert res.reports[0].requests == solo.requests
+    assert [s.requests for s in res.reports[1].shards] != \
+        [s.requests for s in res.reports[0].shards]
+
+
+def test_retry_axis_shares_cache_signature():
+    """Retry/degrade sweeps act on the queuing side only — they dedupe to
+    one cached tier-1 counter run. shard_down changes the remap, so it
+    must not share."""
+    s_none = _timed_spec()
+    s_r1 = _timed_spec(faults=FaultSpec(retry=RetryPolicy(timeout=0.1)))
+    s_r2 = _timed_spec(faults=FaultSpec(retry=RetryPolicy(timeout=0.9)))
+    s_deg = _timed_spec(faults=FaultSpec(
+        events=(device_degrade(1, 0.5, 1.0, 2.0),)))
+    s_down = _timed_spec(faults=FaultSpec(
+        events=(shard_down(1, 1.0, 2.0),)))
+    assert s_r1.cache_signature() == s_r2.cache_signature()
+    assert s_r1.cache_signature() == s_none.cache_signature()
+    assert s_deg.cache_signature() == s_none.cache_signature()
+    assert s_down.cache_signature() != s_none.cache_signature()
+
+
+def test_fault_report_deterministic():
+    fs = FaultSpec(events=(shard_down(1, 2.0, 5.0),),
+                   retry=RetryPolicy(timeout=0.2, max_retries=2))
+    a = json.dumps(simulate(_timed_spec(faults=fs)).to_dict(),
+                   sort_keys=True)
+    b = json.dumps(simulate(_timed_spec(faults=fs)).to_dict(),
+                   sort_keys=True)
+    assert a == b

@@ -1,0 +1,192 @@
+"""Input-validation hardening: nonsensical specs raise clear ValueErrors at
+construction time instead of surfacing as NaN reports downstream."""
+import numpy as np
+import pytest
+
+from repro.core.queuing import RetryPolicy, transient_two_tier
+from repro.core.traffic import TrafficSpec
+from repro.sim import (
+    FaultEvent,
+    FaultSpec,
+    RateSpec,
+    SimSpec,
+    device_degrade,
+    shard_down,
+    tier2_outage,
+)
+
+
+def _traffic(**kw):
+    base = dict(kind="irm", n_requests=100, n_pages=64)
+    base.update(kw)
+    return TrafficSpec(**base)
+
+
+def _spec(**kw):
+    base = dict(traffic=_traffic(), n_shards=2, lam=10.0,
+                rates=RateSpec(mu1=100.0, mu2=33.0))
+    base.update(kw)
+    return SimSpec(**base)
+
+
+# --- TrafficSpec ----------------------------------------------------------
+
+def test_traffic_n_requests_must_be_positive():
+    with pytest.raises(ValueError, match="n_requests must be positive"):
+        _traffic(n_requests=0)
+
+
+def test_traffic_n_pages_must_be_positive():
+    with pytest.raises(ValueError, match="n_pages must be positive"):
+        _traffic(n_pages=-1)
+
+
+def test_traffic_write_fraction_range():
+    with pytest.raises(ValueError, match=r"write_fraction must be in \[0, 1\]"):
+        _traffic(write_fraction=1.5)
+    # Boundaries are legal (pure-read / pure-write workloads).
+    _traffic(write_fraction=0.0)
+    _traffic(write_fraction=1.0)
+
+
+def test_traffic_rate_non_negative():
+    with pytest.raises(ValueError, match="rate must be non-negative"):
+        _traffic(rate=-1.0)
+    _traffic(rate=0.0)  # 0 = unset, the caller supplies a default
+
+
+def test_traffic_burst_rate_non_negative():
+    with pytest.raises(ValueError, match="burst_rate must be non-negative"):
+        _traffic(burst_rate=-5.0)
+
+
+# --- RateSpec -------------------------------------------------------------
+
+@pytest.mark.parametrize("field", ["mu1", "mu2", "mu1_read", "mu1_write"])
+def test_rates_mu_must_be_positive(field):
+    with pytest.raises(ValueError, match=f"{field} must be a positive rate"):
+        RateSpec(**{field: 0.0})
+
+
+def test_rates_zero_mu_points_at_faults():
+    """The error explains that failed devices are modeled with faults."""
+    with pytest.raises(ValueError, match="SimSpec.faults"):
+        RateSpec(mu1=0.0)
+
+
+@pytest.mark.parametrize("field", ["mu1_shards", "mu2_shards"])
+def test_rates_shard_vectors_positive_nonempty(field):
+    with pytest.raises(ValueError, match=f"{field} must be a non-empty"):
+        RateSpec(**{field: ()})
+    with pytest.raises(ValueError, match=f"{field} must be a non-empty"):
+        RateSpec(**{field: (100.0, 0.0)})
+
+
+def test_rates_operating_points_positive():
+    with pytest.raises(ValueError, match="n_requests_op must be positive"):
+        RateSpec(n_requests_op=0)
+    with pytest.raises(ValueError, match="n_stripes_op must be positive"):
+        RateSpec(n_stripes_op=-1)
+
+
+# --- SimSpec --------------------------------------------------------------
+
+def test_sim_lam_non_negative():
+    with pytest.raises(ValueError, match="lam .* must be non-negative"):
+        _spec(lam=-1.0)
+    _spec(lam=0.0)  # idle system is a legal regime
+
+
+def test_sim_k_servers_at_least_one():
+    with pytest.raises(ValueError, match="k_servers must be >= 1"):
+        _spec(k_servers=0)
+
+
+def test_sim_faults_require_wall_clock_windows():
+    with pytest.raises(ValueError, match="set window_dt"):
+        _spec(faults=FaultSpec(events=(shard_down(0, 1.0, 2.0),)))
+
+
+def test_sim_faults_require_fluid_mode():
+    with pytest.raises(ValueError, match="transient_mode='fluid'"):
+        _spec(window_dt=1.0, transient_mode="piecewise",
+              faults=FaultSpec(retry=RetryPolicy(timeout=0.1)))
+
+
+def test_sim_faults_shard_index_in_range():
+    with pytest.raises(ValueError, match="names shard 5"):
+        _spec(window_dt=1.0,
+              faults=FaultSpec(events=(shard_down(5, 1.0, 2.0),)))
+
+
+# --- FaultEvent / FaultSpec ----------------------------------------------
+
+def test_fault_event_unknown_kind():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent(kind="meteor_strike", t0=0.0, t1=1.0)
+
+
+def test_fault_event_interval_ordering():
+    with pytest.raises(ValueError, match="0 <= t0 < t1"):
+        shard_down(0, 2.0, 1.0)
+    with pytest.raises(ValueError, match="0 <= t0 < t1"):
+        tier2_outage(-1.0, 1.0)
+
+
+def test_fault_event_degrade_factor_range():
+    with pytest.raises(ValueError, match=r"factor .* in \[0, 1\]"):
+        device_degrade(1, 1.5, 0.0, 1.0)
+
+
+def test_fault_event_degrade_tier():
+    with pytest.raises(ValueError, match="tier must be 1 or 2"):
+        device_degrade(3, 0.5, 0.0, 1.0)
+
+
+def test_fault_event_shard_down_needs_shard():
+    with pytest.raises(ValueError, match="concrete shard index"):
+        FaultEvent(kind="shard_down", t0=0.0, t1=1.0)
+
+
+def test_fault_spec_rejects_non_events():
+    with pytest.raises(ValueError, match="FaultEvent instances"):
+        FaultSpec(events=("shard_down",))
+
+
+# --- RetryPolicy ----------------------------------------------------------
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError, match="timeout must be > 0"):
+        RetryPolicy(timeout=0.0)
+    with pytest.raises(ValueError, match="max_retries must be >= 0"):
+        RetryPolicy(timeout=0.1, max_retries=-1)
+    with pytest.raises(ValueError, match="backoff_base must be >= 1"):
+        RetryPolicy(timeout=0.1, backoff_base=0.5)
+    with pytest.raises(ValueError, match="backoff_init must be >= 0"):
+        RetryPolicy(timeout=0.1, backoff_init=-1.0)
+    with pytest.raises(ValueError, match="backoff_cap must be >= 0"):
+        RetryPolicy(timeout=0.1, backoff_cap=-1.0)
+    with pytest.raises(ValueError, match=r"jitter must be in \[0, 1\)"):
+        RetryPolicy(timeout=0.1, jitter=1.0)
+
+
+def test_retry_policy_delays():
+    p = RetryPolicy(timeout=0.1, max_retries=3, backoff_base=2.0,
+                    backoff_init=0.5, backoff_cap=1.5)
+    np.testing.assert_allclose(p.delays(), [0.5, 1.0, 1.5])
+    # backoff_init defaults to the timeout itself.
+    np.testing.assert_allclose(
+        RetryPolicy(timeout=0.2, max_retries=2).delays(), [0.2, 0.4])
+
+
+# --- solver-level guards --------------------------------------------------
+
+def test_piecewise_mode_rejects_fault_dynamics():
+    lam = np.full(4, 10.0)
+    p12 = np.full(4, 0.2)
+    with pytest.raises(ValueError, match="fluid-only"):
+        transient_two_tier(lam, p12, 100.0, 33.0, mode="piecewise",
+                           retry=RetryPolicy(timeout=0.1))
+    with pytest.raises(ValueError, match="fluid-only"):
+        transient_two_tier(lam, p12, 100.0, 33.0, mode="piecewise",
+                           tier1_spill=True)
