@@ -1,0 +1,204 @@
+"""Miss-rate-curve engine benchmark: exactness, compile count, speedup.
+
+  PYTHONPATH=src python benchmarks/bench_mrc.py [--smoke]
+
+Gates the one-pass MRC path (``repro.sim.mrc`` + ``sweep(mrc="auto")``)
+and writes a ``BENCH_mrc.json`` artifact at the repo root:
+
+- **exactness gate** — every :class:`~repro.sim.engine.Tier1Counters`
+  field from :func:`~repro.sim.mrc.mrc_tier1_counters` is bit-identical
+  to the sequential scan engine for LRU at **all** cache sizes of the
+  curve grid (per-size verdicts land in the artifact).
+- **compile gate** — the 64-size sweep routes through MRC with **zero**
+  engine compiles and at most :data:`REUSE_COMPILE_LIMIT` distance-engine
+  compiles.
+- **speedup gate** — ≥ :data:`MIN_SPEEDUP`x points/sec on the 64-size
+  grid versus the scan engine (timed on a stratified subset of sizes and
+  scaled — the engine pays a fresh structural compile per size, which is
+  exactly what the MRC path removes).
+
+``--smoke`` shrinks the stream (gates unchanged) for CI.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+# Match the sweep benches: shard sweep points across forced host devices
+# (must precede jax import).
+_FLAG = "--xla_force_host_platform_device_count"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    _n_dev = max(1, min(os.cpu_count() or 1, 8))
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + f" {_FLAG}={_n_dev}"
+    ).strip()
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.kernels.reuse_distance import (  # noqa: E402
+    reset_reuse_compile_count,
+    reuse_compile_count,
+)
+from repro.sim import (  # noqa: E402
+    RateSpec,
+    SimSpec,
+    mrc_tier1_counters,
+    sweep,
+)
+from repro.sim.engine import tier1_counters  # noqa: E402
+from repro.sim.spec import StoreConfig, TrafficSpec  # noqa: E402
+from repro.sim.sweep import (  # noqa: E402
+    engine_compile_count,
+    reset_engine_compile_count,
+)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARTIFACT = os.path.join(ROOT, "BENCH_mrc.json")
+N_SIZES = 64                  # the capacity-planning curve grid
+REUSE_COMPILE_LIMIT = 2       # distance-engine compiles for the whole curve
+MIN_SPEEDUP = 10.0            # points/sec vs the per-size scan engine
+ENGINE_SUBSET = 4             # sizes the scan engine is actually timed on
+
+
+def _base(smoke: bool) -> SimSpec:
+    return SimSpec(
+        traffic=TrafficSpec(kind="irm",
+                            n_requests=600 if smoke else 4000,
+                            n_pages=128 if smoke else 512,
+                            write_fraction=0.25, seed=17),
+        store=StoreConfig(n_lines=8, policy="lru"),
+        n_shards=4,
+        lam=100.0,
+        rates=RateSpec(source="paper"),
+    )
+
+
+def _size_grid(n_pages: int) -> list[int]:
+    """Exactly N_SIZES distinct cache sizes from 1 to 2x the page count
+    (log-spaced head + linear tail fill)."""
+    hi = 2 * n_pages
+    sizes = np.unique(np.round(np.geomspace(1, hi, N_SIZES)).astype(int))
+    extra = np.setdiff1d(np.arange(1, hi + 1), sizes)
+    sizes = np.concatenate([sizes, extra[: N_SIZES - sizes.size]])
+    return sorted(int(s) for s in sizes)
+
+
+def bench_exactness(spec: SimSpec, sizes: list[int]) -> dict:
+    """All Tier1Counters fields bit-equal to the scan engine at every
+    size of the curve grid."""
+    t0 = time.perf_counter()
+    mrc = mrc_tier1_counters(spec, sizes)
+    mrc_wall = time.perf_counter() - t0
+
+    per_size = {}
+    t0 = time.perf_counter()
+    for C in sizes:
+        ref = tier1_counters(spec.replace(**{"store.n_lines": C}))
+        got = mrc[C]
+        bad = [f for f in ref._fields
+               if not np.array_equal(np.asarray(getattr(got, f)),
+                                     np.asarray(getattr(ref, f)))]
+        per_size[str(C)] = {"exact": not bad,
+                            **({"mismatched_fields": bad} if bad else {})}
+    engine_wall = time.perf_counter() - t0
+    n_exact = sum(v["exact"] for v in per_size.values())
+    return {
+        "n_sizes": len(sizes),
+        "n_exact": n_exact,
+        "mrc_wall_s": round(mrc_wall, 3),
+        "engine_wall_s": round(engine_wall, 3),
+        "per_size": per_size,
+        "ok": n_exact == len(sizes),
+    }
+
+
+def bench_curve_sweep(spec: SimSpec, sizes: list[int]) -> dict:
+    """The 64-size capacity-planning sweep: zero engine compiles, bounded
+    distance-engine compiles, and >= MIN_SPEEDUP x points/sec over the
+    scan engine (timed on a stratified size subset and scaled)."""
+    axes = {"store.n_lines": sizes}
+    reset_engine_compile_count()
+    reset_reuse_compile_count()
+    t0 = time.perf_counter()
+    res = sweep(spec, axes)                       # mrc="auto"
+    wall_mrc = time.perf_counter() - t0
+    engine_compiles = engine_compile_count()
+    reuse_compiles = reuse_compile_count()
+    pps_mrc = len(res.points) / wall_mrc
+
+    subset = sizes[:: max(1, len(sizes) // ENGINE_SUBSET)][:ENGINE_SUBSET]
+    t0 = time.perf_counter()
+    ref = sweep(spec, {"store.n_lines": subset}, mrc="off")
+    wall_eng = time.perf_counter() - t0
+    pps_eng = len(ref.points) / wall_eng
+
+    # Cross-check the subset's reports against the MRC-served curve.
+    by_size = {pt["store.n_lines"]: rep
+               for pt, rep in zip(res.points, res.reports)}
+    mismatches = sum(
+        1 for pt, rrep in zip(ref.points, ref.reports)
+        if (by_size[pt["store.n_lines"]].misses != rrep.misses
+            or by_size[pt["store.n_lines"]].tier2_writes != rrep.tier2_writes)
+    )
+    speedup = pps_mrc / pps_eng
+    return {
+        "n_points": len(res.points),
+        "wall_s": round(wall_mrc, 3),
+        "points_per_sec": round(pps_mrc, 3),
+        "engine_compiles": engine_compiles,
+        "reuse_compiles": reuse_compiles,
+        "reuse_compile_limit": REUSE_COMPILE_LIMIT,
+        "engine_subset_sizes": subset,
+        "engine_wall_s": round(wall_eng, 3),
+        "engine_points_per_sec": round(pps_eng, 3),
+        "subset_report_mismatches": mismatches,
+        "speedup": round(speedup, 2),
+        "min_speedup": MIN_SPEEDUP,
+        "ok": (engine_compiles == 0
+               and reuse_compiles <= REUSE_COMPILE_LIMIT
+               and mismatches == 0
+               and speedup >= MIN_SPEEDUP),
+    }
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    spec = _base(smoke)
+    sizes = _size_grid(spec.traffic.n_pages)
+    assert len(sizes) == N_SIZES
+    artifact = {
+        "mode": "smoke" if smoke else "full",
+        "devices": jax.local_device_count(),
+        "n_requests": spec.traffic.n_requests,
+        "exactness": bench_exactness(spec, sizes),
+        "curve_sweep": bench_curve_sweep(spec, sizes),
+    }
+    with open(ARTIFACT, "w") as f:
+        json.dump(artifact, f, indent=1)
+        f.write("\n")
+
+    ex, cs = artifact["exactness"], artifact["curve_sweep"]
+    print(f"devices: {artifact['devices']}")
+    print(f"exactness: {ex['n_exact']}/{ex['n_sizes']} sizes bit-exact "
+          f"(mrc {ex['mrc_wall_s']}s vs engine {ex['engine_wall_s']}s) "
+          f"ok={ex['ok']}")
+    print(f"curve sweep: {cs['n_points']} sizes in {cs['wall_s']}s "
+          f"({cs['points_per_sec']} pts/s, {cs['engine_compiles']} engine / "
+          f"{cs['reuse_compiles']} distance compiles) vs engine "
+          f"{cs['engine_points_per_sec']} pts/s -> speedup {cs['speedup']}x "
+          f"ok={cs['ok']}")
+    print(f"artifact: {ARTIFACT}")
+    failures = [k for k in ("exactness", "curve_sweep")
+                if not artifact[k]["ok"]]
+    if failures:
+        raise SystemExit(f"bench_mrc gates failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

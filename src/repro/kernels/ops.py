@@ -15,11 +15,12 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.page_gather import page_copy as _page_copy
 from repro.kernels.paged_attention import paged_attention as _paged
+from repro.kernels.reuse_distance import reuse_distances as _reuse
 from repro.kernels.rglru_scan import rglru_scan_kernel as _rglru
 from repro.kernels.ssd_scan import ssd_scan_kernel as _ssd
 
 __all__ = ["INTERPRET", "flash_attention", "paged_attention", "page_copy",
-           "rglru_scan", "ssd_scan"]
+           "reuse_distances", "rglru_scan", "ssd_scan"]
 
 INTERPRET = os.environ.get("REPRO_KERNELS", "interpret") != "tpu"
 
@@ -40,6 +41,16 @@ def paged_attention(q, pool, page_slot, lengths, *,
 def page_copy(dst, src, dst_idx, src_idx, *, interpret: Optional[bool] = None):
     return _page_copy(dst, src, dst_idx, src_idx,
                       interpret=INTERPRET if interpret is None else interpret)
+
+
+def reuse_distances(prev, valid, *, block=128,
+                    interpret: Optional[bool] = None):
+    """Reuse (LRU stack) distances per request — Pallas dominance-count
+    kernel on TPU, bit-identical pure-jax fallback in interpret mode (the
+    fallback is :func:`repro.kernels.ref.reuse_distance_ref`, not the
+    interpreted kernel: same integer math, much faster on CPU)."""
+    return _reuse(prev, valid, block=block,
+                  interpret=INTERPRET if interpret is None else interpret)
 
 
 def rglru_scan(u, w_a, b_a, w_x, b_x, lam, *, block_w=128, chunk=128,

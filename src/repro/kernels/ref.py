@@ -16,9 +16,15 @@ __all__ = [
     "attention_ref",
     "paged_attention_ref",
     "page_copy_ref",
+    "reuse_distance_ref",
     "rglru_ref",
     "ssd_ref",
 ]
+
+# Reuse distance of a first-ever access (compulsory miss): larger than any
+# possible cache size, so `d < C` is False for every C. Shared sentinel with
+# kernels/reuse_distance.py.
+DIST_INF = 2**31 - 1
 
 
 def attention_ref(
@@ -94,6 +100,58 @@ def page_copy_ref(
         return jnp.where(ok, d.at[di].set(row), d)
 
     return jax.lax.fori_loop(0, dst_idx.shape[0], body, dst)
+
+
+def reuse_distance_ref(
+    prev: jnp.ndarray,   # int32[S, L] previous-occurrence index (-1 = first)
+    valid: jnp.ndarray,  # bool[S, L]  real positions (False = padding)
+    *,
+    block: int = 128,
+) -> jnp.ndarray:
+    """LRU stack (Mattson reuse) distance per request, pure jnp.
+
+    For request ``j`` of shard row ``s`` with previous same-page occurrence
+    ``i = prev[s, j]``, the reuse distance is the number of *distinct* pages
+    touched strictly between the two accesses — counted as the positions
+    ``k`` in ``(i, j)`` whose own previous occurrence lies at or before
+    ``i`` (``prev[s, k] <= i``), i.e. the first in-gap occurrence of each
+    distinct page. First-ever accesses return :data:`DIST_INF` (compulsory
+    miss at every cache size); padding returns ``-1``. Distances never
+    cross shard rows.
+
+    This is both the oracle for the Pallas kernel golden tests and the
+    production CPU fallback: the O(L^2) dominance count is blocked over
+    ``block`` queries at a time (O(block*L) memory, vectorized compares),
+    not materialized as a full [L, L] matrix.
+    """
+    prev = jnp.asarray(prev, jnp.int32)
+    valid = jnp.asarray(valid, bool)
+    S, L = prev.shape
+    pad = (-L) % block
+    P = jnp.pad(prev, ((0, 0), (0, pad)), constant_values=-1)
+    V = jnp.pad(valid, ((0, 0), (0, pad)), constant_values=False)
+    Lp = L + pad
+    kidx = jnp.arange(Lp, dtype=jnp.int32)
+
+    def per_shard(Ps, Vs):
+        def jblock(jb):
+            j0 = jb * block
+            pj = jax.lax.dynamic_slice(Ps, (j0,), (block,))
+            vj = jax.lax.dynamic_slice(Vs, (j0,), (block,))
+            jidx = j0 + jnp.arange(block, dtype=jnp.int32)
+            m = (
+                (kidx[None, :] > pj[:, None])
+                & (kidx[None, :] < jidx[:, None])
+                & (Ps[None, :] <= pj[:, None])
+                & Vs[None, :]
+            )
+            d = jnp.sum(m, axis=1, dtype=jnp.int32)
+            d = jnp.where(pj >= 0, d, DIST_INF)
+            return jnp.where(vj, d, -1)
+
+        return jax.lax.map(jblock, jnp.arange(Lp // block)).reshape(Lp)
+
+    return jax.vmap(per_shard)(P, V)[:, :L]
 
 
 def rglru_ref(u, w_a, b_a, w_x, b_x, lam):

@@ -1,0 +1,202 @@
+"""Reuse-distance (Mattson LRU stack distance) extraction kernel.
+
+Per request, the number of *distinct* keys touched since that key's last
+access — the quantity the classic stack-distance / miss-ratio-curve
+formulation is built on: under fully-associative LRU of capacity ``C`` a
+request hits iff its reuse distance ``d < C``, so one pass over the stream
+yields exact hit/miss counters for *every* cache size at once
+(:mod:`repro.sim.mrc` builds the counters; this module computes ``d``).
+
+The distance is reduced to a 2-D dominance count over the host-computed
+previous-occurrence index ``P`` (``P[j]`` = index of the previous access of
+``pages[j]`` within its shard row, ``-1`` for a first access):
+
+    d_j = #{ k : P[j] < k < j  and  P[k] <= P[j]  and  valid[k] }
+
+(the in-gap positions that are the *first* in-gap occurrence of their
+page). The Pallas kernel tiles this count as a ``[block, block]``
+broadcast-compare per ``(shard, query-block)`` grid cell, looping over
+key blocks up to the query block — O(L^2/2) compares, VPU-friendly, no
+inter-step dependence (contrast the sequential per-request ``lax.scan`` of
+the cache engine). Distances never leak across shard rows (each grid cell
+reads only its own row) or into pad slots (pads output ``-1`` and are
+excluded from every count).
+
+On this CPU container the production entry point :func:`reuse_distances`
+dispatches to the pure-jax fallback (:func:`repro.kernels.ref.
+reuse_distance_ref`, same math, same int32 results — bit-identical); on a
+TPU backend (``REPRO_KERNELS=tpu``) it compiles the Pallas kernel. The
+interpret-mode Pallas path stays testable everywhere
+(``reuse_distance_kernel(..., interpret=True)``).
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import DIST_INF, reuse_distance_ref
+
+__all__ = [
+    "DIST_INF",
+    "prev_occurrence",
+    "reuse_distance_kernel",
+    "reuse_distances",
+    "reuse_compile_count",
+    "reset_reuse_compile_count",
+]
+
+# Mirrors kernels/ops.py: interpret-mode (pure-jax fallback) unless the
+# container bakes a real TPU toolchain.
+INTERPRET = os.environ.get("REPRO_KERNELS", "interpret") != "tpu"
+
+# Trace-time compile counter for the jitted distance engines (both the
+# Pallas wrapper and the ref fallback) — the MRC bench gates on it exactly
+# like benchmarks/bench_sweep.py gates on engine_compile_count().
+_REUSE_COMPILES = [0]
+
+
+def reuse_compile_count() -> int:
+    """Number of XLA compiles of the distance engine so far."""
+    return _REUSE_COMPILES[0]
+
+
+def reset_reuse_compile_count() -> None:
+    _REUSE_COMPILES[0] = 0
+
+
+def prev_occurrence(sh_pages: np.ndarray, counts: np.ndarray):
+    """Previous-occurrence index per request, host-side.
+
+    ``sh_pages`` is the ``[S, L]`` partitioned key stream (per-shard
+    substreams, padded at the row tails — :func:`repro.storage.
+    tiered_store.partition_streams` layout); ``counts[s]`` is the number of
+    real requests in row ``s``. Returns ``(prev, valid)``: int32 ``[S, L]``
+    with ``prev[s, j]`` = column of the previous access of ``sh_pages[s,
+    j]`` within row ``s`` (``-1`` if first access), and the bool ``[S, L]``
+    real-position mask. Pads carry ``prev = -1`` and ``valid = False`` and
+    never link to (or from) real positions; rows are fully independent.
+
+    One vectorized lexsort over ``(shard, page, position)`` — O(T log T).
+    """
+    sh_pages = np.asarray(sh_pages)
+    counts = np.asarray(counts)
+    S, L = sh_pages.shape
+    valid = np.arange(L)[None, :] < counts[:, None]
+    shard = np.repeat(np.arange(S, dtype=np.int64), L)
+    page = sh_pages.reshape(-1).astype(np.int64)
+    pos = np.tile(np.arange(L, dtype=np.int64), S)
+    idx = np.flatnonzero(valid.reshape(-1))
+    order = idx[np.lexsort((pos[idx], page[idx], shard[idx]))]
+    prev = np.full(S * L, -1, np.int64)
+    if order.size > 1:
+        same = (shard[order[1:]] == shard[order[:-1]]) & (
+            page[order[1:]] == page[order[:-1]]
+        )
+        prev[order[1:][same]] = pos[order[:-1][same]]
+    return prev.reshape(S, L).astype(np.int32), valid
+
+
+def _dominance_kernel(p_ref, v_ref, pt_ref, vt_ref, o_ref, *, block: int):
+    """One ``(shard, query-block)`` grid cell of the dominance count.
+
+    ``p_ref``/``v_ref`` hold the full shard row (keys); ``pt_ref``/
+    ``vt_ref`` hold this cell's query block as a ``[block, 1]`` column (a
+    host-side transpose, so the kernel needs no in-register transposes).
+    """
+    jb = pl.program_id(1)
+    j0 = jb * block
+    pj = pt_ref[...]                                     # [block, 1] int32
+    vj = vt_ref[...]                                     # [block, 1] int32
+    jidx = j0 + jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
+
+    def body(kb, acc):
+        k0 = kb * block
+        pk = p_ref[0:1, pl.ds(k0, block)]                # [1, block]
+        vk = v_ref[0:1, pl.ds(k0, block)]                # [1, block]
+        kidx = k0 + jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
+        m = (
+            (kidx > pj)
+            & (kidx < jidx)
+            & (pk <= pj)
+            & (vk > 0)
+        )
+        return acc + jnp.sum(m.astype(jnp.int32), axis=1, keepdims=True)
+
+    # Keys at or beyond the query block's end never satisfy k < j: loop
+    # only over the jb+1 key blocks at or before the queries.
+    acc = jax.lax.fori_loop(
+        0, jb + 1, body, jnp.zeros((block, 1), jnp.int32)
+    )
+    out = jnp.where(pj >= 0, acc, DIST_INF)              # first access
+    o_ref[...] = jnp.where(vj > 0, out, -1)              # padding
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def reuse_distance_kernel(
+    prev: jnp.ndarray,   # int32[S, L] previous-occurrence index (-1 = first)
+    valid: jnp.ndarray,  # bool[S, L]  real positions (False = padding)
+    *,
+    block: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Pallas dominance-count kernel: int32 ``[S, L]`` reuse distances
+    (:data:`DIST_INF` for first accesses, ``-1`` at pad slots). Exact
+    integer arithmetic — bit-identical to :func:`repro.kernels.ref.
+    reuse_distance_ref` in both interpret and compiled modes."""
+    prev = jnp.asarray(prev, jnp.int32)
+    valid_i = jnp.asarray(valid, jnp.int32)
+    S, L = prev.shape
+    pad = (-L) % block
+    P = jnp.pad(prev, ((0, 0), (0, pad)), constant_values=-1)
+    V = jnp.pad(valid_i, ((0, 0), (0, pad)), constant_values=0)
+    Lp = L + pad
+    _REUSE_COMPILES[0] += 1  # trace-time: once per XLA compile
+
+    out_t = pl.pallas_call(
+        functools.partial(_dominance_kernel, block=block),
+        grid=(S, Lp // block),
+        in_specs=[
+            pl.BlockSpec((1, Lp), lambda s, jb: (s, 0)),      # keys P
+            pl.BlockSpec((1, Lp), lambda s, jb: (s, 0)),      # keys valid
+            pl.BlockSpec((block, 1), lambda s, jb: (jb, s)),  # queries P^T
+            pl.BlockSpec((block, 1), lambda s, jb: (jb, s)),  # queries V^T
+        ],
+        out_specs=pl.BlockSpec((block, 1), lambda s, jb: (jb, s)),
+        out_shape=jax.ShapeDtypeStruct((Lp, S), jnp.int32),
+        interpret=interpret,
+    )(P, V, P.T, V.T)
+    return out_t.T[:, :L]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def _ref_engine(prev, valid, *, block: int = 128):
+    _REUSE_COMPILES[0] += 1  # trace-time: once per XLA compile
+    return reuse_distance_ref(prev, valid, block=block)
+
+
+def reuse_distances(
+    prev: np.ndarray,
+    valid: np.ndarray,
+    *,
+    block: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Production entry point: Pallas kernel on a TPU backend, pure-jax
+    :func:`~repro.kernels.ref.reuse_distance_ref` fallback on CPU (same
+    int32 results, bit-identical). ``interpret=None`` follows the
+    ``REPRO_KERNELS`` convention of :mod:`repro.kernels.ops`."""
+    if interpret is None:
+        interpret = INTERPRET
+    if interpret:
+        return _ref_engine(jnp.asarray(prev, jnp.int32),
+                           jnp.asarray(valid, bool), block=block)
+    return reuse_distance_kernel(jnp.asarray(prev, jnp.int32),
+                                 jnp.asarray(valid, bool),
+                                 block=block, interpret=False)

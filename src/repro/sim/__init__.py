@@ -14,6 +14,11 @@ from repro.sim.engine import (  # noqa: F401
     simulate,
     tier1_counters,
 )
+from repro.sim.mrc import (  # noqa: F401
+    mrc_curve,
+    mrc_tier1_counters,
+    mrc_unsupported_reason,
+)
 from repro.sim.spec import (  # noqa: F401
     PAPER_MU1,
     PAPER_MU2,
@@ -43,4 +48,5 @@ __all__ = [
     "simulate", "tier1_counters", "report_from_counters",
     "sweep", "expand_grid", "SweepResult",
     "engine_compile_count", "reset_engine_compile_count",
+    "mrc_curve", "mrc_tier1_counters", "mrc_unsupported_reason",
 ]

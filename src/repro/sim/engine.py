@@ -83,7 +83,7 @@ import jax.numpy as jnp
 
 __all__ = ["Tier1Counters", "WindowSeries", "ShardReport", "SimReport",
            "tier1_counters", "report_from_counters", "simulate",
-           "fault_owner"]
+           "fault_owner", "stream_for_spec"]
 
 
 class Tier1Counters(NamedTuple):
@@ -314,12 +314,15 @@ def fault_owner(spec: SimSpec, pages: np.ndarray,
     return owner
 
 
-def tier1_counters(spec: SimSpec, trace=None) -> Tier1Counters:
-    """Run the workload through the distributed tier-1 cache
-    (:func:`repro.storage.tiered_store.run_distributed`) and return exact
-    per-shard counters (whole-stream and per-window). ``trace`` overrides
-    the generated stream with a user-provided ``(pages, is_write)`` pair —
-    or ``(pages, is_write, times)`` triple on the wall-clock path
+def stream_for_spec(spec: SimSpec, trace=None):
+    """Resolve the concrete request stream a spec (plus optional trace
+    override) describes: ``(pages, is_write, times, n_pages, n_windows,
+    window_dt)``. ``times`` is None on the request-index path. Shared by
+    the sequential scan engine (:func:`tier1_counters`) and the MRC
+    stack-distance engine (:mod:`repro.sim.mrc`), so both paths consume
+    bit-identical streams by construction. ``trace`` overrides the
+    generated stream with a user-provided ``(pages, is_write)`` pair — or
+    ``(pages, is_write, times)`` triple on the wall-clock path
     (``spec.window_dt`` set; a 2-tuple trace then gets deterministic
     arrivals at the aggregate offered rate) — mapped over its own observed
     page space."""
@@ -350,6 +353,16 @@ def tier1_counters(spec: SimSpec, trace=None) -> Tier1Counters:
     else:
         pages, is_write = make_stream(spec.traffic)
         n_pages = sim_n_pages(spec, pages)
+    return pages, is_write, times, n_pages, n_windows, window_dt
+
+
+def tier1_counters(spec: SimSpec, trace=None) -> Tier1Counters:
+    """Run the workload through the distributed tier-1 cache
+    (:func:`repro.storage.tiered_store.run_distributed`) and return exact
+    per-shard counters (whole-stream and per-window). ``trace`` overrides
+    the generated stream (see :func:`stream_for_spec`)."""
+    pages, is_write, times, n_pages, n_windows, window_dt = stream_for_spec(
+        spec, trace)
     owner = fault_owner(spec, pages, times, n_pages)
     stats, counts = run_distributed(
         spec.store, pages, is_write,

@@ -41,6 +41,18 @@ still compile once per structural config.
 Compiles of the batched engine are observable via
 :func:`engine_compile_count` (a trace-time counter used by
 ``benchmarks/bench_sweep.py`` to gate compile-cache behavior).
+
+**Miss-rate-curve routing** (``mrc=`` keyword): ``store.n_lines`` is
+*structural* — every cache size costs a fresh engine compile and a fresh
+pass over the stream. When a grid axis varies only the cache size and the
+spec sits inside the exact stack-distance domain (LRU, no prefetch — see
+:func:`repro.sim.mrc.mrc_unsupported_reason`), the whole size axis is
+served by :func:`repro.sim.mrc.mrc_tier1_counters` instead: one distance
+pass, zero engine compiles, counters bit-identical to the scan engine.
+``mrc="auto"`` (default) routes eligible multi-size groups and falls back
+to the engine with a logged reason otherwise; ``"off"`` disables the
+path; ``"require"`` raises ``ValueError`` if any group cannot be routed
+(the compile-budget guard for capacity-planning sweeps).
 """
 from __future__ import annotations
 
@@ -67,6 +79,7 @@ from repro.sim.engine import (
     sim_n_pages,
     tier1_counters,
 )
+from repro.sim.mrc import mrc_tier1_counters, mrc_unsupported_reason
 from repro.sim.spec import SimSpec
 from repro.storage.tiered_store import (
     StoreConfig,
@@ -169,6 +182,56 @@ def _batch_key(spec: SimSpec) -> tuple:
     n_windows, window_dt = spec.window_grid()
     return (spec.store.static_config(), spec.n_shards, spec.mapping,
             n_windows, window_dt is not None)
+
+
+def _mrc_group_key(spec: SimSpec) -> tuple:
+    """Signatures equal after erasing ``store.n_lines`` form one MRC group:
+    they share the stream, partition, faults and window layout and differ
+    only in cache size — exactly the axis one stack-distance pass covers."""
+    return spec.replace(**{"store.n_lines": 1}).cache_signature()
+
+
+def _route_mrc(
+    unique: Mapping[tuple, SimSpec], mrc: str
+) -> dict[tuple, Tier1Counters]:
+    """Serve every eligible size-only signature group via the one-pass MRC
+    engine. Returns ``{signature: counters}`` for the routed signatures
+    (bit-identical to the scan engine); the caller runs the rest through
+    the batched engine. ``mrc="require"`` raises if any group is
+    ineligible; ``"auto"`` routes only groups with >= 2 sizes (a single
+    size gains nothing over the engine)."""
+    groups: dict[tuple, list[tuple]] = {}
+    for sig, spec in unique.items():
+        groups.setdefault(_mrc_group_key(spec), []).append(sig)
+
+    counters: dict[tuple, Tier1Counters] = {}
+    for sigs in groups.values():
+        rep = unique[sigs[0]]
+        reason = mrc_unsupported_reason(rep)
+        if reason is not None:
+            if mrc == "require":
+                raise ValueError(
+                    "mrc='require' but the MRC path cannot serve this "
+                    f"grid: {reason}"
+                )
+            if len(sigs) >= 2:
+                log.info(
+                    "sweep: MRC fallback to scan engine for %d sizes (%s)",
+                    len(sigs), reason,
+                )
+            continue
+        if len(sigs) < 2 and mrc != "require":
+            continue
+        sizes = sorted(unique[s].store.n_lines for s in sigs)
+        log.info(
+            "sweep: MRC route — %d cache sizes from one distance pass "
+            "(policy=lru, n_shards=%d)",
+            len(sizes), rep.n_shards,
+        )
+        by_size = mrc_tier1_counters(rep, sizes)
+        for s in sigs:
+            counters[s] = by_size[int(unique[s].store.n_lines)]
+    return counters
 
 
 def _bucket_cap(n: int) -> int:
@@ -395,6 +458,7 @@ def sweep(
     *,
     batch: bool = True,
     unroll: int = DEFAULT_UNROLL,
+    mrc: str = "auto",
     verbose: bool = False,
 ) -> SweepResult:
     """Evaluate ``base`` at every point of the ``axes`` grid.
@@ -403,7 +467,20 @@ def sweep(
     docstring); ``batch=False`` simulates every signature independently
     (reference path, bit-identical counters). ``unroll`` chunks the
     per-request scan of the batched engine.
+
+    ``mrc`` controls miss-rate-curve routing of cache-size axes (see
+    module docstring): ``"auto"`` serves eligible size-only groups from
+    one stack-distance pass, ``"off"`` always scans, ``"require"`` raises
+    ``ValueError`` when the MRC path cannot serve the grid (incompatible
+    with ``batch=False``, whose purpose is the reference scan).
     """
+    if mrc not in ("auto", "off", "require"):
+        raise ValueError(
+            f"mrc must be 'auto', 'off' or 'require', got {mrc!r}")
+    if mrc == "require" and not batch:
+        raise ValueError(
+            "mrc='require' is incompatible with batch=False: the unbatched "
+            "path exists as the scan-engine reference")
     if verbose:
         # Convenience for interactive use: make this module's INFO progress
         # lines visible regardless of how (or whether) the app configured
@@ -421,9 +498,13 @@ def sweep(
         unique.setdefault(sig, spec)
 
     counters: dict[tuple, Tier1Counters] = {}
+    if batch and mrc != "off":
+        counters.update(_route_mrc(unique, mrc))
     if batch:
         groups: dict[tuple, list[tuple]] = {}
         for sig, spec in unique.items():
+            if sig in counters:  # already served by the MRC path
+                continue
             groups.setdefault(_batch_key(spec), []).append(sig)
         # Dispatch everything first (async), then gather: traffic generation
         # and padding for group k+1 overlap device compute for group k, and

@@ -1,0 +1,139 @@
+"""``sweep(mrc=...)`` routing: size-only axes served by the one-pass MRC
+engine must be report-identical to the scan paths, ineligible grids must
+fall back (logged) or raise (``mrc='require'``), and the MRC path must
+add zero engine compiles."""
+import logging
+
+import numpy as np
+import pytest
+
+from repro.sim import SimSpec, sweep
+from repro.sim.spec import RateSpec, StoreConfig, TrafficSpec
+from repro.sim.sweep import (
+    engine_compile_count,
+    reset_engine_compile_count,
+)
+
+BASE = SimSpec(
+    traffic=TrafficSpec(kind="irm", n_requests=260, n_pages=64,
+                        write_fraction=0.2, seed=21),
+    store=StoreConfig(n_lines=8, policy="lru"),
+    n_shards=2,
+    lam=60.0,
+    rates=RateSpec(source="paper"),
+)
+
+SIZE_AXES = {"store.n_lines": [4, 8, 16, 32], "lam": [40.0, 60.0]}
+
+
+def _assert_reports_equal(a, b, ctx):
+    for name in ("requests", "hits", "misses", "prefetch_hits",
+                 "tier2_reads", "tier2_writes", "evictions"):
+        av, bv = getattr(a, name), getattr(b, name)
+        assert av == bv, f"{ctx}: {name} mrc={av} reference={bv}"
+    for sa, sb in zip(a.shards, b.shards):
+        for name in ("requests", "hits", "misses", "tier2_reads",
+                     "tier2_writes", "evictions"):
+            av, bv = getattr(sa, name), getattr(sb, name)
+            assert av == bv, f"{ctx} shard {sa.shard}: {name} {av} != {bv}"
+    for name in a.windows._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.windows, name)),
+            np.asarray(getattr(b.windows, name)),
+            err_msg=f"{ctx}: windows.{name}")
+
+
+def test_size_axis_routes_through_mrc_without_engine_compiles():
+    """A pure cache-size grid (with queuing-side riders) is served
+    entirely by the stack-distance pass: zero engine compiles, reports
+    identical to the unbatched scan reference."""
+    reset_engine_compile_count()
+    a = sweep(BASE, SIZE_AXES)                     # mrc="auto"
+    assert engine_compile_count() == 0
+    b = sweep(BASE, SIZE_AXES, batch=False)
+    for pt, ra, rb in zip(a.points, a.reports, b.reports):
+        _assert_reports_equal(ra, rb, str(pt))
+
+
+def test_mrc_off_uses_engine():
+    reset_engine_compile_count()
+    a = sweep(BASE, {"store.n_lines": [4, 8]}, mrc="off")
+    assert engine_compile_count() > 0
+    b = sweep(BASE, {"store.n_lines": [4, 8]}, batch=False)
+    for pt, ra, rb in zip(a.points, a.reports, b.reports):
+        _assert_reports_equal(ra, rb, str(pt))
+
+
+def test_mixed_policy_axis_splits_between_paths():
+    """policy in {lru, ws} x sizes: the lru half rides MRC, the ws half
+    the batched engine — both bit-equal to the reference."""
+    axes = {"store.n_lines": [8, 16], "store.policy": ["lru", "ws"]}
+    a = sweep(BASE, axes)
+    b = sweep(BASE, axes, batch=False)
+    for pt, ra, rb in zip(a.points, a.reports, b.reports):
+        _assert_reports_equal(ra, rb, str(pt))
+
+
+def test_ineligible_grid_falls_back_with_logged_reason(caplog):
+    """A multi-size non-LRU grid cannot ride MRC: auto mode falls back to
+    the engine and says why."""
+    axes = {"store.n_lines": [8, 16]}
+    base_ws = BASE.replace(**{"store.policy": "ws"})
+    with caplog.at_level(logging.INFO, logger="repro.sim.sweep"):
+        a = sweep(base_ws, axes)
+    assert any("MRC fallback" in r.message and "policy" in r.message
+               for r in caplog.records)
+    b = sweep(base_ws, axes, batch=False)
+    for pt, ra, rb in zip(a.points, a.reports, b.reports):
+        _assert_reports_equal(ra, rb, str(pt))
+
+
+def test_require_raises_on_unsupported_policy():
+    axes = {"store.n_lines": [8, 16], "store.policy": ["lru", "ws"]}
+    with pytest.raises(ValueError,
+                       match="mrc='require' but the MRC path cannot"):
+        sweep(BASE, axes, mrc="require")
+
+
+def test_require_raises_on_windowed_writes():
+    with pytest.raises(ValueError, match="window"):
+        sweep(BASE.replace(n_windows=4), {"store.n_lines": [8, 16]},
+              mrc="require")
+
+
+def test_require_incompatible_with_unbatched():
+    with pytest.raises(ValueError, match="batch=False"):
+        sweep(BASE, SIZE_AXES, mrc="require", batch=False)
+
+
+def test_invalid_mrc_value():
+    with pytest.raises(ValueError, match="mrc must be"):
+        sweep(BASE, SIZE_AXES, mrc="always")
+
+
+def test_timed_grid_routes_and_matches():
+    """Wall-clock windows (write-free) ride MRC too."""
+    base = BASE.replace(window_dt=0.4,
+                        **{"traffic.write_fraction": 0.0})
+    axes = {"store.n_lines": [4, 16]}
+    reset_engine_compile_count()
+    a = sweep(base, axes)
+    assert engine_compile_count() == 0
+    b = sweep(base, axes, batch=False)
+    for pt, ra, rb in zip(a.points, a.reports, b.reports):
+        _assert_reports_equal(ra, rb, str(pt))
+
+
+def test_fault_grid_routes_and_matches():
+    """shard_down failover remaps the stream host-side, so fault
+    schedules stay inside the MRC exactness domain."""
+    from repro.sim import FaultSpec, shard_down
+    base = BASE.replace(
+        window_dt=0.4,
+        faults=FaultSpec(events=(shard_down(1, 0.2, 0.8),)),
+        **{"traffic.write_fraction": 0.0})
+    axes = {"store.n_lines": [4, 16]}
+    a = sweep(base, axes)
+    b = sweep(base, axes, batch=False)
+    for pt, ra, rb in zip(a.points, a.reports, b.reports):
+        _assert_reports_equal(ra, rb, str(pt))
