@@ -2,7 +2,7 @@
 
   PYTHONPATH=src python benchmarks/bench_sim.py
 
-Produces ``benchmarks/results/bench_sim.json`` with:
+Produces repo-root ``BENCH_sim.json`` with:
 
 - ``worked_example``: the full simulate() pipeline (traffic -> distributed
   tier 1 -> queuing) run with the §V constants and p12 = 0.2, for both flow
@@ -24,7 +24,8 @@ from repro.core.traffic import TrafficSpec  # noqa: E402
 from repro.sim import RateSpec, SimSpec, simulate, sweep  # noqa: E402
 from repro.storage.tiered_store import StoreConfig  # noqa: E402
 
-RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARTIFACT = os.path.join(ROOT, "BENCH_sim.json")
 PUBLISHED_LAM_EFF = 86.6  # §V worked example
 
 
@@ -108,9 +109,7 @@ def main() -> None:
         "worked_example": bench_worked_example(),
         "sweep": bench_sweep(),
     }
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    path = os.path.join(RESULTS_DIR, "bench_sim.json")
-    with open(path, "w") as f:
+    with open(ARTIFACT, "w") as f:
         json.dump(artifact, f, indent=1)
     we = artifact["worked_example"]
     sw = artifact["sweep"]
@@ -120,7 +119,7 @@ def main() -> None:
     print(f"sweep: {sw['n_points']} points over {len(sw['axes'])} axes, "
           f"batched={sw['wall_s_batched']}s unbatched={sw['wall_s_unbatched']}s")
     print(f"best point: {sw['best_point']}")
-    print(f"artifact: {path}")
+    print(f"artifact: {ARTIFACT}")
     if not we["ok"]:
         raise SystemExit("worked example outside 1% of published lam_eff")
 

@@ -89,6 +89,7 @@ def main():
     ap.add_argument("--only", default=None, help="substring filter")
     args = ap.parse_args()
 
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
     results = []
     if os.path.exists(OUT):
         results = json.load(open(OUT))

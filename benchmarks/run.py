@@ -1,9 +1,10 @@
 """Benchmark harness: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows; detailed JSON lands in
-benchmarks/results/. The dry-run / roofline cells (deliverables e+g) are
-produced by ``python -m repro.launch.dryrun`` (long-running) and summarized
-here if the results file exists.
+Prints ``name,us_per_call,derived`` CSV rows and writes them to repo-root
+``BENCH_run.json`` (every benchmark artifact lands at the repo root as
+``BENCH_<name>.json``). The dry-run / roofline cells (deliverables e+g) are
+produced by ``python -m repro.launch.dryrun`` (long-running, writes
+benchmarks/results/dryrun.json) and summarized here if that file exists.
 """
 from __future__ import annotations
 
@@ -14,6 +15,9 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import paper_tables as pt  # noqa: E402
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARTIFACT = os.path.join(ROOT, "BENCH_run.json")
 
 
 def _dryrun_summary() -> list[tuple]:
@@ -50,6 +54,13 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us},{derived}")
+    artifact = [
+        {"name": name, "us_per_call": us, "derived": derived}
+        for name, us, derived in rows
+    ]
+    with open(ARTIFACT, "w") as f:
+        json.dump(artifact, f, indent=1)
+    print(f"artifact: {ARTIFACT}")
 
 
 if __name__ == "__main__":

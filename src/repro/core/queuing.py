@@ -625,6 +625,11 @@ class FluidReport(NamedTuple):
     # + retries) above it — the system would be stable without the retry
     # feedback yet cannot drain. None unless solved with a RetryPolicy.
     metastable: Optional[np.ndarray] = None
+    # Terminal (end-of-horizon) fluid backlogs — the q0 a continuation
+    # solve resumes from (q1/q2 above are window *means*, useless as
+    # initial conditions). Shape = the leading axes, no window axis.
+    q1_end: Optional[np.ndarray] = None
+    q2_end: Optional[np.ndarray] = None
 
     def onset(self) -> np.ndarray:
         """Saturation onset: index of the first unstable window along the
@@ -1042,4 +1047,6 @@ def fluid_two_tier(
         orbit=orbit_mean,
         dropped=drop_mean,
         metastable=metastable,
+        q1_end=np.array(l1),
+        q2_end=np.array(l2),
     )

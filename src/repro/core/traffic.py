@@ -37,6 +37,15 @@ counts). Timestamps let the windowed pipeline bin outcomes by wall-clock
 time, so per-window arrival rates are *measured*, not flat by
 construction.
 
+**Multi-tenant chunked workloads** (``kind="tenant_mix"`` /
+:func:`tenant_mix`): N tenants with distinct Poisson arrival rates,
+disjoint Zipf key spaces and read/write mixes, merged by arrival time.
+:class:`TenantStream` generates the merged stream *chunk by chunk* — each
+tenant is a deterministic event sequence drawn in fixed-size blocks, so
+the merged prefix is bit-identical whatever the chunking and the full mix
+never has to materialize at once (the streaming replay path's generator).
+``state()``/``restore()`` snapshot the generator for checkpoint/resume.
+
 Generators are host-side (numpy, seeded) — traffic is an *input* to the
 jitted storage engine, mirroring the paper where clients generate requests
 outside the cache. Each generator returns ``(pages, is_write)`` int32/bool
@@ -53,6 +62,10 @@ import numpy as np
 
 __all__ = [
     "TrafficSpec",
+    "TenantSpec",
+    "TenantStream",
+    "tenant_mix",
+    "tenant_mix_stream",
     "poisson_stream",
     "irm_stream",
     "strided_stream",
@@ -111,8 +124,38 @@ class TrafficSpec:
     # onoff: arrival rate inside checkpoint bursts (req/s, deterministic
     # back-to-back stripes). 0.0 = BURST_RATE_MULT x the base rate.
     burst_rate: float = 0.0
+    # tenant_mix: per-tenant arrival/key-space/write profiles (hashable
+    # tuple of TenantSpec; build via tenant_mix() so rate/n_pages stay
+    # consistent with the tenant sums).
+    tenants: Optional[tuple] = None
 
     def __post_init__(self):
+        if self.kind == "tenant_mix":
+            if not self.tenants:
+                raise ValueError(
+                    "tenant_mix TrafficSpec needs a non-empty tenants "
+                    "tuple (build it via tenant_mix())")
+            for t in self.tenants:
+                if not isinstance(t, TenantSpec):
+                    raise ValueError(
+                        "TrafficSpec.tenants entries must be TenantSpec, "
+                        f"got {type(t).__name__}")
+            total_pages = sum(t.n_pages for t in self.tenants)
+            if self.n_pages != total_pages:
+                raise ValueError(
+                    f"tenant_mix n_pages={self.n_pages} must equal the sum "
+                    f"of tenant page spaces {total_pages} (tenants own "
+                    "disjoint key ranges; build the spec via tenant_mix())")
+            total_rate = sum(t.rate for t in self.tenants)
+            if not math.isclose(self.rate, total_rate, rel_tol=1e-9):
+                raise ValueError(
+                    f"tenant_mix rate={self.rate} must equal the sum of "
+                    f"tenant rates {total_rate} (build the spec via "
+                    "tenant_mix())")
+        elif self.tenants is not None:
+            raise ValueError(
+                "TrafficSpec.tenants is only meaningful for "
+                f"kind='tenant_mix', got kind={self.kind!r}")
         if self.n_requests <= 0:
             raise ValueError(
                 f"TrafficSpec.n_requests must be positive, got "
@@ -442,6 +485,9 @@ def make_stream(spec: TrafficSpec) -> tuple[np.ndarray, np.ndarray]:
             zipf_s=spec.zipf_s,
             **common,
         )
+    if spec.kind == "tenant_mix":
+        pages, writes, _, _ = tenant_mix_stream(spec)
+        return pages, writes
     raise ValueError(f"unknown traffic kind: {spec.kind!r}")
 
 
@@ -614,6 +660,11 @@ def make_timed_stream(
     ``default_rate`` fills in for specs whose ``rate`` is unset (0.0).
     """
     rate = spec.rate if spec.rate > 0 else default_rate
+    if spec.kind == "tenant_mix":
+        # The tenant merge *is* an arrival-time process (each tenant its
+        # own Poisson stream); the timed view just keeps the merge times.
+        pages, writes, times, _ = tenant_mix_stream(spec)
+        return pages, writes, times
     if spec.kind == "phased":
         _validate_phased(spec)
         parts, t0 = [], 0.0
@@ -636,3 +687,232 @@ def make_timed_stream(
     else:
         times = arrival_times(n, rate, seed=spec.seed)
     return pages, writes, times
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant chunked traffic (kind="tenant_mix").
+# ---------------------------------------------------------------------------
+
+# Seed tag decorrelating tenant draws from the page/time seed streams above.
+_TENANT_SEED = 0x7E4A
+
+# Per-tenant generation block (events per refill). A structural constant of
+# the stream: every tenant always draws whole blocks in a fixed order
+# (gaps, pages, writes), so the event sequence is a pure function of the
+# tenant's seed — never of how consumers chunk their reads.
+TENANT_BLOCK = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant of a ``tenant_mix`` workload: an independent Poisson
+    arrival process at ``rate`` req/s over the tenant's own *disjoint*
+    Zipf(``zipf_s``)-popular key space of ``n_pages`` pages, with a
+    ``write_fraction`` share of writes. Tenants are merged by arrival time
+    (:class:`TenantStream`); page ids are offset so key ranges never
+    collide across tenants."""
+
+    name: str
+    rate: float
+    n_pages: int
+    zipf_s: float = 1.1
+    write_fraction: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("TenantSpec.name must be non-empty")
+        if self.rate <= 0.0:
+            raise ValueError(
+                f"TenantSpec.rate must be positive, got {self.rate}")
+        if self.n_pages <= 0:
+            raise ValueError(
+                f"TenantSpec.n_pages must be positive, got {self.n_pages}")
+        if not 0.0 <= self.write_fraction <= 1.0:
+            raise ValueError(
+                f"TenantSpec.write_fraction must be in [0, 1], got "
+                f"{self.write_fraction}")
+
+
+def tenant_mix(*tenants: TenantSpec, n_requests: int,
+               seed: int = 0) -> TrafficSpec:
+    """Compose tenants into one ``kind="tenant_mix"`` :class:`TrafficSpec`.
+
+    The mix's ``rate`` is the sum of tenant rates (the superposition of
+    independent Poisson processes is Poisson at the summed rate, so the
+    generic duration formulas hold) and its ``n_pages`` the sum of tenant
+    page spaces (disjoint key ranges, offset in declaration order)."""
+    if not tenants:
+        raise ValueError("tenant_mix needs at least one TenantSpec")
+    names = [t.name for t in tenants]
+    if len(set(names)) != len(names):
+        raise ValueError(f"tenant names must be unique, got {names}")
+    return TrafficSpec(
+        kind="tenant_mix",
+        n_requests=n_requests,
+        n_pages=sum(t.n_pages for t in tenants),
+        seed=seed,
+        rate=sum(t.rate for t in tenants),
+        tenants=tuple(tenants),
+    )
+
+
+@dataclasses.dataclass
+class _TenantState:
+    """Mutable per-tenant generator state inside a :class:`TenantStream`."""
+
+    spec: TenantSpec
+    rng: np.random.Generator
+    cum: np.ndarray        # Zipf popularity CDF over the tenant's pages
+    offset: int            # first page id of the tenant's key range
+    t_last: float          # last *generated* arrival time
+    buf_t: np.ndarray      # buffered (generated, unconsumed) arrival times
+    buf_p: np.ndarray      # ... page ids (already offset)
+    buf_w: np.ndarray      # ... write flags
+
+
+class TenantStream:
+    """Chunk-by-chunk generator of a ``tenant_mix`` stream.
+
+    Each tenant is a *deterministic* event sequence: its own seeded
+    generator, drawn in fixed :data:`TENANT_BLOCK`-event blocks with a
+    fixed draw order (inter-arrival gaps, then pages, then write flags) —
+    the sequence depends only on the tenant's seed, never on how many
+    events a consumer asked for. The mix is the k-way merge of those
+    sequences by arrival time (ties broken by tenant index), so any
+    ``take()`` chunking emits the *bit-identical* merged prefix: chunked
+    streaming replay equals one-shot replay by construction, and
+    ``make_stream`` / ``make_timed_stream`` on the same spec are simply
+    the full drain.
+
+    ``take(m)`` returns up to ``m`` merged events as
+    ``(pages, is_write, times, tenant_ids)`` (capped by the spec's
+    ``n_requests``; empty arrays once exhausted). ``state()`` /
+    ``restore()`` snapshot and restore the generator mid-stream for
+    checkpoint/resume (bit-exact continuation)."""
+
+    def __init__(self, spec: TrafficSpec):
+        if spec.kind != "tenant_mix":
+            raise ValueError(
+                f"TenantStream needs kind='tenant_mix', got {spec.kind!r}")
+        self.spec = spec
+        self.total = spec.n_requests
+        self.emitted = 0
+        self._tenants = []
+        offset = 0
+        for i, t in enumerate(spec.tenants):
+            ranks = np.arange(1, t.n_pages + 1, dtype=np.float64)
+            pop = ranks ** (-t.zipf_s)
+            self._tenants.append(_TenantState(
+                spec=t,
+                rng=np.random.default_rng(
+                    [spec.seed, i, t.seed, _TENANT_SEED]),
+                cum=np.cumsum(pop / pop.sum()),
+                offset=offset,
+                t_last=0.0,
+                buf_t=np.zeros(0, np.float64),
+                buf_p=np.zeros(0, np.int32),
+                buf_w=np.zeros(0, bool),
+            ))
+            offset += t.n_pages
+
+    @property
+    def n_tenants(self) -> int:
+        return len(self._tenants)
+
+    @property
+    def remaining(self) -> int:
+        return self.total - self.emitted
+
+    def _refill(self, st: _TenantState) -> None:
+        """Generate one more block of events for one tenant (fixed draw
+        order — the invariant behind chunk-size invariance)."""
+        b = TENANT_BLOCK
+        # Inverse-CDF exponential gaps (not rng.exponential: an explicit
+        # uniform draw keeps the consumed bit-stream count per block
+        # obvious and fixed).
+        gaps = -np.log1p(-st.rng.random(b)) / st.spec.rate
+        times = st.t_last + np.cumsum(gaps)
+        st.t_last = float(times[-1])
+        pages = st.offset + np.searchsorted(
+            st.cum, st.rng.random(b), side="right")
+        writes = st.rng.random(b) < st.spec.write_fraction
+        st.buf_t = np.concatenate([st.buf_t, times])
+        st.buf_p = np.concatenate([st.buf_p, pages.astype(np.int32)])
+        st.buf_w = np.concatenate([st.buf_w, writes])
+
+    def take(self, m: int):
+        """The next ``min(m, remaining)`` merged events:
+        ``(pages, is_write, times, tenant_ids)``."""
+        m = min(int(m), self.remaining)
+        if m <= 0:
+            return (np.zeros(0, np.int32), np.zeros(0, bool),
+                    np.zeros(0, np.float64), np.zeros(0, np.int32))
+        # Only events at or before the *frontier* — the minimum over
+        # tenants of the last generated time — are final in the merge (a
+        # tenant's future events all arrive after its t_last). Refill the
+        # laggard tenant until the frontier covers m events.
+        while True:
+            frontier = min(st.t_last for st in self._tenants)
+            avail = sum(
+                int(np.searchsorted(st.buf_t, frontier, side="right"))
+                for st in self._tenants)
+            if avail >= m:
+                break
+            self._refill(min(self._tenants, key=lambda s: s.t_last))
+        parts = []
+        for i, st in enumerate(self._tenants):
+            k = int(np.searchsorted(st.buf_t, frontier, side="right"))
+            parts.append((st.buf_t[:k], st.buf_p[:k], st.buf_w[:k],
+                          np.full(k, i, np.int32)))
+        times = np.concatenate([p[0] for p in parts])
+        pages = np.concatenate([p[1] for p in parts])
+        writes = np.concatenate([p[2] for p in parts])
+        tids = np.concatenate([p[3] for p in parts])
+        # Stable merge order: time, then tenant index (a deterministic
+        # tie-break keeps the sequence well-defined even on equal times).
+        order = np.lexsort((tids, times))[:m]
+        # The taken events are a time-prefix of the merge, hence a prefix
+        # of each tenant's buffer — consume by per-tenant count.
+        taken = np.bincount(tids[order], minlength=self.n_tenants)
+        for st, k in zip(self._tenants, taken):
+            st.buf_t = st.buf_t[k:]
+            st.buf_p = st.buf_p[k:]
+            st.buf_w = st.buf_w[k:]
+        self.emitted += m
+        return pages[order], writes[order], times[order], tids[order]
+
+    def state(self) -> dict:
+        """Snapshot for bit-exact resume (host data only: generator
+        states, per-tenant time cursors and unconsumed buffers)."""
+        return dict(
+            emitted=self.emitted,
+            tenants=[dict(
+                rng=st.rng.bit_generator.state,
+                t_last=st.t_last,
+                buf_t=st.buf_t.copy(),
+                buf_p=st.buf_p.copy(),
+                buf_w=st.buf_w.copy(),
+            ) for st in self._tenants],
+        )
+
+    def restore(self, state: dict) -> None:
+        if len(state["tenants"]) != self.n_tenants:
+            raise ValueError(
+                "TenantStream.restore: snapshot has "
+                f"{len(state['tenants'])} tenants, stream has "
+                f"{self.n_tenants}")
+        self.emitted = int(state["emitted"])
+        for st, s in zip(self._tenants, state["tenants"]):
+            st.rng.bit_generator.state = s["rng"]
+            st.t_last = float(s["t_last"])
+            st.buf_t = np.asarray(s["buf_t"], np.float64).copy()
+            st.buf_p = np.asarray(s["buf_p"], np.int32).copy()
+            st.buf_w = np.asarray(s["buf_w"], bool).copy()
+
+
+def tenant_mix_stream(spec: TrafficSpec):
+    """Whole-stream drain of a ``tenant_mix`` spec:
+    ``(pages, is_write, times, tenant_ids)``. The canonical one-shot view —
+    definitionally equal to any :class:`TenantStream` chunking."""
+    return TenantStream(spec).take(spec.n_requests)

@@ -8,6 +8,8 @@ device models, replacement policies and traffic generators.
 from repro.sim.engine import (  # noqa: F401
     ShardReport,
     SimReport,
+    TenantCounters,
+    TenantReport,
     Tier1Counters,
     WindowSeries,
     report_from_counters,
@@ -32,6 +34,11 @@ from repro.sim.spec import (  # noqa: F401
     shard_down,
     tier2_outage,
 )
+from repro.sim.stream import (  # noqa: F401
+    StreamCheckpoint,
+    simulate_stream,
+    stream_tier1_counters,
+)
 from repro.sim.sweep import (  # noqa: F401
     SweepResult,
     engine_compile_count,
@@ -45,7 +52,9 @@ __all__ = [
     "FaultSpec", "FaultEvent", "RetryPolicy",
     "shard_down", "device_degrade", "tier2_outage",
     "SimReport", "ShardReport", "Tier1Counters", "WindowSeries",
+    "TenantCounters", "TenantReport",
     "simulate", "tier1_counters", "report_from_counters",
+    "simulate_stream", "stream_tier1_counters", "StreamCheckpoint",
     "sweep", "expand_grid", "SweepResult",
     "engine_compile_count", "reset_engine_compile_count",
     "mrc_curve", "mrc_tier1_counters", "mrc_unsupported_reason",

@@ -81,7 +81,8 @@ from repro.sim.spec import ResolvedRates, SimSpec
 from repro.storage.tiered_store import correct_padded_stats, run_distributed
 import jax.numpy as jnp
 
-__all__ = ["Tier1Counters", "WindowSeries", "ShardReport", "SimReport",
+__all__ = ["Tier1Counters", "TenantCounters", "WindowSeries", "ShardReport",
+           "TenantReport", "SimReport",
            "tier1_counters", "report_from_counters", "simulate",
            "fault_owner", "stream_for_spec"]
 
@@ -111,6 +112,29 @@ class Tier1Counters(NamedTuple):
     win_evictions: np.ndarray
     win_expert_use: np.ndarray   # int64[n_shards, n_windows, E]
     win_weights: np.ndarray      # float[n_shards, n_windows, E]
+
+    @property
+    def n_windows(self) -> int:
+        return self.win_requests.shape[-1]
+
+
+class TenantCounters(NamedTuple):
+    """Per-tenant windowed engine counters of a ``tenant_mix`` workload,
+    pooled across shards (shapes ``[n_tenants, n_windows]``; sums over the
+    tenant axis equal the pooled :class:`Tier1Counters` window series
+    exactly). Produced by the streaming replay path
+    (:func:`repro.sim.stream.stream_tier1_counters`), which resolves the
+    engine's windowed scatters over composite ``window x tenant`` ids —
+    attribution costs no extra engine pass."""
+
+    names: tuple            # tenant names, declaration order
+    win_requests: np.ndarray
+    win_hits: np.ndarray
+    win_misses: np.ndarray
+
+    @property
+    def n_tenants(self) -> int:
+        return self.win_requests.shape[0]
 
     @property
     def n_windows(self) -> int:
@@ -188,6 +212,36 @@ class ShardReport:
 
 
 @dataclasses.dataclass(frozen=True)
+class TenantReport:
+    """One tenant of a ``tenant_mix`` workload: measured windowed counters
+    plus the latency the tenant observes riding the *pooled* queues.
+
+    Tenants share the tier-1/tier-2 service processes, so each window's
+    residence times come from the pooled transient solve; what is per
+    tenant is the miss mix — ``response_s[w] = w1[w] + p12[w] * w2[w]``
+    with the *tenant's* measured per-window miss fraction. A cache-hungry
+    tenant therefore reports higher expected response than a cache-friendly
+    one inside the same window, which is the attribution the multi-tenant
+    capacity questions need."""
+
+    tenant: int              # index in the spec's declaration order
+    name: str
+    requests: int
+    hits: int
+    misses: int
+    miss_rate: float         # whole-stream: misses / requests
+    win_requests: np.ndarray  # [n_windows] pooled across shards
+    win_misses: np.ndarray    # [n_windows]
+    lam: np.ndarray           # [n_windows] measured tenant arrival rate
+    p12: np.ndarray           # [n_windows] tenant miss fraction
+    response_s: np.ndarray    # [n_windows] expected response this tenant sees
+    mean_response_s: float    # request-weighted mean of response_s
+
+    def to_dict(self) -> dict:
+        return _plain(dataclasses.asdict(self))
+
+
+@dataclasses.dataclass(frozen=True)
 class SimReport:
     """Aggregate + per-shard results for one :class:`SimSpec` scenario."""
 
@@ -231,13 +285,16 @@ class SimReport:
     # First window of the pooled solve's trailing retry-storm run (see
     # ShardReport.metastable_onset). None = ends healthy / no retry policy.
     metastable_onset: Optional[int] = None
+    # Per-tenant attribution (tenant_mix workloads replayed through the
+    # streaming path); empty for single-tenant specs.
+    tenants: tuple = ()
 
     def to_dict(self) -> dict:
         d = {
             f.name: getattr(self, f.name)
             for f in dataclasses.fields(self)
             if f.name not in ("spec", "rates", "shards", "min_time",
-                              "windows", "transient")
+                              "windows", "transient", "tenants")
         }
         d["rates"] = dataclasses.asdict(self.rates)
         d["spec"] = {
@@ -270,6 +327,7 @@ class SimReport:
             for name in self.transient._fields
         }
         d["shards"] = [s.to_dict() for s in self.shards]
+        d["tenants"] = [t.to_dict() for t in self.tenants]
         return d
 
 
@@ -470,7 +528,10 @@ def _cold_refill(spec: SimSpec, ctr: Tier1Counters,
     )
 
 
-def report_from_counters(spec: SimSpec, ctr: Tier1Counters) -> SimReport:
+def report_from_counters(
+    spec: SimSpec, ctr: Tier1Counters,
+    tenants: Optional[TenantCounters] = None,
+) -> SimReport:
     """Solve the queuing network for measured counters (no traffic rerun).
 
     Per-shard service-rate heterogeneity (``RateSpec.mu1_shards`` /
@@ -480,6 +541,11 @@ def report_from_counters(spec: SimSpec, ctr: Tier1Counters) -> SimReport:
     aggregate/pooled queue uses the scalar (mean) rates. All per-shard and
     per-window solves are vectorized array calls into
     :mod:`repro.core.queuing` — no Python loop over shards or windows.
+
+    ``tenants`` (a :class:`TenantCounters`, produced by the streaming
+    replay of a ``tenant_mix`` workload) adds per-tenant
+    :class:`TenantReport` attribution: each tenant's windowed miss mix
+    priced at the pooled transient solve's per-window residence times.
     """
     rates = spec.rates.resolve()
     # (mu*_shards length vs n_shards is enforced by SimSpec.__post_init__.)
@@ -602,6 +668,40 @@ def report_from_counters(spec: SimSpec, ctr: Tier1Counters) -> SimReport:
     if isinstance(sh_tr, FluidReport) and sh_tr.metastable is not None:
         sh_meta = np.asarray(sh_tr.metastable_onset())
 
+    # --- per-tenant attribution (tenant_mix streaming replays) ------------
+    tenant_reports: tuple = ()
+    if tenants is not None:
+        t_reports = []
+        w1_t = np.asarray(transient.w1, float)
+        w2_t = np.asarray(transient.w2, float)
+        for k, name in enumerate(tenants.names):
+            t_req = np.asarray(tenants.win_requests[k], np.int64)
+            t_miss = np.asarray(tenants.win_misses[k], np.int64)
+            t_hits = int(np.asarray(tenants.win_hits[k]).sum())
+            n_req = int(t_req.sum())
+            t_p12 = t_miss / np.maximum(t_req, 1)
+            t_lam = (t_req / duration if duration > 0
+                     else np.zeros_like(t_req, float))
+            t_resp = w1_t + t_p12 * w2_t
+            wsum = float(t_req.sum())
+            t_reports.append(TenantReport(
+                tenant=k,
+                name=str(name),
+                requests=n_req,
+                hits=t_hits,
+                misses=int(t_miss.sum()),
+                miss_rate=float(t_miss.sum() / max(n_req, 1)),
+                win_requests=t_req,
+                win_misses=t_miss,
+                lam=np.asarray(t_lam, float),
+                p12=np.asarray(t_p12, float),
+                response_s=np.asarray(t_resp, float),
+                mean_response_s=(
+                    float((t_resp * t_req).sum() / wsum) if wsum > 0 else 0.0
+                ),
+            ))
+        tenant_reports = tuple(t_reports)
+
     shard_reports = []
     for i in range(spec.n_shards):
         onset_i = int(sh_onsets[i])
@@ -686,9 +786,19 @@ def report_from_counters(spec: SimSpec, ctr: Tier1Counters) -> SimReport:
         transient=transient,
         saturation_onset=saturation_onset,
         metastable_onset=pooled_meta,
+        tenants=tenant_reports,
     )
 
 
 def simulate(spec: SimSpec, trace=None) -> SimReport:
-    """The end-to-end model: workload -> distributed tier 1 -> queuing."""
+    """The end-to-end model: workload -> distributed tier 1 -> queuing.
+
+    ``tenant_mix`` workloads (no trace override) route through the chunked
+    streaming replay (:func:`repro.sim.stream.simulate_stream`) — counters
+    are bit-identical to the one-shot engine by construction (the tenant
+    merge is chunk-invariant), and the report gains per-tenant
+    :class:`TenantReport` attribution the one-shot path cannot produce."""
+    if spec.traffic.kind == "tenant_mix" and trace is None:
+        from repro.sim.stream import simulate_stream
+        return simulate_stream(spec)
     return report_from_counters(spec, tier1_counters(spec, trace))

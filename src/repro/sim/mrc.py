@@ -107,6 +107,12 @@ def mrc_unsupported_reason(spec: SimSpec) -> Optional[str]:
         )
     if spec.store.prefetch:
         return "prefetch=True adds buffer state outside the LRU stack"
+    if spec.traffic.kind == "tenant_mix":
+        return (
+            "tenant_mix workloads route through the chunked streaming "
+            "engine (per-tenant attribution needs the streamed composite "
+            "windows; the MRC pass also materializes the whole merge)"
+        )
     n_windows, _ = spec.window_grid()
     if n_windows > 1 and _traffic_may_write(spec.traffic):
         return (
@@ -171,11 +177,15 @@ def mrc_tier1_counters(
 
     S = spec.n_shards
     if times is not None:
-        sh_pages, sh_writes, counts, owner, sh_times = partition_streams(
+        # Same float64 host-side binning as the scan-engine path: the raw
+        # (unsharded, full-precision) arrival times become int32 ids which
+        # then ride the shard scatter — bit-identical window assignment.
+        gwin = timestamp_window_ids(times, n_windows, window_dt)
+        sh_pages, sh_writes, counts, owner, sh_win = partition_streams(
             pages, is_write, n_shards=S, mapping=spec.mapping,
-            n_pages=n_pages, times=times, owner=owner,
+            n_pages=n_pages, n_windows=n_windows, window_ids=gwin,
+            owner=owner,
         )
-        sh_win = timestamp_window_ids(sh_times, n_windows, window_dt)
     else:
         sh_pages, sh_writes, counts, owner, sh_win = partition_streams(
             pages, is_write, n_shards=S, mapping=spec.mapping,

@@ -33,10 +33,11 @@ Windowed telemetry (``SimSpec.n_windows``) rides the same batch: window
 ids are a data operand next to the stream (pads carry the dropped
 out-of-range id), so the ``[point, shard, n_windows]`` counters add no
 compiles beyond the structural split on ``n_windows`` itself. Wall-clock
-windows (``SimSpec.window_dt``) ride it the same way: arrival
-*timestamps* are a ``[point, shard, len]`` data operand (pads carry -1)
-and the per-point window duration a traced scalar, so timestamped grids
-still compile once per structural config.
+windows (``SimSpec.window_dt``) ride the *same* operand: arrival times
+are binned host-side in float64 (:func:`timestamp_window_ids`) and the
+resulting int32 ids stack next to the stream, so timestamped grids share
+one compiled engine with request-index grids of the same window count —
+and long-horizon traces bin exactly (no f32 drift in the scan).
 
 Compiles of the batched engine are observable via
 :func:`engine_compile_count` (a trace-time counter used by
@@ -53,6 +54,16 @@ pass, zero engine compiles, counters bit-identical to the scan engine.
 to the engine with a logged reason otherwise; ``"off"`` disables the
 path; ``"require"`` raises ``ValueError`` if any group cannot be routed
 (the compile-budget guard for capacity-planning sweeps).
+
+**Streaming routing** (``stream=`` keyword): the megabatch stacks whole
+traces on device, so a grid point with a multi-million-request stream
+(or a ``tenant_mix`` workload, whose per-tenant attribution only the
+streaming path produces) is better served by the chunked replay engine
+(:mod:`repro.sim.stream`): bounded device memory, at most two compiles,
+counters bit-identical to the scan. ``stream="auto"`` (default) routes
+``tenant_mix`` signatures and streams longer than
+:data:`STREAM_THRESHOLD` requests; ``"off"`` forces everything through
+the megabatch.
 """
 from __future__ import annotations
 
@@ -72,6 +83,7 @@ from repro.core.traffic import make_stream, make_timed_stream
 from repro.launch.compat import device_mesh, shard_map
 from repro.sim.engine import (
     SimReport,
+    TenantCounters,
     Tier1Counters,
     counters_from_stats,
     fault_owner,
@@ -80,12 +92,14 @@ from repro.sim.engine import (
     tier1_counters,
 )
 from repro.sim.mrc import mrc_tier1_counters, mrc_unsupported_reason
+from repro.sim.stream import stream_tier1_counters
 from repro.sim.spec import SimSpec
 from repro.storage.tiered_store import (
     StoreConfig,
     StoreHyper,
     partition_streams,
     run_stream,
+    timestamp_window_ids,
 )
 
 __all__ = [
@@ -101,6 +115,10 @@ log = logging.getLogger(__name__)
 # Smallest padded stream-length bucket; lengths round up to powers of two so
 # ragged groups land in a handful of shapes instead of one shape per point.
 MIN_BUCKET = 16
+# Streams longer than this route through the chunked replay engine under
+# stream="auto": stacking them whole on device stops paying off before the
+# megabatch's compile sharing does.
+STREAM_THRESHOLD = 1 << 20
 # Default lax.scan unroll for the batched engine (semantics-preserving).
 DEFAULT_UNROLL = 4
 
@@ -176,12 +194,12 @@ def _batch_key(spec: SimSpec) -> tuple:
     *structural* store config splits groups — the scalar learning knobs
     (alpha/beta/threshold/policy) are traced operands and stack instead.
     The window count shapes the accumulator arrays, so it is structural
-    too, as is the choice of time axis (wall-clock timestamp binning vs
-    request-index ids) — but window ids, timestamps and window durations
-    are all data: one compile serves any window layout."""
-    n_windows, window_dt = spec.window_grid()
+    too — but window ids are data (wall-clock specs bin their arrival
+    times host-side into the same int32 operand), so one compile serves
+    any window layout, timed or not."""
+    n_windows, _ = spec.window_grid()
     return (spec.store.static_config(), spec.n_shards, spec.mapping,
-            n_windows, window_dt is not None)
+            n_windows)
 
 
 def _mrc_group_key(spec: SimSpec) -> tuple:
@@ -234,6 +252,34 @@ def _route_mrc(
     return counters
 
 
+def _route_stream(
+    unique: Mapping[tuple, SimSpec], stream: str,
+) -> tuple[dict[tuple, Tier1Counters], dict[tuple, TenantCounters]]:
+    """Serve ``tenant_mix`` and oversized-stream signatures via the chunked
+    replay engine (:mod:`repro.sim.stream`): bounded device memory, at most
+    two compiles, counters bit-identical to the scan engine. Returns
+    ``({signature: counters}, {signature: tenant_counters})`` for the
+    routed signatures; the caller runs the rest through the megabatch."""
+    counters: dict[tuple, Tier1Counters] = {}
+    tenants: dict[tuple, TenantCounters] = {}
+    if stream == "off":
+        return counters, tenants
+    for sig, spec in unique.items():
+        mix = spec.traffic.kind == "tenant_mix"
+        if not (mix or spec.traffic.n_requests > STREAM_THRESHOLD):
+            continue
+        log.info(
+            "sweep: stream route — %s, %d requests (chunked replay)",
+            "tenant_mix" if mix else "oversized stream",
+            spec.traffic.n_requests,
+        )
+        ctr, tc, _ = stream_tier1_counters(spec)
+        counters[sig] = ctr
+        if tc is not None:
+            tenants[sig] = tc
+    return counters, tenants
+
+
 def _bucket_cap(n: int) -> int:
     """Next power-of-two length bucket (floor MIN_BUCKET) for a shard load."""
     cap = MIN_BUCKET
@@ -250,50 +296,32 @@ def _stack_hypers(stores: Sequence[StoreConfig]) -> StoreHyper:
 
 def _batched_engine(
     store: StoreConfig, unroll: int, n_dev: int, n_windows: int,
-    timed: bool = False,
 ) -> Callable:
     """The one-compile megabatch engine for a structural store config:
     ``(hyper [N], pages [N, S, L], writes [N, S, L], win [N, S, L]) ->
     StreamStats [N, S]`` (windowed counters ``[N, S, n_windows]``), point
-    axis sharded over all local devices. With ``timed=True`` the fourth
-    operand is instead arrival timestamps ``[N, S, L]`` plus a per-point
-    window duration ``[N]`` — both traced data, so wall-clock binning
-    shares the one compile. Cached so repeated sweeps reuse both the
-    wrapper and jit's compile cache."""
-    key = (store, unroll, n_dev, n_windows, timed)
+    axis sharded over all local devices. Wall-clock specs feed the same
+    ``win`` operand (arrival times become int32 ids host-side), so timed
+    and request-index grids share this one engine. Cached so repeated
+    sweeps reuse both the wrapper and jit's compile cache."""
+    key = (store, unroll, n_dev, n_windows)
     fn = _ENGINE_CACHE.get(key)
     if fn is not None:
         return fn
 
-    if timed:
-        def body(hyper, sh_pages, sh_writes, sh_times, wdt):
-            _ENGINE_COMPILES[0] += 1  # trace-time: once per XLA compile
+    def body(hyper, sh_pages, sh_writes, sh_win):
+        _ENGINE_COMPILES[0] += 1  # trace-time: once per XLA compile
 
-            def point(h, p, w, tt, d):
-                return jax.vmap(
-                    lambda pp, ww, ttt: run_stream(
-                        store, pp, ww, hyper=h, unroll=unroll,
-                        n_windows=n_windows, timestamps=ttt, window_dt=d,
-                    )
-                )(p, w, tt)
+        def point(h, p, w, wi):
+            return jax.vmap(
+                lambda pp, ww, wwi: run_stream(
+                    store, pp, ww, hyper=h, unroll=unroll,
+                    n_windows=n_windows, window_ids=wwi,
+                )
+            )(p, w, wi)
 
-            return jax.vmap(point)(hyper, sh_pages, sh_writes, sh_times,
-                                   wdt)
-        n_in = 5
-    else:
-        def body(hyper, sh_pages, sh_writes, sh_win):
-            _ENGINE_COMPILES[0] += 1  # trace-time: once per XLA compile
-
-            def point(h, p, w, wi):
-                return jax.vmap(
-                    lambda pp, ww, wwi: run_stream(
-                        store, pp, ww, hyper=h, unroll=unroll,
-                        n_windows=n_windows, window_ids=wwi,
-                    )
-                )(p, w, wi)
-
-            return jax.vmap(point)(hyper, sh_pages, sh_writes, sh_win)
-        n_in = 4
+        return jax.vmap(point)(hyper, sh_pages, sh_writes, sh_win)
+    n_in = 4
 
     if n_dev > 1:
         spec = PartitionSpec("points")
@@ -318,11 +346,10 @@ class _Member(NamedTuple):
     spec: SimSpec
     sh_pages: np.ndarray  # [S, own_cap] partitioned stream
     sh_writes: np.ndarray
-    sh_win: np.ndarray   # [S, own_cap] window ids (n_windows = pad/drop),
-                         # or arrival timestamps (-1 = pad) on the timed path
+    sh_win: np.ndarray   # [S, own_cap] window ids (n_windows = pad/drop);
+                         # timed specs pre-bin arrival times into these
     counts: np.ndarray   # per-shard real request counts
     shard_writes: np.ndarray  # per-shard write counts
-    window_dt: Optional[float]  # wall-clock bin width (None = index path)
 
 
 @dataclasses.dataclass
@@ -370,9 +397,14 @@ def _dispatch_group(
             # remap happens host-side and only reshuffles the owner
             # operand, so a fault grid shares one compiled engine.
             own = fault_owner(spec, pages, times, n_pages_i)
+            # Bin arrival times host-side (float64) into the same int32
+            # window-id operand the index path uses — one engine, exact
+            # long-horizon binning.
+            gwin = timestamp_window_ids(times, n_windows, window_dt)
             sh_p, sh_w, counts, owner, sh_tw = partition_streams(
                 pages, is_write, n_shards=n_shards, mapping=spec.mapping,
-                n_pages=n_pages_i, times=times, owner=own,
+                n_pages=n_pages_i, n_windows=n_windows, window_ids=gwin,
+                owner=own,
             )
         else:
             pages, is_write = make_stream(spec.traffic)
@@ -389,7 +421,6 @@ def _dispatch_group(
             sh_win=sh_tw,
             counts=counts,
             shard_writes=np.bincount(owner[is_write], minlength=n_shards),
-            window_dt=window_dt,
         ))
 
     buckets: dict[int, list[_Member]] = {}
@@ -402,14 +433,10 @@ def _dispatch_group(
         n_pad = -(-n // n_dev) * n_dev  # point axis must split over devices
         sh_pages = np.zeros((n_pad, n_shards, cap), np.int32)
         sh_writes = np.zeros((n_pad, n_shards, cap), bool)
-        # Bucket-extension positions are padding: window id n_windows (or
-        # timestamp -1 on the timed path) drops them from the windowed
-        # counters (so windowed telemetry is bit-identical across bucket
-        # choices).
-        if timed:
-            sh_win = np.full((n_pad, n_shards, cap), -1.0, np.float32)
-        else:
-            sh_win = np.full((n_pad, n_shards, cap), n_windows, np.int32)
+        # Bucket-extension positions are padding: window id n_windows
+        # drops them from the windowed counters (so windowed telemetry is
+        # bit-identical across bucket choices).
+        sh_win = np.full((n_pad, n_shards, cap), n_windows, np.int32)
         for i, m in enumerate(group):
             w = m.sh_pages.shape[1]
             # Rows come pre-padded with their shard's last page; extending
@@ -425,23 +452,14 @@ def _dispatch_group(
         stores += [stores[0]] * (n_pad - n)
         hyper = _stack_hypers(stores)
 
-        engine = _batched_engine(store_static, unroll, n_dev, n_windows,
-                                 timed)
+        engine = _batched_engine(store_static, unroll, n_dev, n_windows)
         log.info(
             "sweep: dispatch %d points x %d shards @ len %d "
             "(n_lines=%d, windows=%d, timed=%s, devices=%d)",
             n, n_shards, cap, store_static.n_lines, n_windows, timed, n_dev,
         )
-        if timed:
-            wdt = np.asarray(
-                [m.window_dt for m in group]
-                + [group[0].window_dt] * (n_pad - n), np.float32)
-            stats = engine(hyper, jnp.asarray(sh_pages),
-                           jnp.asarray(sh_writes), jnp.asarray(sh_win),
-                           jnp.asarray(wdt))
-        else:
-            stats = engine(hyper, jnp.asarray(sh_pages),
-                           jnp.asarray(sh_writes), jnp.asarray(sh_win))
+        stats = engine(hyper, jnp.asarray(sh_pages),
+                       jnp.asarray(sh_writes), jnp.asarray(sh_win))
         pending.append(_PendingBucket(
             sigs=[m.sig for m in group],
             counts=[m.counts for m in group],
@@ -459,6 +477,7 @@ def sweep(
     batch: bool = True,
     unroll: int = DEFAULT_UNROLL,
     mrc: str = "auto",
+    stream: str = "auto",
     verbose: bool = False,
 ) -> SweepResult:
     """Evaluate ``base`` at every point of the ``axes`` grid.
@@ -473,10 +492,18 @@ def sweep(
     one stack-distance pass, ``"off"`` always scans, ``"require"`` raises
     ``ValueError`` when the MRC path cannot serve the grid (incompatible
     with ``batch=False``, whose purpose is the reference scan).
+
+    ``stream`` controls chunked-replay routing (see module docstring):
+    ``"auto"`` serves ``tenant_mix`` signatures (adding per-tenant
+    attribution to their reports) and streams past
+    :data:`STREAM_THRESHOLD` requests via :mod:`repro.sim.stream`;
+    ``"off"`` forces the megabatch.
     """
     if mrc not in ("auto", "off", "require"):
         raise ValueError(
             f"mrc must be 'auto', 'off' or 'require', got {mrc!r}")
+    if stream not in ("auto", "off"):
+        raise ValueError(f"stream must be 'auto' or 'off', got {stream!r}")
     if mrc == "require" and not batch:
         raise ValueError(
             "mrc='require' is incompatible with batch=False: the unbatched "
@@ -498,8 +525,12 @@ def sweep(
         unique.setdefault(sig, spec)
 
     counters: dict[tuple, Tier1Counters] = {}
+    tenant_ctrs: dict[tuple, TenantCounters] = {}
+    if batch:
+        counters, tenant_ctrs = _route_stream(unique, stream)
     if batch and mrc != "off":
-        counters.update(_route_mrc(unique, mrc))
+        counters.update(_route_mrc(
+            {s: sp for s, sp in unique.items() if s not in counters}, mrc))
     if batch:
         groups: dict[tuple, list[tuple]] = {}
         for sig, spec in unique.items():
@@ -528,7 +559,8 @@ def sweep(
             counters[sig] = tier1_counters(spec)
 
     reports = [
-        report_from_counters(spec, counters[sig])
+        report_from_counters(spec, counters[sig],
+                             tenants=tenant_ctrs.get(sig))
         for spec, sig in zip(specs, sig_of)
     ]
     return SweepResult(

@@ -45,6 +45,7 @@ is observable.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import NamedTuple, Optional
 
 import jax
@@ -62,12 +63,18 @@ __all__ = [
     "StoreState",
     "StreamStats",
     "run_stream",
+    "run_stream_chunked",
     "run_distributed",
     "partition_streams",
     "partition_window_ids",
     "stream_window_ids",
     "timestamp_window_ids",
     "correct_padded_stats",
+    "init_stream_carry",
+    "stream_chunk_engine",
+    "stream_stats_from_carry",
+    "stream_compile_count",
+    "reset_stream_compile_count",
 ]
 
 # Traced policy selector convention: ws (online learning) = -1, experts by
@@ -406,18 +413,23 @@ def timestamp_window_ids(times: np.ndarray, n_windows: int,
     ``t // window_dt``, clipped into the last bin (arrivals past the nominal
     horizon still count — windowed counters always reconcile exactly with
     the whole-stream totals). Negative times mark padding and map to the
-    dropped id ``n_windows``. Host-side float32 mirror of the engine's
-    in-graph binning (bit-identical ids)."""
+    dropped id ``n_windows``.
+
+    Binning happens host-side in float64: an f32 ratio loses whole-integer
+    resolution past ~2^24, so multi-hour streamed traces (epoch-style or
+    simply long horizons) would drift across bin edges. The int32 ids are
+    what the engine consumes (``window_ids=`` operand), so the scan itself
+    never touches arrival-time floats."""
     if n_windows < 1:
         raise ValueError("n_windows must be >= 1")
     if window_dt <= 0:
         raise ValueError("window_dt must be positive")
-    t = np.asarray(times, np.float32)
+    t = np.asarray(times, np.float64)
     # Clip in float space *before* the integer cast: a ratio beyond int32
     # (epoch-style absolute times) must saturate into the last bin, not
-    # wrap — and identically to the engine's in-graph binning.
-    ids = np.clip(t / np.float32(window_dt), 0,
-                  np.float32(n_windows - 1)).astype(np.int32)
+    # wrap.
+    ids = np.clip(t / np.float64(window_dt), 0,
+                  np.float64(n_windows - 1)).astype(np.int32)
     return np.where(t >= 0, ids, n_windows).astype(np.int32)
 
 
@@ -521,6 +533,7 @@ def partition_streams(
     n_pages: Optional[int] = None,
     cap: Optional[int] = None,
     n_windows: Optional[int] = None,
+    window_ids: Optional[np.ndarray] = None,
     times: Optional[np.ndarray] = None,
     owner: Optional[np.ndarray] = None,
 ):
@@ -532,10 +545,15 @@ def partition_streams(
     the pad length. Returns ``(sh_pages [S, cap], sh_writes [S, cap],
     counts [S], owner [n])``; with ``n_windows`` set, additionally returns
     ``sh_win [S, cap]`` window ids (see :func:`partition_window_ids`),
-    reusing this call's shard sort instead of re-sorting; with ``times``
-    set (wall-clock arrival seconds, float[n]), additionally returns
-    ``sh_times [S, cap]`` float32 per-shard arrival timestamps (padding
-    positions carry ``-1``, which the engine's time binning drops).
+    reusing this call's shard sort instead of re-sorting. ``window_ids``
+    (int32[n], values in [0, n_windows]) overrides the default equal-count
+    ids with precomputed *global* per-request window assignments — the
+    wall-clock paths pass :func:`timestamp_window_ids` output here, so the
+    float64 host binning is the only time→window mapping and the engine
+    only ever sees int ids. With ``times`` set (wall-clock arrival seconds,
+    float[n]), additionally returns ``sh_times [S, cap]`` float32 per-shard
+    arrival timestamps (padding positions carry ``-1``, which the engine's
+    in-graph time binning drops).
 
     ``owner`` overrides the §III mapping with a precomputed per-request
     owner array (int[n]) — the fault-injection path passes owners already
@@ -570,7 +588,16 @@ def partition_streams(
     pad = np.arange(cap)[None, :] >= counts[:, None]
     sh_pages = np.where(pad, last[:, None], sh_pages)
     out = [sh_pages, sh_writes, counts, owner]
-    if n_windows is not None:
+    if window_ids is not None:
+        if n_windows is None:
+            raise ValueError("window_ids need n_windows (the dropped pad id)")
+        window_ids = np.asarray(window_ids, np.int32)
+        if window_ids.shape != owner.shape:
+            raise ValueError("window_ids must align with the request stream")
+        sh_win = np.full((n_shards, cap), n_windows, np.int32)
+        sh_win[row, col] = window_ids[order]
+        out.append(sh_win)
+    elif n_windows is not None:
         out.append(_scatter_window_ids(owner, n_shards, n_windows, cap,
                                        order, row, col))
     if times is not None:
@@ -683,25 +710,219 @@ def run_distributed(
     if timestamps is not None:
         if window_dt is None:
             raise ValueError("timestamps need a window_dt (seconds per bin)")
-        sh_pages, sh_writes, counts, owner, sh_times = partition_streams(
+        # Bin host-side in float64 (timestamp_window_ids) and hand the
+        # engine int32 ids: f32 arrival times lose whole-second resolution
+        # past ~2^24, so long-horizon traces would drift across bin edges.
+        gwin = timestamp_window_ids(timestamps, n_windows, window_dt)
+        sh_pages, sh_writes, counts, owner, sh_win = partition_streams(
             pages, is_write, n_shards=n_shards, mapping=mapping,
-            n_pages=n_pages, times=timestamps, owner=owner,
+            n_pages=n_pages, n_windows=n_windows, window_ids=gwin,
+            owner=owner,
         )
-        stats = jax.vmap(
-            lambda p, w, tt: run_stream(
-                cfg, p, w, seed=seed, n_windows=n_windows,
-                timestamps=tt, window_dt=window_dt,
-            )
-        )(jnp.asarray(sh_pages), jnp.asarray(sh_writes),
-          jnp.asarray(sh_times))
     else:
         sh_pages, sh_writes, counts, owner, sh_win = partition_streams(
             pages, is_write, n_shards=n_shards, mapping=mapping,
             n_pages=n_pages, n_windows=n_windows, owner=owner,
         )
-        stats = jax.vmap(
-            lambda p, w, wi: run_stream(
-                cfg, p, w, seed=seed, n_windows=n_windows, window_ids=wi
-            )
-        )(jnp.asarray(sh_pages), jnp.asarray(sh_writes), jnp.asarray(sh_win))
+    stats = jax.vmap(
+        lambda p, w, wi: run_stream(
+            cfg, p, w, seed=seed, n_windows=n_windows, window_ids=wi
+        )
+    )(jnp.asarray(sh_pages), jnp.asarray(sh_writes), jnp.asarray(sh_win))
     return correct_padded_stats(stats, counts, sh_pages.shape[1]), counts
+
+
+# ---------------------------------------------------------------------------
+# Chunked streaming replay: resumable masked scan with donated chunk buffers.
+#
+# The one-shot paths above hold the whole trace in one [shard, len] device
+# array. The streaming path instead carries the full engine state — the
+# [S]-stacked (StoreState, _Accum) pytree — across fixed-size chunks, so a
+# trace of any length replays in O(S * chunk) device memory. Bit-exactness
+# with the one-shot scan comes from *masking*: a chunk row's padding
+# positions (window id == the dropped ``n_windows``) leave the carried state
+# completely untouched (``t`` not advanced, PRNG key not split) and
+# contribute zero to every counter, so the state seen by real request ``j``
+# of a shard is identical whatever the chunking. (The one-shot path instead
+# lets trailing pads run as pure hits and corrects the totals afterwards —
+# equivalent for trailing pads, wrong for mid-stream pads, which is exactly
+# why the chunk engine masks.)
+# ---------------------------------------------------------------------------
+
+# Chunk engines are cached per (static store, unroll, n_windows, donate);
+# the counter increments at trace time, i.e. once per XLA compile (jit's
+# shape cache adds one compile per distinct (n_shards, cap) chunk shape).
+_STREAM_CACHE: dict = {}
+_STREAM_COMPILES = [0]
+
+
+def stream_compile_count() -> int:
+    """Number of XLA compiles of the chunked stream engine so far."""
+    return _STREAM_COMPILES[0]
+
+
+def reset_stream_compile_count() -> None:
+    _STREAM_COMPILES[0] = 0
+
+
+def init_stream_carry(cfg: StoreConfig, n_shards: int, *, seed: int = 0,
+                      n_windows: int = 1):
+    """Fresh [n_shards]-stacked ``(StoreState, _Accum)`` chunk-engine carry
+    — every shard starts from the cold :func:`init_store` state (same seed,
+    matching :func:`run_distributed`'s per-shard init) with zeroed
+    accumulators."""
+    one = (init_store(cfg, seed), _init_accum(n_windows))
+    return jax.tree.map(
+        lambda x: jnp.repeat(x[None], n_shards, axis=0), one)
+
+
+def stream_chunk_engine(cfg: StoreConfig, *, unroll: int = 1,
+                        n_windows: int = 1, donate: bool = True):
+    """The compiled chunk engine for a structural store config:
+    ``(hyper, carry, pages [S, L], writes [S, L], win [S, L]) -> carry``.
+
+    The carry and all three chunk buffers are donated
+    (``jit(..., donate_argnums=(1, 2, 3, 4))``) so every chunk reuses the
+    previous chunk's device allocations — peak device memory is O(S * L)
+    regardless of how many chunks stream through. ``hyper`` is a traced
+    operand (one compile serves a grid of learning knobs); padding rows
+    carry window id ``n_windows`` and are masked no-ops (see the section
+    comment). Callers must treat donated arguments as consumed: thread the
+    returned carry, never reuse a chunk buffer after passing it in.
+    ``donate=False`` exists for the naive per-chunk baseline benchmarks
+    compare against."""
+    static = cfg.static_config()
+    key = (static, unroll, n_windows, donate)
+    fn = _STREAM_CACHE.get(key)
+    if fn is not None:
+        return fn
+
+    def body(hyper, carry, pages, writes, win):
+        _STREAM_COMPILES[0] += 1  # trace-time: once per XLA compile
+
+        def shard(state, acc, p, w, wi):
+            def scan_fn(c, req):
+                state, acc = c
+                page, write, win_i = req
+                valid = win_i < n_windows
+                new_state, out = _step(static, hyper, state,
+                                       (page, write))
+                # Masked step: padding leaves the state (including t and
+                # the PRNG key) untouched and contributes nothing to the
+                # scalar totals; the windowed scatters drop pad ids on
+                # their own. ``chosen`` needs no mask — it only feeds
+                # expert_use scaled by the (masked) evict flag.
+                state = jax.tree.map(
+                    lambda n, o: jnp.where(valid, n, o), new_state, state)
+                out = dict(
+                    hit=out["hit"] & valid,
+                    miss=out["miss"] & valid,
+                    prefetch_hit=out["prefetch_hit"] & valid,
+                    tier2_read=jnp.where(valid, out["tier2_read"], 0),
+                    tier2_write=jnp.where(valid, out["tier2_write"], 0),
+                    evict=out["evict"] & valid,
+                    chosen=out["chosen"],
+                )
+                return (state, _fold(acc, out, win_i,
+                                     state.ols.weights)), None
+
+            (state, acc), _ = jax.lax.scan(
+                scan_fn, (state, acc), (p, w, wi), unroll=unroll)
+            return state, acc
+
+        state, acc = carry
+        return tuple(jax.vmap(shard)(state, acc,
+                                     pages.astype(jnp.int32),
+                                     writes.astype(bool),
+                                     win.astype(jnp.int32)))
+
+    jfn = jax.jit(body, donate_argnums=(1, 2, 3, 4) if donate else ())
+
+    if donate:
+        # The chunk buffers (int32/bool operands) have no same-shape output
+        # to alias, so XLA warns it can only *free* them early, not reuse
+        # them. That is the intended behavior — silence just that warning
+        # (the carry donation, the one that bounds peak memory, is silent).
+        def fn(*args):
+            with warnings.catch_warnings():
+                warnings.filterwarnings(
+                    "ignore",
+                    message="Some donated buffers were not usable")
+                return jfn(*args)
+    else:
+        fn = jfn
+    _STREAM_CACHE[key] = fn
+    return fn
+
+
+def stream_stats_from_carry(carry, counts) -> StreamStats:
+    """Materialize :class:`StreamStats` from a chunk-engine carry. ``counts``
+    is the per-shard count of *real* requests streamed so far. No padding
+    correction applies — masked pads never touched the accumulators — so
+    the result is directly comparable to :func:`run_distributed`'s
+    padding-corrected per-shard stats."""
+    state, acc = carry
+    return StreamStats(
+        requests=jnp.asarray(counts, jnp.int32),
+        hits=acc.hits,
+        misses=acc.misses,
+        prefetch_hits=acc.prefetch_hits,
+        tier2_reads=acc.tier2_reads,
+        tier2_writes=acc.tier2_writes,
+        evictions=acc.evictions,
+        expert_use=acc.expert_use,
+        final_weights=state.ols.weights,
+        win_requests=acc.win_requests,
+        win_hits=acc.win_hits,
+        win_misses=acc.win_misses,
+        win_prefetch_hits=acc.win_prefetch_hits,
+        win_tier2_reads=acc.win_tier2_reads,
+        win_tier2_writes=acc.win_tier2_writes,
+        win_evictions=acc.win_evictions,
+        win_expert_use=acc.win_expert_use,
+        win_weights=acc.win_weights,
+    )
+
+
+def run_stream_chunked(
+    cfg: StoreConfig,
+    pages: np.ndarray,
+    is_write: np.ndarray,
+    *,
+    chunk: int,
+    seed: int = 0,
+    hyper: Optional[StoreHyper] = None,
+    unroll: int = 1,
+    n_windows: int = 1,
+    window_ids: Optional[np.ndarray] = None,
+) -> StreamStats:
+    """Single-shard chunked replay: :func:`run_stream` semantics, consumed
+    ``chunk`` requests at a time through the resumable chunk engine.
+    Bit-identical to ``run_stream(cfg, pages, is_write, ...)`` for every
+    counter (``final_weights`` may differ only when that one-shot call was
+    itself padded — pads there keep running epoch boundaries after the last
+    real request; no counter reads the difference). The multi-shard,
+    generator-fed production path is :func:`repro.sim.stream.simulate_stream`."""
+    if chunk < 1:
+        raise ValueError("chunk must be >= 1")
+    pages = np.asarray(pages, np.int32)
+    is_write = np.asarray(is_write, bool)
+    n = pages.shape[0]
+    if window_ids is None:
+        window_ids = stream_window_ids(n, n_windows)
+    window_ids = np.asarray(window_ids, np.int32)
+    if hyper is None:
+        hyper = cfg.hyper()
+    eng = stream_chunk_engine(cfg, unroll=unroll, n_windows=n_windows)
+    carry = init_stream_carry(cfg, 1, seed=seed, n_windows=n_windows)
+    for start in range(0, n, chunk):
+        stop = min(start + chunk, n)
+        p = np.zeros(chunk, np.int32)
+        w = np.zeros(chunk, bool)
+        wi = np.full(chunk, n_windows, np.int32)  # tail padding: masked
+        p[: stop - start] = pages[start:stop]
+        w[: stop - start] = is_write[start:stop]
+        wi[: stop - start] = window_ids[start:stop]
+        carry = eng(hyper, carry, p[None], w[None], wi[None])
+    stats = stream_stats_from_carry(carry, np.array([n], np.int32))
+    return jax.tree.map(lambda a: a[0], stats)
