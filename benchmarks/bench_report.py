@@ -1,0 +1,269 @@
+"""Batched report-pipeline benchmark: equivalence, compile count, speedup.
+
+  PYTHONPATH=src python benchmarks/bench_report.py [--smoke]
+
+Measures the batched fluid report path (``repro.sim.engine.batched_reports``
+— every point's windowed rates stacked into one ``[point, shard, window]``
+jitted ``lax.scan`` solve, see ``repro.core.queuing.fluid_two_tier_batched``)
+against the per-point numpy host loop it replaces, and writes a
+``BENCH_report.json`` artifact at the repo root.
+
+Gates:
+
+- **equivalence** — batched fluid outputs match the scalar numpy solver to
+  ≤ :data:`EQUIV_TOL` on a healthy (fault-free, k=1 analytic) grid, and the
+  full ``SimReport.to_dict`` JSON is *bit-exact* with ``mu_load`` off where
+  bitwise equality is the contract: the scalar report path
+  (``batched_reports(solver="scalar")``) reproduces the pre-batching
+  ``report_from_counters`` byte for byte, and a repeated batched run of the
+  same grid reproduces itself byte for byte. (The jax and numpy solvers
+  differ at the ~1e-14 FMA level, and XLA re-fuses the kernel per batch
+  shape, so cross-solver or cross-grouping bitwise equality is not a
+  meaningful target.) The faulted grid (retry storm + shard-down +
+  degraded tier-2) additionally checks agreement on the finite entries
+  with identical non-finite masks.
+- **compile gate** — a 288-point × 32-window faulted sweep through
+  ``sweep(report="batched")`` traces the batched fluid kernel at most
+  :data:`COMPILE_LIMIT` times (``fluid_compile_count()``: one compile for
+  the ``[P, S, W]`` per-shard stack + one for the ``[P, W]`` pooled stack).
+- **speedup** (full mode only) — ≥ :data:`MIN_SPEEDUP`x report-stage
+  points/sec over the per-point host loop on the same 288-point grid.
+
+``--smoke`` runs a reduced grid for CI (equivalence + compile gates only).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.core.traffic import TrafficSpec  # noqa: E402
+from repro.sim import (  # noqa: E402
+    FaultSpec,
+    RateSpec,
+    RetryPolicy,
+    SimSpec,
+    batched_reports,
+    device_degrade,
+    fluid_compile_count,
+    report_from_counters,
+    reset_fluid_compile_count,
+    shard_down,
+    sweep,
+    tier1_counters,
+)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARTIFACT = os.path.join(ROOT, "BENCH_report.json")
+EQUIV_TOL = 1e-10   # healthy-grid batched vs scalar numpy
+COMPILE_LIMIT = 2   # [P,S,W] shard stack + [P,W] pooled stack
+MIN_SPEEDUP = 10.0  # report-stage points/sec vs the per-point host loop
+
+# 24 x 12 = 288 queuing-side points over one shared counter run (the
+# traffic spec pins its own wall-clock rate, so lam only affects the
+# queuing network, not the cache signature).
+N_LAM, N_MU2 = 24, 12
+N_WINDOWS = 32
+
+FAULTS = FaultSpec(
+    events=(shard_down(1, 0.8, 2.4),
+            device_degrade(2, 0.4, 1.5, 4.0)),
+    retry=RetryPolicy(timeout=0.05, max_retries=2, backoff_init=0.4),
+)
+
+
+def base_spec(n_windows: int, faults) -> SimSpec:
+    return SimSpec(
+        traffic=TrafficSpec(kind="poisson", n_requests=2000, n_pages=512,
+                            rate=240.0, seed=11),
+        n_shards=4,
+        lam=60.0,
+        rates=RateSpec(mu1=400.0, mu2=40.0),
+        n_windows=n_windows,
+        window_dt=2000 / 240.0 / n_windows,
+        faults=faults,
+    )
+
+
+def grid_points(n_lam: int, n_mu2: int) -> list[dict]:
+    return [
+        {"lam": float(l), "rates.mu2": float(m)}
+        for l in np.linspace(30.0, 95.0, n_lam)
+        for m in np.linspace(25.0, 80.0, n_mu2)
+    ]
+
+
+def _jsonify(obj):
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, np.generic):
+        return obj.item()
+    raise TypeError(f"not JSON serializable: {type(obj)!r}")
+
+
+def report_json(rep) -> str:
+    return json.dumps(rep.to_dict(), sort_keys=True, default=_jsonify)
+
+
+def max_finite_diff(a, b) -> float:
+    """Max |a-b| over finite entries; inf if the non-finite masks differ."""
+    worst = 0.0
+    for name in ("q1", "q2", "w1", "w2", "response", "rho1", "rho2",
+                 "lam_eff"):
+        xa = np.asarray(getattr(a.transient, name), float)
+        xb = np.asarray(getattr(b.transient, name), float)
+        fa, fb = np.isfinite(xa), np.isfinite(xb)
+        if not (fa == fb).all():
+            return float("inf")
+        if fa.any():
+            worst = max(worst, float(np.abs(xa[fa] - xb[fb]).max()))
+    for name in ("w1", "w2", "response_s", "rho1", "rho2", "lam_eff"):
+        va, vb = float(getattr(a, name)), float(getattr(b, name))
+        if np.isfinite(va) != np.isfinite(vb):
+            return float("inf")
+        if np.isfinite(va):
+            worst = max(worst, abs(va - vb))
+    if a.saturation_onset != b.saturation_onset:
+        return float("inf")
+    if a.metastable_onset != b.metastable_onset:
+        return float("inf")
+    return worst
+
+
+def bench_equivalence(smoke: bool) -> dict:
+    n_lam, n_mu2 = (4, 3) if smoke else (8, 6)
+    n_windows = 8 if smoke else 16
+    points = grid_points(n_lam, n_mu2)
+
+    out = {}
+    for label, faults in (("healthy", None), ("faulted", FAULTS)):
+        spec0 = base_spec(n_windows, faults)
+        ctr = tier1_counters(spec0)
+        specs = [spec0.replace(**pt) for pt in points]
+        items = [(s, ctr, None) for s in specs]
+        scalar = batched_reports(items, solver="scalar")
+        batched = batched_reports(items, solver="batched")
+        worst = max(max_finite_diff(a, b) for a, b in zip(scalar, batched))
+        out[f"{label}_max_diff"] = worst
+    out["n_points"] = len(points)
+
+    # Bit-exact JSON with mu_load off: the scalar report path reproduces
+    # the pre-batching per-point reference byte for byte, and the batched
+    # path is deterministic (same grid twice -> same bytes).
+    spec0 = base_spec(n_windows, FAULTS)
+    ctr = tier1_counters(spec0)
+    specs = [spec0.replace(**pt) for pt in points[:: max(1, len(points) // 6)]]
+    items = [(s, ctr, None) for s in specs]
+    scalar_ref = [report_from_counters(s, c, t) for s, c, t in items]
+    scalar_now = batched_reports(items, solver="scalar")
+    bit_exact = all(
+        report_json(a) == report_json(b)
+        for a, b in zip(scalar_ref, scalar_now)
+    )
+    deterministic = all(
+        report_json(a) == report_json(b)
+        for a, b in zip(batched_reports(items), batched_reports(items))
+    )
+    out["bit_exact_json"] = bit_exact
+    out["batched_deterministic"] = deterministic
+    bit_exact = bit_exact and deterministic
+    out["ok"] = bool(out["healthy_max_diff"] <= EQUIV_TOL and bit_exact)
+    return out
+
+
+def bench_compile_gate(smoke: bool) -> dict:
+    # Shapes distinct from the equivalence grids, so the gate counts this
+    # sweep's own traces rather than inheriting a warm jit cache.
+    n_lam, n_mu2 = (3, 2) if smoke else (N_LAM, N_MU2)
+    n_windows = 6 if smoke else N_WINDOWS
+    base = base_spec(n_windows, FAULTS)
+    points = grid_points(n_lam, n_mu2)
+    reset_fluid_compile_count()
+    res = sweep(base, points, report="batched", profile=True)
+    compiles = fluid_compile_count()
+    return {
+        "n_points": len(points),
+        "n_windows": n_windows,
+        "compiles": compiles,
+        "limit": COMPILE_LIMIT,
+        "profile": {k: round(v, 4) if isinstance(v, float) else v
+                    for k, v in res.profile.items()},
+        "ok": compiles <= COMPILE_LIMIT,
+    }
+
+
+def bench_speedup(smoke: bool) -> dict:
+    if smoke:
+        return {"skipped": True, "ok": True}
+    n_windows = N_WINDOWS
+    spec0 = base_spec(n_windows, FAULTS)
+    ctr = tier1_counters(spec0)
+    points = grid_points(N_LAM, N_MU2)
+    specs = [spec0.replace(**pt) for pt in points]
+    items = [(s, ctr, None) for s in specs]
+
+    batched_reports(items)  # warm the jit cache (compile cost excluded)
+    t0 = time.perf_counter()
+    batched_reports(items)
+    t_batched = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    batched_reports(items, solver="scalar")
+    t_scalar = time.perf_counter() - t0
+
+    speedup = t_scalar / t_batched if t_batched > 0 else float("inf")
+    return {
+        "n_points": len(points),
+        "n_windows": n_windows,
+        "batched_s": round(t_batched, 4),
+        "scalar_s": round(t_scalar, 4),
+        "batched_points_per_sec": round(len(points) / t_batched, 1),
+        "scalar_points_per_sec": round(len(points) / t_scalar, 1),
+        "speedup": round(speedup, 2),
+        "min_speedup": MIN_SPEEDUP,
+        "ok": speedup >= MIN_SPEEDUP,
+    }
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    artifact = {
+        "mode": "smoke" if smoke else "full",
+        "devices": jax.local_device_count(),
+        "equivalence": bench_equivalence(smoke),
+        "compile_gate": bench_compile_gate(smoke),
+        "speedup": bench_speedup(smoke),
+    }
+    with open(ARTIFACT, "w") as f:
+        json.dump(artifact, f, indent=1)
+        f.write("\n")
+
+    eq, cg, sp = (artifact["equivalence"], artifact["compile_gate"],
+                  artifact["speedup"])
+    print(f"equivalence: healthy max diff {eq['healthy_max_diff']:.2e} "
+          f"(tol {EQUIV_TOL}), faulted {eq['faulted_max_diff']:.2e}, "
+          f"bit_exact_json={eq['bit_exact_json']} ok={eq['ok']}")
+    print(f"compile gate: {cg['n_points']} points x {cg['n_windows']} "
+          f"windows -> {cg['compiles']} fluid compiles "
+          f"(limit {COMPILE_LIMIT}) ok={cg['ok']}")
+    if sp.get("skipped"):
+        print("speedup: skipped (--smoke)")
+    else:
+        print(f"speedup: batched {sp['batched_points_per_sec']} pts/s vs "
+              f"scalar {sp['scalar_points_per_sec']} pts/s -> "
+              f"{sp['speedup']}x (min {MIN_SPEEDUP}) ok={sp['ok']}")
+    print(f"artifact: {ARTIFACT}")
+    failures = [k for k in ("equivalence", "compile_gate", "speedup")
+                if not artifact[k]["ok"]]
+    if failures:
+        raise SystemExit(f"bench_report gates failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

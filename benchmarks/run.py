@@ -41,6 +41,33 @@ def _dryrun_summary() -> list[tuple]:
     return rows
 
 
+def _report_summary() -> list[tuple]:
+    """Batched report pipeline gates (benchmarks/bench_report.py)."""
+    path = os.path.join(ROOT, "BENCH_report.json")
+    if not os.path.exists(path):
+        return [("bench_report", 0.0,
+                 "not-run (python benchmarks/bench_report.py)")]
+    with open(path) as f:
+        d = json.load(f)
+    eq, cg, sp = d["equivalence"], d["compile_gate"], d["speedup"]
+    rows = [(
+        "report_equivalence", 0.0,
+        f"healthy_max_diff={eq['healthy_max_diff']:.2e};"
+        f"bit_exact={eq['bit_exact_json']};ok={eq['ok']}"),
+        ("report_compile_gate", 0.0,
+         f"points={cg['n_points']};compiles={cg['compiles']};"
+         f"limit={cg['limit']};ok={cg['ok']}")]
+    if sp.get("skipped"):
+        rows.append(("report_speedup", 0.0, "skipped (smoke)"))
+    else:
+        rows.append((
+            "report_speedup", 0.0,
+            f"batched={sp['batched_points_per_sec']}pts/s;"
+            f"scalar={sp['scalar_points_per_sec']}pts/s;"
+            f"speedup={sp['speedup']}x;ok={sp['ok']}"))
+    return rows
+
+
 def main() -> None:
     rows: list[tuple] = []
     rows += pt.section_v_worked_example()
@@ -50,6 +77,7 @@ def main() -> None:
     rows += pt.tables_v_vi_online_learning()
     rows += pt.tables_vii_ix_strong_scaling()
     rows += pt.fig10_read_throughput()
+    rows += _report_summary()
     rows += _dryrun_summary()
     print("name,us_per_call,derived")
     for name, us, derived in rows:

@@ -56,6 +56,8 @@ __all__ = [
     "fit_nvme_model",
     "fit_hdd_model",
     "DeviceModel",
+    "fit_mu_load",
+    "mu_load_from_devices",
 ]
 
 
@@ -305,3 +307,46 @@ def fit_hdd_model(*, read: bool, n_exp: int = 200, seed: int = 0) -> DeviceModel
     fit = fit_ols(data, y, HDD_FORMULA)
     cv = kfold_cv(data, y, HDD_FORMULA, k=20, seed=seed)
     return DeviceModel(fit, "hdd_read" if read else "hdd_write", cv)
+
+
+# ---------------------------------------------------------------------------
+# Load-dependent service: fit the μ(Q)/μ(0) ratio to a rational factor.
+# ---------------------------------------------------------------------------
+
+
+def fit_mu_load(
+    q: Sequence[float], ratio: Sequence[float]
+) -> tuple[float, float]:
+    """Fit ``(a, b)`` of the load factor ``f(Q) = (1 + a·Q) / (1 + b·Q)`` to
+    measured service-rate ratios ``ratio[i] ≈ μ(q[i]) / μ(0)``.
+
+    The factor multiplies the base service rate in the fluid solve
+    (``RateSpec.mu_load``): ``a > b`` models throughput that *improves*
+    with queue depth (deeper device queues batch/coalesce better — the
+    NVMe behavior behind the x1:x3:x4 term), ``a < b`` models degradation
+    (page-fault/GC pressure), and ``a = b`` is load-independent. The form
+    is linear in (a, b) after rearranging ``r·(1 + b·Q) = 1 + a·Q`` into
+    ``r − 1 = a·Q − r·b·Q``, so the fit is one least-squares solve. Both
+    coefficients are clamped to ≥ 0, matching the solver's stability
+    guard (f stays positive and bounded by max(1, a/b)).
+    """
+    q = np.asarray(q, float)
+    r = np.asarray(ratio, float)
+    if q.shape != r.shape or q.ndim != 1 or len(q) < 2:
+        raise ValueError(
+            "fit_mu_load needs matching 1-d q/ratio arrays with >= 2 points")
+    if np.any(~np.isfinite(q)) or np.any(~np.isfinite(r)) or np.any(r <= 0):
+        raise ValueError("q and ratio must be finite with ratio > 0")
+    X = np.stack([q, -r * q], axis=1)
+    (a, b), *_ = np.linalg.lstsq(X, r - 1.0, rcond=None)
+    return max(float(a), 0.0), max(float(b), 0.0)
+
+
+def mu_load_from_devices(
+    tier1_q: Sequence[float], tier1_ratio: Sequence[float],
+    tier2_q: Sequence[float], tier2_ratio: Sequence[float],
+) -> tuple[tuple[float, float], tuple[float, float]]:
+    """Build a ``RateSpec.mu_load`` value from per-tier load-sensitivity
+    curves: two :func:`fit_mu_load` fits packed as ``((a1, b1), (a2, b2))``."""
+    return (fit_mu_load(tier1_q, tier1_ratio),
+            fit_mu_load(tier2_q, tier2_ratio))

@@ -12,6 +12,7 @@ from repro.sim.engine import (  # noqa: F401
     TenantReport,
     Tier1Counters,
     WindowSeries,
+    batched_reports,
     report_from_counters,
     simulate,
     tier1_counters,
@@ -43,7 +44,9 @@ from repro.sim.sweep import (  # noqa: F401
     SweepResult,
     engine_compile_count,
     expand_grid,
+    fluid_compile_count,
     reset_engine_compile_count,
+    reset_fluid_compile_count,
     sweep,
 )
 
@@ -53,9 +56,10 @@ __all__ = [
     "shard_down", "device_degrade", "tier2_outage",
     "SimReport", "ShardReport", "Tier1Counters", "WindowSeries",
     "TenantCounters", "TenantReport",
-    "simulate", "tier1_counters", "report_from_counters",
+    "simulate", "tier1_counters", "report_from_counters", "batched_reports",
     "simulate_stream", "stream_tier1_counters", "StreamCheckpoint",
     "sweep", "expand_grid", "SweepResult",
     "engine_compile_count", "reset_engine_compile_count",
+    "fluid_compile_count", "reset_fluid_compile_count",
     "mrc_curve", "mrc_tier1_counters", "mrc_unsupported_reason",
 ]

@@ -61,9 +61,11 @@ and produces bit-identical reports.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Sequence
 
 import numpy as np
+
+from time import perf_counter
 
 from repro.core.mapping import apply_failover, page_to_shard
 from repro.core.queuing import (
@@ -72,6 +74,7 @@ from repro.core.queuing import (
     TransientReport,
     TwoTierModel,
     expected_response,
+    fluid_two_tier_batched,
     residence_times,
     service_time_model,
     transient_two_tier,
@@ -83,8 +86,8 @@ import jax.numpy as jnp
 
 __all__ = ["Tier1Counters", "TenantCounters", "WindowSeries", "ShardReport",
            "TenantReport", "SimReport",
-           "tier1_counters", "report_from_counters", "simulate",
-           "fault_owner", "stream_for_spec"]
+           "tier1_counters", "report_from_counters", "batched_reports",
+           "simulate", "fault_owner", "stream_for_spec"]
 
 
 class Tier1Counters(NamedTuple):
@@ -528,25 +531,71 @@ def _cold_refill(spec: SimSpec, ctr: Tier1Counters,
     )
 
 
-def report_from_counters(
+class _PreparedReport(NamedTuple):
+    """Everything :func:`report_from_counters` derives *before* the
+    transient solves: resolved rates, windowed telemetry, and the fluid
+    solver inputs. The batched report path (:func:`batched_reports`)
+    prepares every point first, gathers compatible points' rate tensors
+    into one ``[point, shard, window]`` device solve, and assembles each
+    :class:`SimReport` with :func:`_finish_report` — the scalar path runs
+    the exact same prepare/solve/finish sequence one point at a time."""
+
+    spec: SimSpec
+    ctr: Tier1Counters            # cold-refill-corrected counters
+    tenants: Optional[TenantCounters]
+    rates: ResolvedRates
+    mu1_v: np.ndarray             # [S] equilibrium per-shard rates
+    mu2_v: np.ndarray
+    p12_sh: np.ndarray            # [S] whole-stream per-shard miss fraction
+    req: np.ndarray               # [S] per-shard request totals
+    total_req: int
+    total_miss: int
+    miss_rate: float
+    p12: float                    # aggregate miss fraction for the solves
+    duration: float
+    n_windows: int
+    windows: WindowSeries
+    lam_sw: np.ndarray            # [S, W] measured per-shard rates
+    p12_sw: np.ndarray
+    mode: str                     # fluid | piecewise (after idle fallback)
+    tr_kw: dict                   # transient kwargs (dt/retry/spill/mu_load)
+    sh_mu1: np.ndarray            # [S, 1] or [S, W] degraded μ1(t)
+    sh_mu2: np.ndarray
+    pool_lam: np.ndarray          # [W] pooled per-process rate
+    pool_p12: np.ndarray
+    pool_mu1: object              # scalar or [W] degraded pooled μ1(t)
+    pool_mu2: object
+
+
+class _Equilibrium(NamedTuple):
+    """Stationary queue solutions feeding the report: per-shard fields
+    carry a trailing shard axis, aggregate fields are scalars — both with
+    arbitrary leading (point) axes, so one call serves a single report or
+    a whole stacked batch."""
+
+    sh_lam_eff: np.ndarray
+    sh_rho1: np.ndarray
+    sh_rho2: np.ndarray
+    sh_w1: np.ndarray
+    sh_w2: np.ndarray
+    sh_resp: np.ndarray
+    sh_eq: np.ndarray
+    agg_lam_eff: object
+    agg_rho1: object
+    agg_rho2: object
+    agg_mu_system: object
+    agg_rho_system: object
+    agg_eq: object
+    w1: object
+    w2: object
+
+
+def _prepare_report(
     spec: SimSpec, ctr: Tier1Counters,
     tenants: Optional[TenantCounters] = None,
-) -> SimReport:
-    """Solve the queuing network for measured counters (no traffic rerun).
-
-    Per-shard service-rate heterogeneity (``RateSpec.mu1_shards`` /
-    ``mu2_shards``, the paper's Tables VII–IX strong-scaling sweeps) is
-    honored here: each shard's queue is solved at its own μ1/μ2 and the
-    minimum-time model (eqs. 1–4) uses the per-shard rate vectors; the
-    aggregate/pooled queue uses the scalar (mean) rates. All per-shard and
-    per-window solves are vectorized array calls into
-    :mod:`repro.core.queuing` — no Python loop over shards or windows.
-
-    ``tenants`` (a :class:`TenantCounters`, produced by the streaming
-    replay of a ``tenant_mix`` workload) adds per-tenant
-    :class:`TenantReport` attribution: each tenant's windowed miss mix
-    priced at the pooled transient solve's per-window residence times.
-    """
+) -> _PreparedReport:
+    """Counters → queuing-network inputs (the pre-solve half of
+    :func:`report_from_counters`)."""
     rates = spec.rates.resolve()
     # (mu*_shards length vs n_shards is enforced by SimSpec.__post_init__.)
     mu1_v, mu2_v = _shard_rate_vectors(spec, rates)
@@ -555,30 +604,26 @@ def report_from_counters(
             and window_dt is not None and spec.faults.down_intervals()):
         ctr = _cold_refill(spec, ctr, window_dt)
 
-    # --- per-shard equilibrium solves, one vectorized call ----------------
     req = np.asarray(ctr.requests, np.int64)
     p12_sh = (
         np.full(spec.n_shards, spec.p12_override, float)
         if spec.p12_override is not None
         else np.asarray(ctr.misses, float) / np.maximum(req, 1)
     )
-    sh_rep = TwoTierModel(
-        lam=np.full(spec.n_shards, spec.lam, float),
-        mu1=mu1_v, mu2=mu2_v, p12=p12_sh, k=spec.k_servers,
-        flow=spec.flow,  # type: ignore[arg-type]
-    ).analyze()
-    sh_sum = sh_rep.summary()
-    sh_eq = np.asarray(sh_rep.equilibrium, bool)
-    sh_w1, sh_w2 = residence_times(sh_sum["W1"], sh_sum["W2"],
-                                   mu1_v, mu2_v, sh_eq)
-    sh_resp = expected_response(sh_w1, sh_w2, p12_sh)
 
-    # --- windowed telemetry + transient solves ----------------------------
     n_windows = ctr.n_windows
     total_req = int(req.sum())
     if window_dt is not None:
         # Wall-clock bins: fixed duration, measured per-window rates.
         duration = float(window_dt)
+        if not duration > 0:
+            # SimSpec validation rejects non-finite/non-positive window_dt;
+            # a spec that bypassed it (pickles of older versions, direct
+            # object.__setattr__) must fail here, not divide rates by 0.
+            raise ValueError(
+                f"timed spec has a non-positive window duration "
+                f"({duration!r} s from window_dt={spec.window_dt!r}) — the "
+                f"wall-clock report path needs a positive finite window_dt")
     else:
         # Request-index windows: the whole stream arrives at aggregate rate
         # λ·S, so each of the n_windows equal request-count slices spans
@@ -614,6 +659,11 @@ def report_from_counters(
     tr_kw = dict(k=spec.k_servers, flow=spec.flow, mode=mode)
     if mode == "fluid":
         tr_kw["dt"] = duration
+        if rates.mu_load is not None:
+            # Load-dependent μ(Q) rides the fluid solve only (SimSpec
+            # validation requires transient_mode='fluid'; an all-idle
+            # stream that degenerated to piecewise has no load to bend μ).
+            tr_kw["mu_load"] = rates.mu_load
     # Fault schedule → time-varying μ(t) per shard/window plus retry
     # feedback. Only the fluid solver understands these dynamics (SimSpec
     # validation guarantees transient_mode='fluid'; an all-idle stream that
@@ -633,12 +683,7 @@ def report_from_counters(
             sh_mu2 = sh_mu2 * mu2_mult[None, :]
             pool_mu1 = rates.mu1 * mu1_mult.mean(axis=0)
             pool_mu2 = rates.mu2 * mu2_mult
-    # Per-shard transient: measured per-shard rates at per-shard μ.
-    sh_tr = transient_two_tier(
-        lam_sw, p12_sw, sh_mu1, sh_mu2, **tr_kw,
-    )
-    sh_onsets = np.asarray(sh_tr.onset())
-    # Pooled transient: per-process pooled arrival rate and miss fraction.
+    # Pooled per-process arrival rate and miss fraction per window.
     pool_req = win_req.sum(axis=0)
     pool_lam = (
         pool_req / (duration * spec.n_shards)
@@ -650,9 +695,70 @@ def report_from_counters(
         else np.asarray(ctr.win_misses, float).sum(axis=0)
         / np.maximum(pool_req, 1)
     )
-    transient = transient_two_tier(
-        pool_lam, pool_p12, pool_mu1, pool_mu2, **tr_kw,
+    total_miss = int(ctr.misses.sum())
+    miss_rate = total_miss / total_req if total_req else 0.0
+    p12 = spec.p12_override if spec.p12_override is not None else miss_rate
+    return _PreparedReport(
+        spec=spec, ctr=ctr, tenants=tenants, rates=rates,
+        mu1_v=mu1_v, mu2_v=mu2_v, p12_sh=p12_sh, req=req,
+        total_req=total_req, total_miss=total_miss, miss_rate=miss_rate,
+        p12=p12, duration=duration, n_windows=n_windows, windows=windows,
+        lam_sw=lam_sw, p12_sw=p12_sw, mode=mode, tr_kw=tr_kw,
+        sh_mu1=sh_mu1, sh_mu2=sh_mu2, pool_lam=pool_lam, pool_p12=pool_p12,
+        pool_mu1=pool_mu1, pool_mu2=pool_mu2,
     )
+
+
+def _solve_equilibrium(
+    lam_sh, mu1_sh, mu2_sh, p12_sh, lam_agg, mu1_agg, mu2_agg, p12_agg,
+    *, k: int, flow: str,
+) -> _Equilibrium:
+    """Per-shard + aggregate stationary solves — elementwise over any
+    leading axes, so a ``[point, shard]`` stack costs two model calls for
+    the whole batch instead of two per point."""
+    sh_rep = TwoTierModel(
+        lam=lam_sh, mu1=mu1_sh, mu2=mu2_sh, p12=p12_sh, k=k,
+        flow=flow,  # type: ignore[arg-type]
+    ).analyze()
+    sh_sum = sh_rep.summary()
+    sh_eq = np.asarray(sh_rep.equilibrium, bool)
+    sh_w1, sh_w2 = residence_times(sh_sum["W1"], sh_sum["W2"],
+                                   mu1_sh, mu2_sh, sh_eq)
+    sh_resp = expected_response(sh_w1, sh_w2, p12_sh)
+    agg_rep = TwoTierModel(
+        lam=lam_agg, mu1=mu1_agg, mu2=mu2_agg, p12=p12_agg, k=k,
+        flow=flow,  # type: ignore[arg-type]
+    ).analyze()
+    s = agg_rep.summary()
+    w1, w2 = residence_times(s["W1"], s["W2"], mu1_agg, mu2_agg,
+                             agg_rep.equilibrium)
+    return _Equilibrium(
+        sh_lam_eff=np.asarray(sh_sum["lam_eff"]),
+        sh_rho1=np.asarray(sh_sum["rho1"]),
+        sh_rho2=np.asarray(sh_sum["rho2"]),
+        sh_w1=np.asarray(sh_w1), sh_w2=np.asarray(sh_w2),
+        sh_resp=np.asarray(sh_resp), sh_eq=sh_eq,
+        agg_lam_eff=s["lam_eff"], agg_rho1=s["rho1"], agg_rho2=s["rho2"],
+        agg_mu_system=s["mu_system"], agg_rho_system=s["rho_system"],
+        agg_eq=agg_rep.equilibrium, w1=w1, w2=w2,
+    )
+
+
+def _point_equilibrium(prep: _PreparedReport) -> _Equilibrium:
+    return _solve_equilibrium(
+        np.full(prep.spec.n_shards, prep.spec.lam, float),
+        prep.mu1_v, prep.mu2_v, prep.p12_sh,
+        prep.spec.lam, prep.rates.mu1, prep.rates.mu2, prep.p12,
+        k=prep.spec.k_servers, flow=prep.spec.flow,
+    )
+
+
+def _onsets(sh_tr, transient) -> tuple:
+    """(sh_onsets[S], sh_meta[S]|None, saturation_onset, metastable_onset)
+    of one point's transient solves. The batched path instead computes
+    these once over the whole ``[point, shard, window]`` stack (the onset
+    scans vectorize over leading axes) and slices per point."""
+    sh_onsets = np.asarray(sh_tr.onset())
     # Report-level onset = the pooled solve's first saturated window (system
     # drifting into overload). Per-shard onsets — which also capture mapping
     # skew concentrating load on one shard — live on each ShardReport.
@@ -667,10 +773,22 @@ def report_from_counters(
         pooled_meta = mo if mo >= 0 else None
     if isinstance(sh_tr, FluidReport) and sh_tr.metastable is not None:
         sh_meta = np.asarray(sh_tr.metastable_onset())
+    return sh_onsets, sh_meta, saturation_onset, pooled_meta
+
+
+def _finish_report(
+    prep: _PreparedReport, eq: _Equilibrium, sh_tr, transient, onsets: tuple,
+) -> SimReport:
+    """Assemble the :class:`SimReport` from the solved pieces (the
+    post-solve half of :func:`report_from_counters`)."""
+    spec, ctr, rates = prep.spec, prep.ctr, prep.rates
+    duration = prep.duration
+    sh_onsets, sh_meta, saturation_onset, pooled_meta = onsets
 
     # --- per-tenant attribution (tenant_mix streaming replays) ------------
     tenant_reports: tuple = ()
-    if tenants is not None:
+    if prep.tenants is not None:
+        tenants = prep.tenants
         t_reports = []
         w1_t = np.asarray(transient.w1, float)
         w2_t = np.asarray(transient.w2, float)
@@ -707,7 +825,7 @@ def report_from_counters(
         onset_i = int(sh_onsets[i])
         shard_reports.append(ShardReport(
             shard=i,
-            requests=int(req[i]),
+            requests=int(prep.req[i]),
             reads=int(ctr.reads[i]),
             writes=int(ctr.writes[i]),
             hits=int(ctr.hits[i]),
@@ -716,32 +834,20 @@ def report_from_counters(
             tier2_reads=int(ctr.tier2_reads[i]),
             tier2_writes=int(ctr.tier2_writes[i]),
             evictions=int(ctr.evictions[i]),
-            p12=float(p12_sh[i]),
-            lam_eff=float(np.asarray(sh_sum["lam_eff"]).reshape(-1)[i]),
-            rho1=float(np.asarray(sh_sum["rho1"]).reshape(-1)[i]),
-            rho2=float(np.asarray(sh_sum["rho2"]).reshape(-1)[i]),
-            w1=float(sh_w1[i]),
-            w2=float(sh_w2[i]),
-            response_s=float(sh_resp[i]),
-            equilibrium=bool(sh_eq[i]),
+            p12=float(prep.p12_sh[i]),
+            lam_eff=float(np.asarray(eq.sh_lam_eff).reshape(-1)[i]),
+            rho1=float(np.asarray(eq.sh_rho1).reshape(-1)[i]),
+            rho2=float(np.asarray(eq.sh_rho2).reshape(-1)[i]),
+            w1=float(eq.sh_w1[i]),
+            w2=float(eq.sh_w2[i]),
+            response_s=float(eq.sh_resp[i]),
+            equilibrium=bool(eq.sh_eq[i]),
             saturation_onset=onset_i if onset_i >= 0 else None,
             metastable_onset=(
                 int(sh_meta[i])
                 if sh_meta is not None and int(sh_meta[i]) >= 0 else None
             ),
         ))
-
-    # --- pooled/aggregate equilibrium solve -------------------------------
-    total_miss = int(ctr.misses.sum())
-    miss_rate = total_miss / total_req if total_req else 0.0
-    p12 = spec.p12_override if spec.p12_override is not None else miss_rate
-    agg_rep = TwoTierModel(
-        lam=spec.lam, mu1=rates.mu1, mu2=rates.mu2, p12=p12,
-        k=spec.k_servers, flow=spec.flow,  # type: ignore[arg-type]
-    ).analyze()
-    s = agg_rep.summary()
-    w1, w2 = residence_times(s["W1"], s["W2"], rates.mu1, rates.mu2,
-                             agg_rep.equilibrium)
 
     # Minimum-time model (eqs. 1-4) over the per-shard counters: eq. 1 at
     # the read/write device rates, eq. 2 at the miss rate, eq. 4 = max.
@@ -752,42 +858,230 @@ def report_from_counters(
     )
     t_total = float(mt.t_total)
 
-    equilibrium = bool(agg_rep.equilibrium) and bool(sh_eq.all())
+    equilibrium = bool(eq.agg_eq) and bool(eq.sh_eq.all())
     return SimReport(
         spec=spec,
         rates=rates,
         shards=tuple(shard_reports),
-        requests=total_req,
+        requests=prep.total_req,
         hits=int(ctr.hits.sum()),
-        misses=total_miss,
+        misses=prep.total_miss,
         prefetch_hits=int(ctr.prefetch_hits.sum()),
         tier2_reads=int(ctr.tier2_reads.sum()),
         tier2_writes=int(ctr.tier2_writes.sum()),
         evictions=int(ctr.evictions.sum()),
-        miss_rate=float(miss_rate),
-        p12=float(p12),
-        lam_eff=float(s["lam_eff"]),
-        rho1=float(s["rho1"]),
-        rho2=float(s["rho2"]),
-        w1=float(w1),
-        w2=float(w2),
-        response_s=float(expected_response(w1, w2, p12)),
-        mu_system=float(s["mu_system"]),
-        rho_system=float(s["rho_system"]),
+        miss_rate=float(prep.miss_rate),
+        p12=float(prep.p12),
+        lam_eff=float(eq.agg_lam_eff),
+        rho1=float(eq.agg_rho1),
+        rho2=float(eq.agg_rho2),
+        w1=float(eq.w1),
+        w2=float(eq.w2),
+        response_s=float(expected_response(eq.w1, eq.w2, prep.p12)),
+        mu_system=float(eq.agg_mu_system),
+        rho_system=float(eq.agg_rho_system),
         equilibrium=equilibrium,
         throughput_rps=float(spec.lam * spec.n_shards) if equilibrium
-        else float(s["mu_system"]) * spec.n_shards,
+        else float(eq.agg_mu_system) * spec.n_shards,
         min_time=mt,
         t_total_s=t_total,
-        min_time_throughput_rps=total_req / t_total if t_total > 0 else 0.0,
-        n_windows=n_windows,
+        min_time_throughput_rps=(
+            prep.total_req / t_total if t_total > 0 else 0.0),
+        n_windows=prep.n_windows,
         window_duration_s=float(duration),
-        windows=windows,
+        windows=prep.windows,
         transient=transient,
         saturation_onset=saturation_onset,
         metastable_onset=pooled_meta,
         tenants=tenant_reports,
     )
+
+
+def report_from_counters(
+    spec: SimSpec, ctr: Tier1Counters,
+    tenants: Optional[TenantCounters] = None,
+) -> SimReport:
+    """Solve the queuing network for measured counters (no traffic rerun).
+
+    Per-shard service-rate heterogeneity (``RateSpec.mu1_shards`` /
+    ``mu2_shards``, the paper's Tables VII–IX strong-scaling sweeps) is
+    honored here: each shard's queue is solved at its own μ1/μ2 and the
+    minimum-time model (eqs. 1–4) uses the per-shard rate vectors; the
+    aggregate/pooled queue uses the scalar (mean) rates. All per-shard and
+    per-window solves are vectorized array calls into
+    :mod:`repro.core.queuing` — no Python loop over shards or windows.
+    (:func:`batched_reports` additionally batches the fluid transient
+    solves of *many* reports into one device call.)
+
+    ``tenants`` (a :class:`TenantCounters`, produced by the streaming
+    replay of a ``tenant_mix`` workload) adds per-tenant
+    :class:`TenantReport` attribution: each tenant's windowed miss mix
+    priced at the pooled transient solve's per-window residence times.
+    """
+    prep = _prepare_report(spec, ctr, tenants)
+    # Per-shard transient: measured per-shard rates at per-shard μ.
+    sh_tr = transient_two_tier(
+        prep.lam_sw, prep.p12_sw, prep.sh_mu1, prep.sh_mu2, **prep.tr_kw,
+    )
+    # Pooled transient: per-process pooled arrival rate and miss fraction.
+    transient = transient_two_tier(
+        prep.pool_lam, prep.pool_p12, prep.pool_mu1, prep.pool_mu2,
+        **prep.tr_kw,
+    )
+    eq = _point_equilibrium(prep)
+    return _finish_report(prep, eq, sh_tr, transient,
+                          _onsets(sh_tr, transient))
+
+
+def _report_group_key(prep: _PreparedReport) -> Optional[tuple]:
+    """Points whose fluid solves can stack into one batched call share a
+    key: same window grid / shard count (operand shapes), same window
+    duration, and same structural solver config (k, flow convention, retry
+    policy, spill, μ(Q) hook). None = solve this point on the scalar path
+    (piecewise / idle-degenerate reports)."""
+    if prep.mode != "fluid":
+        return None
+    return (
+        np.shape(prep.lam_sw), prep.duration, prep.spec.k_servers,
+        prep.spec.flow, prep.tr_kw.get("retry"),
+        bool(prep.tr_kw.get("tier1_spill", False)),
+        prep.tr_kw.get("mu_load"),
+    )
+
+
+def _take_fluid(rep: FluidReport, i: int) -> FluidReport:
+    """Slice point ``i`` out of a batched FluidReport (every array field
+    carries the point axis first; None diagnostics stay None)."""
+    return FluidReport(*(None if v is None else np.asarray(v)[i]
+                         for v in rep))
+
+
+def batched_reports(
+    items: Sequence, *, solver: str = "batched", _prof: Optional[dict] = None,
+) -> list[SimReport]:
+    """Reports for many ``(spec, counters[, tenant_counters])`` points with
+    the fluid transient solves *batched*: compatible points' windowed rates
+    stack into one ``[point, shard, window]`` tensor solved by a single
+    jitted ``lax.scan`` (:func:`repro.core.queuing.fluid_two_tier_batched`
+    — one compile per structural config, counted by
+    :func:`repro.core.queuing.fluid_compile_count`), the stationary
+    equilibrium solves run as two ``[point, shard]`` array calls per group,
+    and the saturation/metastability onset scans vectorize over the point
+    axis. Report assembly happens host-side from the batched outputs.
+
+    ``solver="scalar"`` runs the same prepare/finish pipeline with the
+    per-point numpy solver — the reference path (and the baseline the
+    report-stage benchmark compares against). Piecewise-mode points
+    (``transient_mode="piecewise"`` or idle streams) always take the
+    scalar path.
+
+    Batched and scalar solves agree to ~1e-13 on the analytic ``k = 1``
+    path (~1e-9 for the ``k > 1`` bisection). Regrouping points into
+    different batches perturbs results by at most a few ulp (XLA re-fuses
+    the kernel per batch shape); a fixed grouping is deterministic.
+
+    ``_prof`` (internal, used by ``sweep(profile=True)``): a dict that
+    accumulates ``report_solve`` / ``assembly`` stage seconds.
+    """
+    if solver not in ("batched", "scalar"):
+        raise ValueError(
+            f"solver must be 'batched' or 'scalar', got {solver!r}")
+    preps = []
+    for item in items:
+        spec, ctr = item[0], item[1]
+        tenants = item[2] if len(item) > 2 else None
+        preps.append(_prepare_report(spec, ctr, tenants))
+
+    groups: dict[Optional[tuple], list[int]] = {}
+    for i, prep in enumerate(preps):
+        key = _report_group_key(prep) if solver == "batched" else None
+        groups.setdefault(key, []).append(i)
+
+    solve_s = 0.0
+    asm_s = 0.0
+    reports: list = [None] * len(preps)
+    for key, idxs in groups.items():
+        if key is None:
+            for i in idxs:
+                prep = preps[i]
+                t0 = perf_counter()
+                sh_tr = transient_two_tier(
+                    prep.lam_sw, prep.p12_sw, prep.sh_mu1, prep.sh_mu2,
+                    **prep.tr_kw)
+                transient = transient_two_tier(
+                    prep.pool_lam, prep.pool_p12, prep.pool_mu1,
+                    prep.pool_mu2, **prep.tr_kw)
+                eq = _point_equilibrium(prep)
+                t1 = perf_counter()
+                reports[i] = _finish_report(prep, eq, sh_tr, transient,
+                                            _onsets(sh_tr, transient))
+                t2 = perf_counter()
+                solve_s += t1 - t0
+                asm_s += t2 - t1
+            continue
+
+        group = [preps[i] for i in idxs]
+        p0 = group[0]
+        full = np.shape(p0.lam_sw)          # [S, W]
+        t0 = perf_counter()
+        kw = {k: v for k, v in p0.tr_kw.items() if k not in ("mode", "dt")}
+        # Stacked per-shard solve: [P, S, W].
+        sh_tr_b = fluid_two_tier_batched(
+            np.stack([p.lam_sw for p in group]),
+            np.stack([p.p12_sw for p in group]),
+            np.stack([np.broadcast_to(p.sh_mu1, full) for p in group]),
+            np.stack([np.broadcast_to(p.sh_mu2, full) for p in group]),
+            dt=p0.duration, **kw)
+        # Stacked pooled solve: [P, W].
+        tr_b = fluid_two_tier_batched(
+            np.stack([p.pool_lam for p in group]),
+            np.stack([p.pool_p12 for p in group]),
+            np.stack([np.broadcast_to(np.asarray(p.pool_mu1, float),
+                                      full[-1:]) for p in group]),
+            np.stack([np.broadcast_to(np.asarray(p.pool_mu2, float),
+                                      full[-1:]) for p in group]),
+            dt=p0.duration, **kw)
+        # Onset scans once over the whole stack (satellite of the batched
+        # pipeline: these used to re-run per report).
+        sh_onsets_b = np.asarray(sh_tr_b.onset())            # [P, S]
+        pooled_onset_b = np.asarray(tr_b.onset())            # [P]
+        sh_meta_b = (np.asarray(sh_tr_b.metastable_onset())
+                     if sh_tr_b.metastable is not None else None)
+        pooled_meta_b = (np.asarray(tr_b.metastable_onset())
+                         if tr_b.metastable is not None else None)
+        # Stationary solves for the whole group: [P, S] + [P].
+        eq_b = _solve_equilibrium(
+            np.stack([np.full(p.spec.n_shards, p.spec.lam, float)
+                      for p in group]),
+            np.stack([p.mu1_v for p in group]),
+            np.stack([p.mu2_v for p in group]),
+            np.stack([p.p12_sh for p in group]),
+            np.asarray([p.spec.lam for p in group], float),
+            np.asarray([p.rates.mu1 for p in group], float),
+            np.asarray([p.rates.mu2 for p in group], float),
+            np.asarray([p.p12 for p in group], float),
+            k=p0.spec.k_servers, flow=p0.spec.flow,
+        )
+        t1 = perf_counter()
+        for j, i in enumerate(idxs):
+            onset_j = int(pooled_onset_b[j])
+            meta_j = (int(pooled_meta_b[j])
+                      if pooled_meta_b is not None else -1)
+            reports[i] = _finish_report(
+                preps[i], _Equilibrium(*(np.asarray(f)[j] for f in eq_b)),
+                _take_fluid(sh_tr_b, j), _take_fluid(tr_b, j),
+                (sh_onsets_b[j],
+                 sh_meta_b[j] if sh_meta_b is not None else None,
+                 onset_j if onset_j >= 0 else None,
+                 meta_j if meta_j >= 0 else None),
+            )
+        t2 = perf_counter()
+        solve_s += t1 - t0
+        asm_s += t2 - t1
+    if _prof is not None:
+        _prof["report_solve"] = _prof.get("report_solve", 0.0) + solve_s
+        _prof["assembly"] = _prof.get("assembly", 0.0) + asm_s
+    return reports
 
 
 def simulate(spec: SimSpec, trace=None) -> SimReport:

@@ -24,7 +24,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.queuing import RetryPolicy
+from repro.core.queuing import RetryPolicy, _norm_mu_load
 from repro.core.traffic import (
     TrafficSpec,
     nominal_duration,
@@ -61,6 +61,8 @@ class ResolvedRates:
     mu1_write: float
     mu1_shards: Optional[tuple] = None  # per-shard μ1 overrides
     mu2_shards: Optional[tuple] = None  # per-shard μ2 overrides
+    # Load-dependent service hook ((a1, b1), (a2, b2)) — see RateSpec.mu_load.
+    mu_load: Optional[tuple] = None
 
     def for_shard(self, i: int) -> "ResolvedRates":
         """Shard ``i``'s rates. Per-shard μ1 scales the read/write split
@@ -75,6 +77,7 @@ class ResolvedRates:
             mu2=mu2,
             mu1_read=self.mu1_read * scale,
             mu1_write=self.mu1_write * scale,
+            mu_load=self.mu_load,
         )
 
     def shard_vectors(self, n_shards: int):
@@ -107,8 +110,19 @@ class RateSpec:
     tier2: Tier2Sim = Tier2Sim()
     n_requests_op: float = 1e5   # NVMe operating point (x4) for μ1
     n_stripes_op: float = 1024.0  # HDD operating point for μ2
+    # Load-dependent service: per-tier rational factors ((a1, b1), (a2, b2))
+    # scaling μ_i by (1 + a·Q)/(1 + b·Q) at the instantaneous fluid backlog
+    # Q — the queue-depth dependence NVMe/HDD devices actually show
+    # (deeper queues batch better until they saturate). Fit from device
+    # curves with repro.core.device_models.fit_mu_load. None (default)
+    # keeps service rates load-independent — the solver paths are then
+    # bit-identical to pre-hook behavior. Fluid-only dynamics.
+    mu_load: Optional[tuple] = None
 
     def __post_init__(self):
+        # Normalize to nested float tuples so the spec stays hashable and
+        # malformed coefficient pairs fail at construction time.
+        object.__setattr__(self, "mu_load", _norm_mu_load(self.mu_load))
         for name in ("mu1", "mu2", "mu1_read", "mu1_write"):
             val = getattr(self, name)
             if val is not None and val <= 0:
@@ -167,6 +181,7 @@ class RateSpec:
                         if self.mu1_shards is not None else None),
             mu2_shards=(tuple(float(v) for v in self.mu2_shards)
                         if self.mu2_shards is not None else None),
+            mu_load=self.mu_load,
         )
 
 
@@ -381,8 +396,11 @@ class SimSpec:
         if self.k_servers < 1:
             raise ValueError(
                 f"k_servers must be >= 1, got {self.k_servers}")
-        if self.window_dt is not None and self.window_dt <= 0:
-            raise ValueError("window_dt must be positive (seconds)")
+        if self.window_dt is not None and not (
+                math.isfinite(self.window_dt) and self.window_dt > 0):
+            raise ValueError(
+                f"window_dt must be a positive finite number of seconds, "
+                f"got {self.window_dt}")
         if self.transient_mode not in ("fluid", "piecewise"):
             raise ValueError(
                 f"unknown transient_mode: {self.transient_mode!r}")
@@ -396,6 +414,12 @@ class SimSpec:
                     "SimSpec.faults needs transient_mode='fluid' (degraded-"
                     "mode and retry dynamics are fluid-only)")
             self.faults.validate(self.n_shards)
+        if (self.rates.mu_load is not None
+                and self.transient_mode != "fluid"):
+            raise ValueError(
+                "rates.mu_load (load-dependent service) needs "
+                "transient_mode='fluid' — the piecewise mode solves "
+                "stationary networks at fixed rates")
         if self.flow not in ("paper", "conserving"):
             raise ValueError(f"unknown flow convention: {self.flow!r}")
         for name in ("mu1_shards", "mu2_shards"):

@@ -356,7 +356,7 @@ def _frontier_fluid_q0(spec: SimSpec, rep: SimReport) -> Optional[tuple]:
     sol = transient_two_tier(
         np.asarray(tr.lam)[:hi], np.asarray(tr.p12)[:hi],
         rates.mu1, rates.mu2, k=spec.k_servers, flow=spec.flow,
-        mode="fluid", dt=rep.window_duration_s,
+        mode="fluid", dt=rep.window_duration_s, mu_load=rates.mu_load,
     )
     return (np.asarray(sol.q1_end), np.asarray(sol.q2_end))
 

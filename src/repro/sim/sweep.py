@@ -71,6 +71,7 @@ import dataclasses
 import itertools
 import json
 import logging
+from time import perf_counter
 from typing import Callable, Mapping, NamedTuple, Optional, Sequence
 
 import numpy as np
@@ -79,12 +80,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec
 
+from repro.core.queuing import fluid_compile_count, reset_fluid_compile_count
 from repro.core.traffic import make_stream, make_timed_stream
 from repro.launch.compat import device_mesh, shard_map
 from repro.sim.engine import (
     SimReport,
     TenantCounters,
     Tier1Counters,
+    batched_reports,
     counters_from_stats,
     fault_owner,
     report_from_counters,
@@ -108,6 +111,8 @@ __all__ = [
     "SweepResult",
     "engine_compile_count",
     "reset_engine_compile_count",
+    "fluid_compile_count",
+    "reset_fluid_compile_count",
 ]
 
 log = logging.getLogger(__name__)
@@ -154,6 +159,12 @@ class SweepResult:
     axes: dict
     points: tuple          # override dict per point
     reports: tuple         # SimReport per point
+    # sweep(profile=True): per-stage wall-clock seconds — stream_gen
+    # (host-side traffic generation + partitioning for the megabatch),
+    # engine_dispatch (device engine calls + gather, plus the routed
+    # stream/MRC/unbatched paths), report_solve (queuing-network solves),
+    # assembly (SimReport construction) and total.
+    profile: Optional[dict] = None
 
     def rows(self) -> list[dict]:
         """One flat dict per point: the overrides + aggregate metrics."""
@@ -174,6 +185,8 @@ class SweepResult:
                 for pt, rep in zip(self.points, self.reports)
             ],
         }
+        if self.profile is not None:
+            payload["profile"] = dict(self.profile)
         text = json.dumps(payload, indent=2, default=_jsonify)
         if path is not None:
             with open(path, "w") as f:
@@ -374,17 +387,20 @@ class _PendingBucket:
 
 
 def _dispatch_group(
-    specs: list[SimSpec], sigs: list, *, unroll: int
+    specs: list[SimSpec], sigs: list, *, unroll: int,
+    _prof: Optional[dict] = None,
 ) -> list[_PendingBucket]:
     """Partition, bucket, pad and asynchronously dispatch every unique cache
     signature of one batch-key group. Returns pending buckets; device compute
-    proceeds while the caller prepares and dispatches later groups."""
+    proceeds while the caller prepares and dispatches later groups.
+    ``_prof`` accumulates ``stream_gen`` / ``engine_dispatch`` seconds."""
     store_static = specs[0].store.static_config()
     n_shards = specs[0].n_shards
     n_windows, window_dt0 = specs[0].window_grid()
     timed = window_dt0 is not None
     n_dev = jax.local_device_count()
 
+    t0 = perf_counter()
     members = []
     for spec, sig in zip(specs, sigs):
         n_windows_i, window_dt = spec.window_grid()
@@ -422,6 +438,10 @@ def _dispatch_group(
             counts=counts,
             shard_writes=np.bincount(owner[is_write], minlength=n_shards),
         ))
+
+    t1 = perf_counter()
+    if _prof is not None:
+        _prof["stream_gen"] = _prof.get("stream_gen", 0.0) + (t1 - t0)
 
     buckets: dict[int, list[_Member]] = {}
     for m in members:
@@ -467,20 +487,30 @@ def _dispatch_group(
             cap=cap,
             stats=stats,
         ))
+    if _prof is not None:
+        _prof["engine_dispatch"] = (
+            _prof.get("engine_dispatch", 0.0) + (perf_counter() - t1))
     return pending
 
 
 def sweep(
     base: SimSpec,
-    axes: Mapping[str, Sequence],
+    axes,
     *,
     batch: bool = True,
     unroll: int = DEFAULT_UNROLL,
     mrc: str = "auto",
     stream: str = "auto",
+    report: str = "auto",
+    profile: bool = False,
     verbose: bool = False,
 ) -> SweepResult:
     """Evaluate ``base`` at every point of the ``axes`` grid.
+
+    ``axes`` is either a ``{dotted.path: values}`` mapping (expanded to
+    its cartesian grid) or an explicit sequence of override dicts — the
+    capacity planner's path for sweeping a hand-picked candidate set in
+    one batched call.
 
     ``batch=True`` runs the megabatched one-compile engine (see module
     docstring); ``batch=False`` simulates every signature independently
@@ -498,12 +528,28 @@ def sweep(
     attribution to their reports) and streams past
     :data:`STREAM_THRESHOLD` requests via :mod:`repro.sim.stream`;
     ``"off"`` forces the megabatch.
+
+    ``report`` picks the report-stage solver
+    (:func:`repro.sim.engine.batched_reports`): ``"batched"`` stacks every
+    fluid-mode point's windowed rates into one ``[point, shard, window]``
+    jitted solve (one compile per structural config —
+    :func:`fluid_compile_count`); ``"scalar"`` solves per point with the
+    numpy reference loop — bit-identical ``SimReport`` JSON to the
+    pre-batching per-point path; ``"auto"`` follows ``batch``. Batched and
+    scalar reports agree to ~1e-13 (analytic k=1 path).
+
+    ``profile=True`` attaches a per-stage wall-clock breakdown (stream
+    gen / engine dispatch / report solve / assembly, seconds) to
+    :attr:`SweepResult.profile`, serialized by ``to_json``.
     """
     if mrc not in ("auto", "off", "require"):
         raise ValueError(
             f"mrc must be 'auto', 'off' or 'require', got {mrc!r}")
     if stream not in ("auto", "off"):
         raise ValueError(f"stream must be 'auto' or 'off', got {stream!r}")
+    if report not in ("auto", "batched", "scalar"):
+        raise ValueError(
+            f"report must be 'auto', 'batched' or 'scalar', got {report!r}")
     if mrc == "require" and not batch:
         raise ValueError(
             "mrc='require' is incompatible with batch=False: the unbatched "
@@ -515,8 +561,20 @@ def sweep(
         log.setLevel(logging.INFO)
         if not (log.handlers or logging.getLogger().handlers):
             logging.basicConfig(level=logging.INFO)
-    points = expand_grid(axes)
+    if isinstance(axes, Mapping):
+        axes_dict = dict(axes)
+        points = expand_grid(axes)
+    else:
+        axes_dict = {}
+        points = [dict(pt) for pt in axes]
     specs = [base.replace(**pt) for pt in points]
+    solver = ("batched" if batch else "scalar") if report == "auto" else report
+    prof: Optional[dict] = (
+        {"stream_gen": 0.0, "engine_dispatch": 0.0,
+         "report_solve": 0.0, "assembly": 0.0}
+        if profile else None
+    )
+    t_start = perf_counter()
 
     # One cache run per unique signature.
     sig_of = [spec.cache_signature() for spec in specs]
@@ -526,11 +584,16 @@ def sweep(
 
     counters: dict[tuple, Tier1Counters] = {}
     tenant_ctrs: dict[tuple, TenantCounters] = {}
+    t0 = perf_counter()
     if batch:
         counters, tenant_ctrs = _route_stream(unique, stream)
     if batch and mrc != "off":
         counters.update(_route_mrc(
             {s: sp for s, sp in unique.items() if s not in counters}, mrc))
+    if prof is not None:
+        # The routed paths generate their streams internally; their whole
+        # cost lands on engine_dispatch.
+        prof["engine_dispatch"] += perf_counter() - t0
     if batch:
         groups: dict[tuple, list[tuple]] = {}
         for sig, spec in unique.items():
@@ -549,23 +612,34 @@ def sweep(
             )
             pending.extend(
                 _dispatch_group([unique[s] for s in sigs], sigs,
-                                unroll=unroll)
+                                unroll=unroll, _prof=prof)
             )
+        t0 = perf_counter()
         for bucket in pending:
             counters.update(bucket.gather())
+        if prof is not None:
+            prof["engine_dispatch"] += perf_counter() - t0
     else:
+        t0 = perf_counter()
         for sig, spec in unique.items():
             log.info("sweep: run %s", sig)
             counters[sig] = tier1_counters(spec)
+        if prof is not None:
+            prof["engine_dispatch"] += perf_counter() - t0
 
-    reports = [
-        report_from_counters(spec, counters[sig],
-                             tenants=tenant_ctrs.get(sig))
-        for spec, sig in zip(specs, sig_of)
-    ]
+    reports = batched_reports(
+        [(spec, counters[sig], tenant_ctrs.get(sig))
+         for spec, sig in zip(specs, sig_of)],
+        solver=solver, _prof=prof,
+    )
+    if prof is not None:
+        prof["total"] = perf_counter() - t_start
+        prof["n_points"] = len(points)
+        prof["report_solver"] = solver
     return SweepResult(
         base=base,
-        axes=dict(axes),
+        axes=axes_dict,
         points=tuple(points),
         reports=tuple(reports),
+        profile=prof,
     )

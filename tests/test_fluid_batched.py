@@ -1,0 +1,254 @@
+"""Batched fluid solver (ISSUE 9): golden equivalence against the scalar
+numpy PSFFA loop, compile accounting, and the μ(Q) load-dependent hook.
+
+``fluid_two_tier_batched`` is a drop-in counterpart of ``fluid_two_tier``
+whose window loop runs as one jitted ``lax.scan`` over all leading axes.
+The contract tested here:
+
+- batched == scalar to ~1e-12 on the analytic k=1 path — across fault-like
+  μ(t) schedules, retry storms, tier-1 spill, idle windows and dead-μ
+  windows (identical non-finite masks, finite entries agree);
+- k>1 / M/G/k grids agree to the bisection tolerance (~1e-6);
+- one jit trace per structural config (``fluid_compile_count``);
+- ``mu_load=((0,0),(0,0))`` is bitwise identical to ``mu_load=None``
+  through the batched kernel (the off-by-default guarantee), and positive
+  coefficients actually bend the service rate;
+- the onset/metastable scans vectorize over arbitrary leading point axes.
+"""
+import numpy as np
+import pytest
+
+from repro.core.device_models import fit_mu_load, mu_load_from_devices
+from repro.core.queuing import (
+    RetryPolicy,
+    fluid_compile_count,
+    fluid_two_tier,
+    fluid_two_tier_batched,
+    reset_fluid_compile_count,
+)
+
+DT = 0.1
+
+
+def grids(n_points=6, n_shards=3, n_windows=12, seed=0):
+    """A [P, S, W] stack of diverse healthy rate grids."""
+    rng = np.random.default_rng(seed)
+    lam = rng.uniform(0.0, 140.0, (n_points, n_shards, n_windows))
+    p12 = rng.uniform(0.0, 0.6, (n_points, n_shards, n_windows))
+    mu1 = rng.uniform(150.0, 450.0, (n_points, n_shards, n_windows))
+    mu2 = rng.uniform(30.0, 90.0, (n_points, n_shards, n_windows))
+    return lam, p12, mu1, mu2
+
+
+def assert_reports_match(batched, scalar, tol, what=""):
+    """Field-by-field: identical None-ness and non-finite masks, finite
+    entries within tol."""
+    for name, vb, vs in zip(batched._fields, batched, scalar):
+        if vs is None or vb is None:
+            assert vs is None and vb is None, f"{what}{name} None mismatch"
+            continue
+        xb, xs = np.asarray(vb), np.asarray(vs)
+        assert xb.shape == xs.shape, f"{what}{name} shape"
+        if xb.dtype == bool:
+            np.testing.assert_array_equal(xb, xs, err_msg=f"{what}{name}")
+            continue
+        xb, xs = xb.astype(float), xs.astype(float)
+        fb, fs = np.isfinite(xb), np.isfinite(xs)
+        np.testing.assert_array_equal(fb, fs,
+                                      err_msg=f"{what}{name} finite mask")
+        if fb.any():
+            np.testing.assert_allclose(xb[fb], xs[fs], rtol=0, atol=tol,
+                                       err_msg=f"{what}{name}")
+
+
+def scalar_stack(lam, p12, mu1, mu2, **kw):
+    """Per-point scalar solves restacked to the batched layout."""
+    reps = [fluid_two_tier(lam[i], p12[i], mu1[i], mu2[i], **kw)
+            for i in range(lam.shape[0])]
+    fields = []
+    for j in range(len(reps[0])):
+        if reps[0][j] is None:
+            fields.append(None)
+        else:
+            fields.append(np.stack([np.asarray(r[j]) for r in reps]))
+    return type(reps[0])(*fields)
+
+
+def test_batched_matches_scalar_healthy():
+    lam, p12, mu1, mu2 = grids()
+    b = fluid_two_tier_batched(lam, p12, mu1, mu2, dt=DT)
+    s = scalar_stack(lam, p12, mu1, mu2, dt=DT)
+    assert_reports_match(b, s, 1e-12)
+
+
+def test_batched_matches_scalar_faulted():
+    """Retry storm + tier-1 spill + a dead-μ outage window + idle windows:
+    the full degraded-mode feature set through one batched solve."""
+    lam, p12, mu1, mu2 = grids(seed=1)
+    lam[:, :, 3] = 0.0            # idle windows (solver guards, p12 zeroed)
+    mu1[:, 1, 5:7] = 0.0          # shard-down: dead tier-1 device
+    mu2[:, :, 6] = 0.0            # tier-2 outage window
+    lam[:, :, 8] = 400.0          # overload burst to light up the orbit
+    retry = RetryPolicy(timeout=0.04, max_retries=3, backoff_init=0.2)
+    kw = dict(dt=DT, retry=retry, tier1_spill=True)
+    b = fluid_two_tier_batched(lam, p12, mu1, mu2, **kw)
+    s = scalar_stack(lam, p12, mu1, mu2, **kw)
+    assert b.retry_rate is not None and b.metastable is not None
+    assert_reports_match(b, s, 1e-10)
+
+
+def test_batched_matches_scalar_multiserver_mgk():
+    """k>1 bisection (plus service-time variance): the jax solve runs the
+    fixed 60-iteration bisection vs numpy's early-break, so agreement is
+    bounded by the bisection tolerance, not machine epsilon."""
+    lam, p12, mu1, mu2 = grids(n_points=4, seed=2)
+    for kw in (dict(k=3), dict(k=2, var_s1=2e-5)):
+        b = fluid_two_tier_batched(lam, p12, mu1, mu2, dt=DT, **kw)
+        s = scalar_stack(lam, p12, mu1, mu2, dt=DT, **kw)
+        assert_reports_match(b, s, 1e-6, what=f"{kw}: ")
+
+
+def test_batched_matches_scalar_kscale_q0_conserving():
+    lam, p12, mu1, mu2 = grids(n_points=3, seed=3)
+    k_scale = np.ones_like(lam)
+    k_scale[:, :, 4:6] = 0.5      # half the service threads mid-horizon
+    q0 = (np.full(lam.shape[:-1], 3.0), np.full(lam.shape[:-1], 1.5))
+    b = fluid_two_tier_batched(lam, p12, mu1, mu2, dt=DT, flow="conserving",
+                               k_scale=k_scale, q0=q0)
+    reps = [fluid_two_tier(lam[i], p12[i], mu1[i], mu2[i], dt=DT,
+                           flow="conserving", k_scale=k_scale[i],
+                           q0=(q0[0][i], q0[1][i]))
+            for i in range(lam.shape[0])]
+    s = type(reps[0])(*(
+        None if reps[0][j] is None
+        else np.stack([np.asarray(r[j]) for r in reps])
+        for j in range(len(reps[0]))))
+    assert_reports_match(b, s, 1e-12)
+
+
+def test_compile_count_one_trace_per_config():
+    lam, p12, mu1, mu2 = grids(n_points=2, n_shards=2, n_windows=7, seed=4)
+    reset_fluid_compile_count()
+    fluid_two_tier_batched(lam, p12, mu1, mu2, dt=DT)
+    first = fluid_compile_count()
+    assert first <= 1
+    # Same config and shapes again: served from the jit cache, no retrace.
+    fluid_two_tier_batched(lam, p12, mu1, mu2, dt=DT)
+    assert fluid_compile_count() == first
+    # New *shape*, same structural config: one more trace at most.
+    fluid_two_tier_batched(lam[:, 0], p12[:, 0], mu1[:, 0], mu2[:, 0],
+                           dt=DT)
+    second = fluid_compile_count()
+    assert second <= first + 1
+    # New structural config (retry feedback): separate kernel.
+    retry = RetryPolicy(timeout=0.04, max_retries=2, backoff_init=0.2)
+    fluid_two_tier_batched(lam, p12, mu1, mu2, dt=DT, retry=retry)
+    assert fluid_compile_count() <= second + 1
+
+
+def test_mu_load_zero_coefficients_bitwise_off():
+    """mu_load=((0,0),(0,0)) must be *bitwise* identical to mu_load=None —
+    the off-by-default guarantee that shipping the hook changes nothing."""
+    lam, p12, mu1, mu2 = grids(n_points=3, seed=5)
+    off = fluid_two_tier_batched(lam, p12, mu1, mu2, dt=DT)
+    zero = fluid_two_tier_batched(lam, p12, mu1, mu2, dt=DT,
+                                  mu_load=((0.0, 0.0), (0.0, 0.0)))
+    for name, vo, vz in zip(off._fields, off, zero):
+        if vo is None:
+            assert vz is None
+            continue
+        np.testing.assert_array_equal(np.asarray(vo), np.asarray(vz),
+                                      err_msg=name)
+
+
+def test_mu_load_bends_service_rate_and_matches_scalar():
+    """Positive denominator coefficients (service slows with queue depth)
+    must raise the backlog vs the fixed-rate solve, agree between scalar
+    and batched paths, and speed-up coefficients must do the opposite."""
+    lam = np.full((2, 1, 10), 90.0)
+    p12 = np.full_like(lam, 0.3)
+    mu1 = np.full_like(lam, 120.0)
+    mu2 = np.full_like(lam, 45.0)
+    slow = ((0.0, 0.8), (0.0, 0.8))
+    fast = ((0.5, 0.0), (0.5, 0.0))
+    base = fluid_two_tier_batched(lam, p12, mu1, mu2, dt=DT)
+    b_slow = fluid_two_tier_batched(lam, p12, mu1, mu2, dt=DT, mu_load=slow)
+    b_fast = fluid_two_tier_batched(lam, p12, mu1, mu2, dt=DT, mu_load=fast)
+    s_slow = scalar_stack(lam, p12, mu1, mu2, dt=DT, mu_load=slow)
+    assert_reports_match(b_slow, s_slow, 1e-10)
+    assert np.all(np.asarray(b_slow.q1)[..., -1]
+                  > np.asarray(base.q1)[..., -1])
+    assert np.all(np.asarray(b_fast.q1)[..., -1]
+                  < np.asarray(base.q1)[..., -1])
+
+
+def test_mu_load_validation():
+    lam, p12, mu1, mu2 = grids(n_points=1, seed=6)
+    for bad in (((-1.0, 0.0), (0.0, 0.0)), ((np.nan, 0.0), (0.0, 0.0)),
+                (1.0, 2.0), ((1.0,), (0.0, 0.0))):
+        with pytest.raises(ValueError):
+            fluid_two_tier_batched(lam, p12, mu1, mu2, dt=DT, mu_load=bad)
+
+
+def test_fit_mu_load_recovers_coefficients():
+    q = np.linspace(0.0, 40.0, 60)
+    a, b = 0.02, 0.11
+    ratio = (1.0 + a * q) / (1.0 + b * q)
+    fa, fb = fit_mu_load(q, ratio)
+    assert fa == pytest.approx(a, rel=1e-6)
+    assert fb == pytest.approx(b, rel=1e-6)
+    (t1, t2) = mu_load_from_devices(q, ratio, q, np.ones_like(q))
+    assert t1 == (pytest.approx(a, rel=1e-6), pytest.approx(b, rel=1e-6))
+    assert t2[0] == pytest.approx(0.0, abs=1e-9)
+    with pytest.raises(ValueError):
+        fit_mu_load(q[:1], ratio[:1])
+    with pytest.raises(ValueError):
+        fit_mu_load(q, -ratio)
+
+
+def test_onset_scans_vectorize_over_point_axis():
+    """onset()/metastable_onset() on a stacked report must equal the
+    per-point scalar calls — the satellite fix for the per-report re-runs."""
+    lam, p12, mu1, mu2 = grids(n_points=5, seed=7)
+    lam[1, :, 6:] = 500.0   # saturate one point late in the horizon
+    lam[3, :, 0:] = 500.0   # and one from the start
+    retry = RetryPolicy(timeout=0.04, max_retries=2, backoff_init=0.2)
+    b = fluid_two_tier_batched(lam, p12, mu1, mu2, dt=DT, retry=retry)
+    onset = np.asarray(b.onset())
+    meta = np.asarray(b.metastable_onset())
+    assert onset.shape == lam.shape[:2] and meta.shape == lam.shape[:2]
+    for i in range(lam.shape[0]):
+        s = fluid_two_tier(lam[i], p12[i], mu1[i], mu2[i], dt=DT,
+                           retry=retry)
+        np.testing.assert_array_equal(onset[i], np.asarray(s.onset()))
+        np.testing.assert_array_equal(meta[i],
+                                      np.asarray(s.metastable_onset()))
+
+
+def test_hypothesis_fuzz_batched_equivalence():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        n_windows=st.integers(2, 24),
+        n_points=st.integers(1, 5),
+        retry_on=st.booleans(),
+        spill=st.booleans(),
+    )
+    def fuzz(seed, n_windows, n_points, retry_on, spill):
+        rng = np.random.default_rng(seed)
+        shape = (n_points, 2, n_windows)
+        lam = rng.uniform(0.0, 300.0, shape)
+        p12 = rng.uniform(0.0, 1.0, shape)
+        mu1 = rng.uniform(0.0, 500.0, shape)   # includes dead-μ draws
+        mu2 = rng.uniform(0.0, 120.0, shape)
+        retry = (RetryPolicy(timeout=0.05, max_retries=2, backoff_init=0.3)
+                 if retry_on else None)
+        kw = dict(dt=DT, retry=retry, tier1_spill=spill)
+        b = fluid_two_tier_batched(lam, p12, mu1, mu2, **kw)
+        s = scalar_stack(lam, p12, mu1, mu2, **kw)
+        assert_reports_match(b, s, 1e-9)
+
+    fuzz()

@@ -1,0 +1,34 @@
+"""Smoke test for the SLO capacity planner (``benchmarks/hillclimb.py``):
+the successive-halving loop terminates on the batched report path, halves
+its candidate set per rung, and emits a structurally complete artifact."""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import hillclimb  # noqa: E402
+
+
+def test_hillclimb_smoke(tmp_path):
+    artifact = str(tmp_path / "BENCH_hillclimb.json")
+    out = hillclimb.run(smoke=True, artifact=artifact)
+    assert out["ok"]
+    assert out["mode"] == "smoke"
+    assert len(out["rungs"]) == 2
+    first, second = out["rungs"]
+    assert first["n_candidates"] == len(hillclimb.candidate_grid(True))
+    assert second["n_candidates"] == max(1, first["n_candidates"] // 2)
+    for rung in out["rungs"]:
+        assert rung["profile"]["report_solver"] == "batched"
+        assert rung["profile"]["report_solve"] >= 0
+    if out["winner"] is not None:
+        w = out["winner"]
+        assert w["feasible"]
+        assert w["worst_window_response_s"] <= out["slo_s"]
+        assert w["cost"] == hillclimb.config_cost(
+            {"n_shards": w["n_shards"],
+             "store.n_lines": w["store.n_lines"]})
+    on_disk = json.load(open(artifact))
+    assert on_disk["slo_s"] == out["slo_s"]
+    assert on_disk["ok"]
