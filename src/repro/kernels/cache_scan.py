@@ -1,0 +1,489 @@
+"""Fused tier-1 cache-scan engine: VMEM-resident state for the request loop.
+
+The reference engine (``repro.storage.tiered_store``) carries the full
+``StoreState`` pytree through a ``lax.scan``, so every request round-trips
+cache tags, recency metadata, prediction rings and expert weights through
+HBM — the queue-starved access pattern that leaves the sweep's
+``engine_dispatch`` stage dominant (~65% of wall time on the gated
+288-point × 32-window grid, see ``BENCH_report.json``). This module fuses
+the whole request loop — lookup → policy decision → eviction → windowed
+scatter-add — per ``(shard, point)``:
+
+- **Pallas kernel** (:func:`cache_scan_kernel`): one grid cell per stream
+  row keeps the cache tag/metadata arrays, LRU/LFU recency state,
+  prediction rings and online-learning expert weights in VMEM scratch
+  (SMEM for the scalar learner/prefetcher state) and loops over the
+  requests with elementwise one-hot updates — no per-step HBM round trip,
+  no scatter/gather.
+- **Pure-jax fallback** (:func:`repro.kernels.ref.cache_scan_ref`): the
+  same one-hot step as a ``lax.scan`` — the CPU production path and the
+  golden oracle, bit-identical to the kernel in interpret mode and to the
+  reference engine everywhere (integer one-hot updates are exact; the
+  float weight arithmetic calls the same ``online_learning`` routines).
+- **Hoisted PRNG** (:func:`repro.kernels.ref.cache_scan_noise`): the
+  Random expert's per-step uniforms become a precomputed ``[len,
+  n_lines]`` table — bit-identical draws (same threefry chain), computed
+  once per compile and *shared* across every megabatch row (the table is
+  a vmap constant), instead of a sequential split+draw per request.
+
+Dispatch follows the ``REPRO_KERNELS`` convention of
+:mod:`repro.kernels.reuse_distance`: pure-jax fallback on this CPU
+container, compiled Pallas on a TPU backend, interpret-mode Pallas
+testable everywhere. :func:`cache_scan_compile_count` counts traces of
+the production engine (once per XLA compile under jit) exactly like
+``engine_compile_count`` / ``stream_compile_count``.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.online_learning import N_EXPERTS
+from repro.kernels.ref import cache_scan_noise, cache_scan_ref
+
+__all__ = [
+    "cache_scan_kernel",
+    "fused_cache_scan",
+    "cache_scan_compile_count",
+    "reset_cache_scan_compile_count",
+]
+
+# Mirrors kernels/ops.py: interpret-mode (pure-jax fallback) unless the
+# container bakes a real TPU toolchain.
+INTERPRET = os.environ.get("REPRO_KERNELS", "interpret") != "tpu"
+
+# Noise-table budget, elements. One-shot streams whose [len, n_lines]
+# Random-expert table would exceed this (f32 >16 MB) fall back to in-loop
+# PRNG splits — correctness is unaffected (same draws), only the hoisting
+# optimization is skipped. The Pallas kernel additionally requires the
+# table to fit its VMEM block (NOISE_VMEM_MAX elements).
+NOISE_TABLE_MAX = 1 << 22
+NOISE_VMEM_MAX = 1 << 20
+
+# Trace-time compile counter for the fused engine (both the Pallas wrapper
+# and the ref fallback): increments once per trace, i.e. once per XLA
+# compile when called under jit — benchmarks/bench_engine.py gates on it.
+_CACHE_SCAN_COMPILES = [0]
+
+# SMEM scalar slots of the kernel (learner + stream-identifier state).
+_SM_EPOCH_MISSES, _SM_CHOSEN, _SM_LAST_MISS, _SM_STRIDE = 0, 1, 2, 3
+_SM_CONF, _SM_ISSUED, _SM_USEFUL = 4, 5, 6
+_N_SM = 8
+
+_BIG = jnp.iinfo(jnp.int32).max
+
+
+def cache_scan_compile_count() -> int:
+    """Number of traces (== XLA compiles under jit) of the fused engine."""
+    return _CACHE_SCAN_COMPILES[0]
+
+
+def reset_cache_scan_compile_count() -> None:
+    _CACHE_SCAN_COMPILES[0] = 0
+
+
+def fused_cache_scan(cfg, hyper, state0, acc0, pages, writes, win, *,
+                     n_windows: int, unroll: int = 1, masked: bool = False,
+                     interpret=None):
+    """Production fused engine for one stream row: ``(state0, acc0, pages
+    [L], writes [L], win [L]) -> (final_state, acc)``.
+
+    Plain traceable function (inlines into the caller's jit; the compile
+    counter increments once per outer XLA compile). ``cfg`` supplies the
+    structural knobs (``epoch_width``, ``pred_cap``, ``prefetch``,
+    ``prefetch_width``), ``hyper`` the traced scalar knobs. ``masked=True``
+    is the resumable chunk-engine mode: pads (``win >= n_windows``) leave
+    the carried state untouched, and the PRNG stays in-loop (the carried
+    key must advance per real request; a per-shard noise table would also
+    defeat the chunk path's bounded-memory contract). The one-shot mode
+    hoists the Random expert's draws into a shared noise table instead
+    (see :func:`repro.kernels.ref.cache_scan_noise`).
+
+    On a TPU backend (``REPRO_KERNELS=tpu``) the one-shot mode routes to
+    :func:`cache_scan_kernel` (a fresh cold-start row, exactly what the
+    one-shot callers construct); everything else runs the pure-jax
+    fallback — bit-identical either way.
+    """
+    _CACHE_SCAN_COMPILES[0] += 1  # trace-time: once per XLA compile
+    if interpret is None:
+        interpret = INTERPRET
+    n_lines = state0.cache.tags.shape[-1]
+    length = pages.shape[0]
+    use_table = (not masked) and length * n_lines <= NOISE_TABLE_MAX
+    noise = cache_scan_noise(state0.key, length, n_lines) if use_table \
+        else None
+    if interpret or not use_table \
+            or length * n_lines > NOISE_VMEM_MAX:
+        return cache_scan_ref(
+            state0, acc0, pages, writes, win, hyper, noise,
+            epoch_width=cfg.epoch_width, pred_cap=cfg.pred_cap,
+            prefetch=cfg.prefetch, prefetch_width=cfg.prefetch_width,
+            n_windows=n_windows, unroll=unroll, masked=masked,
+        )
+    out = cache_scan_kernel(
+        pages[None], writes[None], win[None], noise,
+        hyper.alpha, hyper.beta, hyper.threshold, hyper.policy_idx,
+        n_lines=n_lines, epoch_width=cfg.epoch_width,
+        pred_cap=cfg.pred_cap, prefetch=cfg.prefetch,
+        prefetch_width=cfg.prefetch_width,
+        prefetch_buf=state0.pf.ptags.shape[-1], n_windows=n_windows,
+        interpret=False,
+    )
+    # The kernel runs the row from the cold init state (what every one-shot
+    # caller passes) and returns the accumulators directly; only the final
+    # expert weights of the state are observable downstream.
+    acc = jax.tree.map(
+        lambda a0, a: a[0].reshape(jnp.shape(a0)).astype(a0.dtype),
+        acc0, type(acc0)(**{f: out[f] for f in acc0._fields}))
+    state = state0._replace(
+        ols=state0.ols._replace(weights=out["final_weights"][0]),
+        t=state0.t + length)
+    return state, acc
+
+
+def _cache_scan_body(pages_ref, writes_ref, win_ref, noise_ref,
+                     alpha_ref, beta_ref, thr_ref, pol_ref,
+                     scal_ref, eu_ref, winc_ref, weu_ref, ww_ref, fw_ref,
+                     tags_s, valid_s, dirty_s, freq_s, ts_s,
+                     pred_s, wts_s, predn_s, mispred_s, ptags_s, pvalid_s,
+                     sm, *, length, n_lines, epoch_width, pred_cap,
+                     prefetch, prefetch_width, prefetch_buf, n_windows):
+    """One grid cell = one stream row, state resident in VMEM/SMEM scratch.
+
+    Mirrors :func:`repro.kernels.ref.fused_cache_step` op for op (interpret
+    mode is bit-identical by construction); arg-reductions are spelled as
+    first-index min-selects (``min(where(mask, iota, BIG))``), which equal
+    ``argmin``/``argmax`` first-match semantics exactly. The prediction
+    rings are stored transposed (``[pred_cap, E]``) so the ring-cursor
+    write is a row-iota compare against the ``[1, E]`` cursor — lane
+    layouts only, no in-kernel transposes.
+    """
+    i32, f32 = jnp.int32, jnp.float32
+    E = N_EXPERTS
+    line = jax.lax.broadcasted_iota(i32, (1, n_lines), 1)
+    eline = jax.lax.broadcasted_iota(i32, (1, E), 1)
+
+    # Cold start: init_store() state, zeroed accumulators.
+    tags_s[...] = jnp.full((1, n_lines), -1, i32)
+    valid_s[...] = jnp.zeros((1, n_lines), i32)
+    dirty_s[...] = jnp.zeros((1, n_lines), i32)
+    freq_s[...] = jnp.zeros((1, n_lines), i32)
+    ts_s[...] = jnp.zeros((1, n_lines), i32)
+    pred_s[...] = jnp.full((pred_cap, E), -1, i32)
+    wts_s[...] = jnp.full((1, E), 1.0 / E, f32)
+    predn_s[...] = jnp.zeros((1, E), i32)
+    mispred_s[...] = jnp.zeros((1, E), i32)
+    ptags_s[...] = jnp.full((1, prefetch_buf), -1, i32)
+    pvalid_s[...] = jnp.zeros((1, prefetch_buf), i32)
+    for j in range(_N_SM):
+        sm[j] = jnp.asarray(-1 if j == _SM_LAST_MISS else 0, i32)
+    scal_ref[...] = jnp.zeros_like(scal_ref)
+    eu_ref[...] = jnp.zeros_like(eu_ref)
+    winc_ref[...] = jnp.zeros_like(winc_ref)
+    weu_ref[...] = jnp.zeros_like(weu_ref)
+    ww_ref[...] = jnp.zeros_like(ww_ref)
+
+    alpha = alpha_ref[0, 0]
+    beta = beta_ref[0, 0]
+    thr = thr_ref[0, 0]
+    pol = pol_ref[0, 0]
+
+    def first_idx(mask, iota):
+        return jnp.min(jnp.where(mask, iota, _BIG))
+
+    def step(t, carry):
+        page = pages_ref[0, t]
+        is_w = writes_ref[0, t] != 0
+        win_i = win_ref[0, t]
+        nrow = noise_ref[pl.ds(t, 1), :]                  # (1, n_lines)
+        tags, freq, ts = tags_s[...], freq_s[...], ts_s[...]
+        valid, dirty = valid_s[...] != 0, dirty_s[...] != 0
+
+        # --- lookup ---
+        match = valid & (tags == page)
+        hit = jnp.any(match)
+        hit_oh = line == first_idx(match, line)
+        ts_hit = jnp.where(hit_oh, t, ts)
+        freq_hit = freq + hit_oh.astype(i32)
+        dirty_hit = dirty | (hit_oh & is_w)
+
+        # --- miss bookkeeping ---
+        miss = ~hit
+        hit_pred = jnp.max((pred_s[...] == page).astype(i32), axis=0,
+                           keepdims=True)                 # (1, E)
+        mispred_s[...] += jnp.where(miss, hit_pred, 0)
+        sm[_SM_EPOCH_MISSES] = (sm[_SM_EPOCH_MISSES]
+                                + jnp.where(miss, 1, 0).astype(i32))
+        if prefetch:
+            ptags, pvalid = ptags_s[...], pvalid_s[...] != 0
+            pmatch = pvalid & (ptags == page)
+            in_buf = jnp.any(pmatch)
+            pvalid = jnp.where(miss & pmatch, False, pvalid)
+            pvalid_s[...] = pvalid.astype(i32)
+            sm[_SM_USEFUL] = (sm[_SM_USEFUL]
+                              + jnp.where(miss & in_buf, 1, 0).astype(i32))
+            promoted = miss & in_buf
+        else:
+            promoted = jnp.zeros((), bool)
+
+        free = ~valid
+        has_free = jnp.any(free)
+        free_idx = first_idx(free, line)
+
+        # --- GetVictim ---
+        ts_m = jnp.where(valid, ts, _BIG)
+        fq_m = jnp.where(valid, freq, _BIG)
+        lru = first_idx(ts_m == jnp.min(ts_m), line)
+        lfu = first_idx(fq_m == jnp.min(fq_m), line)
+        nz = jnp.where(valid, nrow, -1.0)
+        rnd = first_idx(nz == jnp.max(nz), line)
+        w = wts_s[...]
+        s = jnp.sum(w)
+        probs = jnp.where(s > 0, w / s, 1.0 / E)
+        learned = first_idx(probs == jnp.max(probs), eline)
+        chosen = jnp.where(pol >= 0, jnp.clip(pol, 0, E - 1), learned)
+        # E == 3 select chains (the expert contract of online_learning).
+        victim_idx = jnp.where(chosen == 0, lru,
+                               jnp.where(chosen == 1, lfu, rnd))
+        vp_lru = jnp.sum(jnp.where(line == lru, tags, 0))
+        vp_lfu = jnp.sum(jnp.where(line == lfu, tags, 0))
+        vp_rnd = jnp.sum(jnp.where(line == rnd, tags, 0))
+        victim_pages = jnp.where(eline == 0, vp_lru,
+                                 jnp.where(eline == 1, vp_lfu, vp_rnd))
+
+        evict = miss & ~has_free
+        slot = jnp.where(has_free, free_idx, victim_idx)
+        slot_oh = line == slot
+        writeback = evict & jnp.any(slot_oh & dirty)
+
+        # --- prediction rings (transposed [C, E] layout) ---
+        ring = predn_s[...] % pred_cap                    # (1, E)
+        riota = jax.lax.broadcasted_iota(i32, (pred_cap, E), 0)
+        pred_new = jnp.where(riota == ring, victim_pages, pred_s[...])
+        pred_s[...] = jnp.where(evict, pred_new, pred_s[...])
+        predn_s[...] = jnp.where(evict, predn_s[...] + 1, predn_s[...])
+        sm[_SM_CHOSEN] = jnp.where(evict, chosen, sm[_SM_CHOSEN])
+
+        # --- insert + merge ---
+        tags_n = jnp.where(miss, jnp.where(slot_oh, page, tags), tags)
+        valid_n = jnp.where(miss, valid | slot_oh, valid)
+        tags_s[...] = tags_n
+        valid_s[...] = valid_n.astype(i32)
+        dirty_s[...] = jnp.where(
+            miss, jnp.where(slot_oh, is_w, dirty),
+            jnp.where(hit, dirty_hit, dirty)).astype(i32)
+        freq_s[...] = jnp.where(miss, jnp.where(slot_oh, 1, freq),
+                                jnp.where(hit, freq_hit, freq))
+        ts_s[...] = jnp.where(miss, jnp.where(slot_oh, t, ts),
+                              jnp.where(hit, ts_hit, ts))
+
+        # --- stream identifier + prefetch issue ---
+        if prefetch:
+            last_miss, stride = sm[_SM_LAST_MISS], sm[_SM_STRIDE]
+            conf = sm[_SM_CONF]
+            delta = page - last_miss
+            same = (delta == stride) & (last_miss >= 0) & (delta != 0)
+            conf_o = jnp.where(same, conf + 1,
+                               jnp.where(delta != 0, 1, conf))
+            stride_o = jnp.where(same, stride,
+                                 jnp.where(delta != 0, delta, stride))
+            stride_n = jnp.where(miss, stride_o, stride)
+            conf_n = jnp.where(miss, conf_o, conf)
+            sm[_SM_LAST_MISS] = jnp.where(miss, page, last_miss)
+            sm[_SM_STRIDE] = stride_n
+            sm[_SM_CONF] = conf_n
+            n_before = sm[_SM_ISSUED]
+            active = conf_n >= 2
+            bline = jax.lax.broadcasted_iota(i32, (1, prefetch_buf), 1)
+
+            def pbody(k, c):
+                ptg, pvl, issued = c
+                cand = page + (k + 1) * stride_n
+                in_cache = jnp.any(valid_n & (tags_n == cand))
+                in_buf2 = jnp.any(pvl & (ptg == cand))
+                bfree = ~pvl
+                do = (active & jnp.any(bfree) & ~in_cache & ~in_buf2
+                      & (cand >= 0))
+                boh = (bline == first_idx(bfree, bline)) & do
+                return (jnp.where(boh, cand, ptg), pvl | boh,
+                        issued + jnp.where(do, 1, 0).astype(i32))
+
+            pt0, pv0 = ptags_s[...], pvalid_s[...] != 0
+            pt1, pv1, iss1 = jax.lax.fori_loop(
+                0, prefetch_width, pbody, (pt0, pv0, n_before))
+            ptags_s[...] = jnp.where(miss, pt1, pt0)
+            pvalid_s[...] = jnp.where(miss, pv1, pv0).astype(i32)
+            issued_n = jnp.where(miss, iss1, n_before)
+            sm[_SM_ISSUED] = issued_n
+            prefetch_fetches = jnp.where(miss, issued_n - n_before, 0)
+        else:
+            prefetch_fetches = jnp.zeros((), i32)
+
+        # --- epoch boundary (WeightAdjust, ws policy only) ---
+        do_adj = ((t + 1) % epoch_width == 0) & (pol < 0)
+        em = sm[_SM_EPOCH_MISSES]
+        mis = mispred_s[...]
+        losses = jnp.where(mis.astype(f32) >= thr * em.astype(f32),
+                           mis, 0).astype(f32)
+        prev = wts_s[...]
+        wadj = prev * jnp.power(beta, losses)
+        wadj = wadj + alpha * jnp.mean(prev - wadj)
+        wadj = jnp.maximum(wadj, 1e-8)
+        wadj = wadj / jnp.sum(wadj)
+        wts_s[...] = jnp.where(do_adj, wadj, prev)
+        pred_s[...] = jnp.where(do_adj, -1, pred_s[...])
+        predn_s[...] = jnp.where(do_adj, 0, predn_s[...])
+        mispred_s[...] = jnp.where(do_adj, 0, mis)
+        sm[_SM_EPOCH_MISSES] = jnp.where(do_adj, 0, em)
+
+        # --- fold (one-hot accumulators; pad win_i matches no slot) ---
+        hit_c = hit.astype(i32)
+        miss_c = miss.astype(i32)
+        pfh_c = promoted.astype(i32)
+        t2r_c = (miss & ~promoted).astype(i32) + prefetch_fetches
+        t2w_c = writeback.astype(i32)
+        ev_c = evict.astype(i32)
+        expert = jnp.where(evict, chosen, 0)
+        sc = jax.lax.broadcasted_iota(i32, (1, 8), 1)
+        scal_ref[...] += jnp.where(
+            sc == 0, hit_c, jnp.where(
+                sc == 1, miss_c, jnp.where(
+                    sc == 2, pfh_c, jnp.where(
+                        sc == 3, t2r_c, jnp.where(
+                            sc == 4, t2w_c, jnp.where(
+                                sc == 5, ev_c, 0))))))
+        eu_ref[...] += jnp.where(eline == expert, ev_c, 0)
+        r7 = jax.lax.broadcasted_iota(i32, (1, 7, n_windows), 1)
+        w7 = jax.lax.broadcasted_iota(i32, (1, 7, n_windows), 2)
+        vals = jnp.where(
+            r7 == 0, 1, jnp.where(
+                r7 == 1, hit_c, jnp.where(
+                    r7 == 2, miss_c, jnp.where(
+                        r7 == 3, pfh_c, jnp.where(
+                            r7 == 4, t2r_c, jnp.where(
+                                r7 == 5, t2w_c, ev_c))))))
+        winc_ref[...] += jnp.where(w7 == win_i, vals, 0)
+        wW = jax.lax.broadcasted_iota(i32, (1, n_windows, E), 1)
+        eE = jax.lax.broadcasted_iota(i32, (1, n_windows, E), 2)
+        weu_ref[...] += jnp.where((wW == win_i) & (eE == expert), ev_c, 0)
+        ww_ref[...] = jnp.where(wW == win_i, wts_s[...][:, None, :],
+                                ww_ref[...])
+        return carry
+
+    jax.lax.fori_loop(0, length, step, jnp.zeros((), i32))
+    fw_ref[...] = wts_s[...]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_lines", "epoch_width", "pred_cap", "prefetch", "prefetch_width",
+    "prefetch_buf", "n_windows", "interpret"))
+def cache_scan_kernel(
+    pages: jnp.ndarray,   # int32[B, L] per-row request streams
+    writes: jnp.ndarray,  # bool/int32[B, L]
+    win: jnp.ndarray,     # int32[B, L] window ids (n_windows = pad/drop)
+    noise: jnp.ndarray,   # f32[L, n_lines] shared Random-expert table
+    alpha, beta, threshold, policy_idx,  # scalar or [B] hyper knobs
+    *,
+    n_lines: int,
+    epoch_width: int = 4,
+    pred_cap: int = 64,
+    prefetch: bool = False,
+    prefetch_width: int = 4,
+    prefetch_buf: int = 16,
+    n_windows: int = 1,
+    interpret: bool = False,
+) -> dict:
+    """Batched Pallas cache scan: each of the ``B`` rows runs the whole
+    request loop from the cold :func:`~repro.storage.tiered_store.init_store`
+    state inside one grid cell, tier-1 state resident in VMEM scratch.
+
+    Returns the accumulator dict (keys = the reference ``_Accum`` fields
+    plus ``final_weights``): scalar counters ``[B]``, windowed counters
+    ``[B, n_windows]``, ``win_expert_use``/``win_weights``
+    ``[B, n_windows, E]``. Bit-identical to
+    :func:`repro.kernels.ref.cache_scan_ref` over each row with the same
+    ``noise`` table (golden-tested in interpret mode)."""
+    B, L = pages.shape
+    E = N_EXPERTS
+    W = n_windows
+    i32, f32 = jnp.int32, jnp.float32
+    pages = jnp.asarray(pages, i32)
+    writes = jnp.asarray(writes).astype(i32)
+    win = jnp.asarray(win, i32)
+    noise = jnp.asarray(noise, f32)
+    # The ring only ever holds min(pred_cap, epoch_width) live entries:
+    # under ws it is cleared every epoch (<= epoch_width evictions between
+    # resets), and under fixed policies it is unobservable (weights never
+    # adjust) — same truncation as cache_scan_ref, bit-exact.
+    pred_cap = min(pred_cap, epoch_width)
+    _CACHE_SCAN_COMPILES[0] += 1  # trace-time: once per XLA compile
+
+    def knob(x, dtype):
+        x = jnp.asarray(x, dtype)
+        return jnp.broadcast_to(x.reshape(-1, 1), (B, 1))
+
+    row = pl.BlockSpec((1, L), lambda b: (b, 0))
+    smem1 = pl.BlockSpec((1, 1), lambda b: (b, 0),
+                         memory_space=pltpu.SMEM)
+    out = pl.pallas_call(
+        functools.partial(
+            _cache_scan_body, length=L, n_lines=n_lines,
+            epoch_width=epoch_width, pred_cap=pred_cap, prefetch=prefetch,
+            prefetch_width=prefetch_width, prefetch_buf=prefetch_buf,
+            n_windows=W),
+        grid=(B,),
+        in_specs=[
+            row, row, row,
+            pl.BlockSpec((L, n_lines), lambda b: (0, 0)),  # shared noise
+            smem1, smem1, smem1, smem1,
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 8), lambda b: (b, 0)),
+            pl.BlockSpec((1, E), lambda b: (b, 0)),
+            pl.BlockSpec((1, 7, W), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, W, E), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, W, E), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, E), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 8), i32),       # packed scalar totals
+            jax.ShapeDtypeStruct((B, E), i32),       # expert_use
+            jax.ShapeDtypeStruct((B, 7, W), i32),    # packed win counters
+            jax.ShapeDtypeStruct((B, W, E), i32),    # win_expert_use
+            jax.ShapeDtypeStruct((B, W, E), f32),    # win_weights
+            jax.ShapeDtypeStruct((B, E), f32),       # final_weights
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, n_lines), i32),   # tags
+            pltpu.VMEM((1, n_lines), i32),   # valid
+            pltpu.VMEM((1, n_lines), i32),   # dirty
+            pltpu.VMEM((1, n_lines), i32),   # freq
+            pltpu.VMEM((1, n_lines), i32),   # ts
+            pltpu.VMEM((pred_cap, E), i32),  # prediction rings (transposed)
+            pltpu.VMEM((1, E), f32),         # expert weights
+            pltpu.VMEM((1, E), i32),         # pred_n
+            pltpu.VMEM((1, E), i32),         # mispred
+            pltpu.VMEM((1, prefetch_buf), i32),  # prefetch tags
+            pltpu.VMEM((1, prefetch_buf), i32),  # prefetch valid
+            pltpu.SMEM((_N_SM,), i32),       # scalar learner/prefetch state
+        ],
+        interpret=interpret,
+    )(pages, writes, win, noise,
+      knob(alpha, f32), knob(beta, f32), knob(threshold, f32),
+      knob(policy_idx, i32))
+    scal, eu, winc, weu, ww, fw = out
+    return dict(
+        hits=scal[:, 0], misses=scal[:, 1], prefetch_hits=scal[:, 2],
+        tier2_reads=scal[:, 3], tier2_writes=scal[:, 4],
+        evictions=scal[:, 5], expert_use=eu,
+        win_requests=winc[:, 0], win_hits=winc[:, 1],
+        win_misses=winc[:, 2], win_prefetch_hits=winc[:, 3],
+        win_tier2_reads=winc[:, 4], win_tier2_writes=winc[:, 5],
+        win_evictions=winc[:, 6], win_expert_use=weu, win_weights=ww,
+        final_weights=fw,
+    )

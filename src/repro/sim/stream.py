@@ -43,6 +43,7 @@ and the host collapses the composite axis back into per-window totals
 from __future__ import annotations
 
 import dataclasses
+from time import perf_counter
 from typing import Optional
 
 import numpy as np
@@ -164,6 +165,8 @@ def stream_tier1_counters(
     checkpoint: Optional[StreamCheckpoint] = None,
     max_requests: Optional[int] = None,
     donate: bool = True,
+    engine: str = "fused",
+    profile: Optional[dict] = None,
 ):
     """Chunked-replay counterpart of :func:`repro.sim.engine.tier1_counters`.
 
@@ -180,9 +183,18 @@ def stream_tier1_counters(
     ``max_requests`` bounds how many further requests this call consumes
     (``None`` = run to the end). ``donate=False`` disables buffer donation
     and async overlap — the naive baseline the benchmarks compare
-    against."""
+    against. ``engine`` selects the fused cache-scan request loop
+    (default) or the original ``"scan"`` reference (bit-exact either way).
+
+    ``profile`` (a mutable dict) accumulates per-chunk wall-clock
+    sub-timings: ``stream_chunk_host`` (generation + binning +
+    partitioning), ``stream_chunk_dispatch`` (device_put + async engine
+    submission), ``stream_chunk_wait`` (blocking materialization of the
+    final carry; per-chunk blocking too when ``donate=False``) and
+    ``stream_chunks`` (chunk count)."""
     if chunk < 1:
         raise ValueError("chunk must be >= 1")
+    prof = profile
     n_shards = spec.n_shards
     signature = spec.cache_signature()
     tenant = spec.traffic.kind == "tenant_mix" and trace is None
@@ -236,10 +248,12 @@ def stream_tier1_counters(
                                                   offset + int(max_requests))
     primary, fallback = _chunk_caps(chunk, n_shards)
     eng = stream_chunk_engine(spec.store, unroll=unroll,
-                              n_windows=eng_windows, donate=donate)
+                              n_windows=eng_windows, donate=donate,
+                              engine=engine)
     hyper = spec.store.hyper()
 
     while offset < stop:
+        tc0 = perf_counter()
         m = min(chunk, stop - offset)
         if tenant:
             p, w, t, tids = gen.take(m)
@@ -265,20 +279,35 @@ def stream_tier1_counters(
             cap=cap, n_windows=eng_windows, window_ids=cwin, owner=own)
         counts += cnt
         shard_writes += np.bincount(own[w], minlength=n_shards)
+        tc1 = perf_counter()
         # Async pipeline: device_put + dispatch return before the chunk
         # finishes computing, so the next iteration's host work (generate,
         # bin, partition) overlaps device compute. donate=False is the
         # deliberately-synchronous naive baseline.
         dev = jax.device_put((sh_p, sh_w, sh_win))
         carry = eng(hyper, carry, *dev)
+        tc2 = perf_counter()
         if not donate:
             jax.block_until_ready(carry)
         offset += m
+        if prof is not None:
+            prof["stream_chunk_host"] = (
+                prof.get("stream_chunk_host", 0.0) + (tc1 - tc0))
+            prof["stream_chunk_dispatch"] = (
+                prof.get("stream_chunk_dispatch", 0.0) + (tc2 - tc1))
+            prof["stream_chunk_wait"] = (
+                prof.get("stream_chunk_wait", 0.0)
+                + (perf_counter() - tc2))
+            prof["stream_chunks"] = prof.get("stream_chunks", 0) + 1
 
     # Materialize the carry on the host once: the numpy copies survive the
     # next resume's donation, feed the counter assembly below, and make
     # the checkpoint picklable.
+    tw0 = perf_counter()
     carry_host = jax.tree.map(np.asarray, carry)
+    if prof is not None:
+        prof["stream_chunk_wait"] = (
+            prof.get("stream_chunk_wait", 0.0) + (perf_counter() - tw0))
     stats = stream_stats_from_carry(carry_host, counts)
 
     tenant_ctr = None
@@ -370,6 +399,8 @@ def simulate_stream(
     checkpoint: Optional[StreamCheckpoint] = None,
     max_requests: Optional[int] = None,
     donate: bool = True,
+    engine: str = "fused",
+    profile: Optional[dict] = None,
 ):
     """Streaming counterpart of :func:`repro.sim.engine.simulate`.
 
@@ -388,7 +419,8 @@ def simulate_stream(
     call runs to the end of the stream and returns the report alone."""
     ctr, tenant_ctr, ck = stream_tier1_counters(
         spec, trace, chunk=chunk, unroll=unroll, checkpoint=checkpoint,
-        max_requests=max_requests, donate=donate)
+        max_requests=max_requests, donate=donate, engine=engine,
+        profile=profile)
     rep = report_from_counters(spec, ctr, tenants=tenant_ctr)
     if max_requests is None:
         return rep

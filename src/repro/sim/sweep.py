@@ -71,6 +71,7 @@ import dataclasses
 import itertools
 import json
 import logging
+import warnings
 from time import perf_counter
 from typing import Callable, Mapping, NamedTuple, Optional, Sequence
 
@@ -266,13 +267,16 @@ def _route_mrc(
 
 
 def _route_stream(
-    unique: Mapping[tuple, SimSpec], stream: str,
+    unique: Mapping[tuple, SimSpec], stream: str, *,
+    engine: str = "fused", profile: Optional[dict] = None,
 ) -> tuple[dict[tuple, Tier1Counters], dict[tuple, TenantCounters]]:
     """Serve ``tenant_mix`` and oversized-stream signatures via the chunked
     replay engine (:mod:`repro.sim.stream`): bounded device memory, at most
     two compiles, counters bit-identical to the scan engine. Returns
     ``({signature: counters}, {signature: tenant_counters})`` for the
-    routed signatures; the caller runs the rest through the megabatch."""
+    routed signatures; the caller runs the rest through the megabatch.
+    ``profile`` threads per-chunk sub-timings through to
+    :func:`repro.sim.stream.stream_tier1_counters`."""
     counters: dict[tuple, Tier1Counters] = {}
     tenants: dict[tuple, TenantCounters] = {}
     if stream == "off":
@@ -286,7 +290,8 @@ def _route_stream(
             "tenant_mix" if mix else "oversized stream",
             spec.traffic.n_requests,
         )
-        ctr, tc, _ = stream_tier1_counters(spec)
+        ctr, tc, _ = stream_tier1_counters(spec, engine=engine,
+                                           profile=profile)
         counters[sig] = ctr
         if tc is not None:
             tenants[sig] = tc
@@ -309,6 +314,7 @@ def _stack_hypers(stores: Sequence[StoreConfig]) -> StoreHyper:
 
 def _batched_engine(
     store: StoreConfig, unroll: int, n_dev: int, n_windows: int,
+    engine: str = "fused", donate: bool = True,
 ) -> Callable:
     """The one-compile megabatch engine for a structural store config:
     ``(hyper [N], pages [N, S, L], writes [N, S, L], win [N, S, L]) ->
@@ -316,8 +322,15 @@ def _batched_engine(
     axis sharded over all local devices. Wall-clock specs feed the same
     ``win`` operand (arrival times become int32 ids host-side), so timed
     and request-index grids share this one engine. Cached so repeated
-    sweeps reuse both the wrapper and jit's compile cache."""
-    key = (store, unroll, n_dev, n_windows)
+    sweeps reuse both the wrapper and jit's compile cache.
+
+    ``engine`` selects the request-loop implementation (see
+    :func:`repro.storage.tiered_store.run_stream`); ``donate=True``
+    donates the three stacked chunk buffers to the dispatch
+    (``donate_argnums``) so XLA may recycle their allocations while the
+    engine runs — ``donate=False`` keeps the undonated baseline
+    available (buffers stay valid after the call)."""
+    key = (store, unroll, n_dev, n_windows, engine, donate)
     fn = _ENGINE_CACHE.get(key)
     if fn is not None:
         return fn
@@ -329,7 +342,7 @@ def _batched_engine(
             return jax.vmap(
                 lambda pp, ww, wwi: run_stream(
                     store, pp, ww, hyper=h, unroll=unroll,
-                    n_windows=n_windows, window_ids=wwi,
+                    n_windows=n_windows, window_ids=wwi, engine=engine,
                 )
             )(p, w, wi)
 
@@ -338,15 +351,28 @@ def _batched_engine(
 
     if n_dev > 1:
         spec = PartitionSpec("points")
-        fn = jax.jit(shard_map(
+        jfn = jax.jit(shard_map(
             body,
             mesh=device_mesh("points"),
             in_specs=(spec,) * n_in,
             out_specs=spec,
             check_vma=True,
-        ))
+        ), donate_argnums=(1, 2, 3) if donate else ())
     else:
-        fn = jax.jit(body)
+        jfn = jax.jit(body, donate_argnums=(1, 2, 3) if donate else ())
+
+    if donate:
+        # The stacked stream operands have no same-shape output to alias
+        # (the StreamStats counters are tiny), so XLA can only free them
+        # early, not reuse them — intended; silence just that warning.
+        def fn(*args):
+            with warnings.catch_warnings():
+                warnings.filterwarnings(
+                    "ignore",
+                    message="Some donated buffers were not usable")
+                return jfn(*args)
+    else:
+        fn = jfn
     _ENGINE_CACHE[key] = fn
     return fn
 
@@ -388,12 +414,14 @@ class _PendingBucket:
 
 def _dispatch_group(
     specs: list[SimSpec], sigs: list, *, unroll: int,
+    engine: str = "fused", donate: bool = True,
     _prof: Optional[dict] = None,
 ) -> list[_PendingBucket]:
     """Partition, bucket, pad and asynchronously dispatch every unique cache
     signature of one batch-key group. Returns pending buckets; device compute
     proceeds while the caller prepares and dispatches later groups.
-    ``_prof`` accumulates ``stream_gen`` / ``engine_dispatch`` seconds."""
+    ``_prof`` accumulates ``stream_gen`` / ``engine_dispatch`` seconds
+    (submission side — see ``engine_dispatch_submit``)."""
     store_static = specs[0].store.static_config()
     n_shards = specs[0].n_shards
     n_windows, window_dt0 = specs[0].window_grid()
@@ -472,14 +500,15 @@ def _dispatch_group(
         stores += [stores[0]] * (n_pad - n)
         hyper = _stack_hypers(stores)
 
-        engine = _batched_engine(store_static, unroll, n_dev, n_windows)
+        eng = _batched_engine(store_static, unroll, n_dev, n_windows,
+                              engine, donate)
         log.info(
             "sweep: dispatch %d points x %d shards @ len %d "
             "(n_lines=%d, windows=%d, timed=%s, devices=%d)",
             n, n_shards, cap, store_static.n_lines, n_windows, timed, n_dev,
         )
-        stats = engine(hyper, jnp.asarray(sh_pages),
-                       jnp.asarray(sh_writes), jnp.asarray(sh_win))
+        stats = eng(hyper, jnp.asarray(sh_pages),
+                    jnp.asarray(sh_writes), jnp.asarray(sh_win))
         pending.append(_PendingBucket(
             sigs=[m.sig for m in group],
             counts=[m.counts for m in group],
@@ -488,8 +517,15 @@ def _dispatch_group(
             stats=stats,
         ))
     if _prof is not None:
-        _prof["engine_dispatch"] = (
-            _prof.get("engine_dispatch", 0.0) + (perf_counter() - t1))
+        # Submission side of the engine stage: tracing + host→device
+        # transfer of the stacked operands (the calls are async — device
+        # compute is still in flight when this returns). The wait side
+        # (device compute + gather transfer) lands on
+        # ``engine_dispatch_wait``; ``engine_dispatch`` stays their sum.
+        dt = perf_counter() - t1
+        _prof["engine_dispatch"] = _prof.get("engine_dispatch", 0.0) + dt
+        _prof["engine_dispatch_submit"] = (
+            _prof.get("engine_dispatch_submit", 0.0) + dt)
     return pending
 
 
@@ -502,6 +538,8 @@ def sweep(
     mrc: str = "auto",
     stream: str = "auto",
     report: str = "auto",
+    engine: str = "fused",
+    donate: bool = True,
     profile: bool = False,
     verbose: bool = False,
 ) -> SweepResult:
@@ -538,9 +576,23 @@ def sweep(
     pre-batching per-point path; ``"auto"`` follows ``batch``. Batched and
     scalar reports agree to ~1e-13 (analytic k=1 path).
 
+    ``engine`` selects the tier-1 request-loop implementation
+    (:func:`repro.storage.tiered_store.run_stream`): ``"fused"`` (default)
+    is the fused cache-scan engine, ``"scan"`` the original per-step
+    reference it is bit-exact against. ``donate=True`` donates the stacked
+    stream buffers to each megabatch dispatch (``donate_argnums``);
+    ``donate=False`` keeps the undonated baseline.
+
     ``profile=True`` attaches a per-stage wall-clock breakdown (stream
     gen / engine dispatch / report solve / assembly, seconds) to
-    :attr:`SweepResult.profile`, serialized by ``to_json``.
+    :attr:`SweepResult.profile`, serialized by ``to_json``. The engine
+    stage is split into ``engine_dispatch_submit`` (host-side tracing +
+    transfer of async dispatches) and ``engine_dispatch_wait``
+    (device compute + gather back to host); ``engine_dispatch`` is their
+    sum, with the routed stream/MRC/unbatched paths' cost included
+    (chunked streaming additionally reports per-chunk
+    ``stream_chunk_host`` / ``stream_chunk_dispatch`` /
+    ``stream_chunk_wait`` timings).
     """
     if mrc not in ("auto", "off", "require"):
         raise ValueError(
@@ -571,6 +623,7 @@ def sweep(
     solver = ("batched" if batch else "scalar") if report == "auto" else report
     prof: Optional[dict] = (
         {"stream_gen": 0.0, "engine_dispatch": 0.0,
+         "engine_dispatch_submit": 0.0, "engine_dispatch_wait": 0.0,
          "report_solve": 0.0, "assembly": 0.0}
         if profile else None
     )
@@ -586,7 +639,8 @@ def sweep(
     tenant_ctrs: dict[tuple, TenantCounters] = {}
     t0 = perf_counter()
     if batch:
-        counters, tenant_ctrs = _route_stream(unique, stream)
+        counters, tenant_ctrs = _route_stream(unique, stream,
+                                              engine=engine, profile=prof)
     if batch and mrc != "off":
         counters.update(_route_mrc(
             {s: sp for s, sp in unique.items() if s not in counters}, mrc))
@@ -612,18 +666,23 @@ def sweep(
             )
             pending.extend(
                 _dispatch_group([unique[s] for s in sigs], sigs,
-                                unroll=unroll, _prof=prof)
+                                unroll=unroll, engine=engine,
+                                donate=donate, _prof=prof)
             )
         t0 = perf_counter()
         for bucket in pending:
             counters.update(bucket.gather())
         if prof is not None:
-            prof["engine_dispatch"] += perf_counter() - t0
+            # Gather blocks on device compute: this is the wait side of
+            # the engine stage (device compute + device→host transfer).
+            dt = perf_counter() - t0
+            prof["engine_dispatch"] += dt
+            prof["engine_dispatch_wait"] += dt
     else:
         t0 = perf_counter()
         for sig, spec in unique.items():
             log.info("sweep: run %s", sig)
-            counters[sig] = tier1_counters(spec)
+            counters[sig] = tier1_counters(spec, engine=engine)
         if prof is not None:
             prof["engine_dispatch"] += perf_counter() - t0
 

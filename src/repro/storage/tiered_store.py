@@ -55,6 +55,7 @@ import numpy as np
 from repro.core import online_learning as ol
 from repro.core import prefetch as pfm
 from repro.core.mapping import page_to_shard
+from repro.kernels.cache_scan import fused_cache_scan
 from repro.storage.cache_state import CacheState, init_cache
 
 __all__ = [
@@ -445,6 +446,7 @@ def run_stream(
     window_ids: Optional[jnp.ndarray] = None,
     timestamps: Optional[jnp.ndarray] = None,
     window_dt=None,
+    engine: str = "fused",
 ) -> StreamStats:
     """Process a request stream through one tier-1 shard. Jitted scan.
 
@@ -454,6 +456,13 @@ def run_stream(
     shapes the computation. ``unroll`` chunks the per-request scan body
     (semantics-preserving; larger values trade compile time for fewer loop
     iterations on wide batches).
+
+    ``engine`` selects the request-loop implementation: ``"fused"`` (the
+    default) routes through :func:`repro.kernels.cache_scan.fused_cache_scan`
+    — one-hot elementwise state updates with hoisted Random-expert draws,
+    VMEM-resident Pallas kernel on TPU backends — and ``"scan"`` keeps the
+    original per-step gather/scatter ``lax.scan``, the golden reference the
+    fused engine is bit-exact against.
 
     ``n_windows`` resolves the counters over time windows (carried
     accumulators — O(n_windows) memory, no per-request outputs). The window
@@ -485,17 +494,25 @@ def run_stream(
     elif window_ids is None:
         window_ids = stream_window_ids(pages.shape[0], n_windows)
     window_ids = jnp.asarray(window_ids, jnp.int32)
-
-    def scan_fn(carry, req):
-        state, acc = carry
-        page, write, win = req
-        state, out = _step(cfg, hyper, state, (page, write))
-        return (state, _fold(acc, out, win, state.ols.weights)), None
+    if engine not in ("fused", "scan"):
+        raise ValueError(f"unknown engine {engine!r}; options: fused, scan")
 
     carry0 = (init_store(cfg, seed), _init_accum(n_windows))
-    (final, acc), _ = jax.lax.scan(
-        scan_fn, carry0, (pages, is_write, window_ids), unroll=unroll
-    )
+    if engine == "fused":
+        final, acc = fused_cache_scan(
+            cfg, hyper, carry0[0], carry0[1], pages, is_write, window_ids,
+            n_windows=n_windows, unroll=unroll,
+        )
+    else:
+        def scan_fn(carry, req):
+            state, acc = carry
+            page, write, win = req
+            state, out = _step(cfg, hyper, state, (page, write))
+            return (state, _fold(acc, out, win, state.ols.weights)), None
+
+        (final, acc), _ = jax.lax.scan(
+            scan_fn, carry0, (pages, is_write, window_ids), unroll=unroll
+        )
     return StreamStats(
         requests=pages.shape[0] + jnp.zeros((), jnp.int32),
         hits=acc.hits,
@@ -520,7 +537,7 @@ def run_stream(
 
 run_stream_jit = jax.jit(
     run_stream, static_argnums=0,
-    static_argnames=("seed", "unroll", "n_windows"),
+    static_argnames=("seed", "unroll", "n_windows", "engine"),
 )
 
 
@@ -693,6 +710,7 @@ def run_distributed(
     timestamps: Optional[np.ndarray] = None,
     window_dt: Optional[float] = None,
     owner: Optional[np.ndarray] = None,
+    engine: str = "fused",
 ):
     """Distributed tier-1 cache: requests partitioned to per-shard caches by
     the §III mapping policy, shards processed by ``vmap`` (the paper's
@@ -726,7 +744,8 @@ def run_distributed(
         )
     stats = jax.vmap(
         lambda p, w, wi: run_stream(
-            cfg, p, w, seed=seed, n_windows=n_windows, window_ids=wi
+            cfg, p, w, seed=seed, n_windows=n_windows, window_ids=wi,
+            engine=engine,
         )
     )(jnp.asarray(sh_pages), jnp.asarray(sh_writes), jnp.asarray(sh_win))
     return correct_padded_stats(stats, counts, sh_pages.shape[1]), counts
@@ -777,7 +796,8 @@ def init_stream_carry(cfg: StoreConfig, n_shards: int, *, seed: int = 0,
 
 
 def stream_chunk_engine(cfg: StoreConfig, *, unroll: int = 1,
-                        n_windows: int = 1, donate: bool = True):
+                        n_windows: int = 1, donate: bool = True,
+                        engine: str = "fused"):
     """The compiled chunk engine for a structural store config:
     ``(hyper, carry, pages [S, L], writes [S, L], win [S, L]) -> carry``.
 
@@ -790,9 +810,14 @@ def stream_chunk_engine(cfg: StoreConfig, *, unroll: int = 1,
     comment). Callers must treat donated arguments as consumed: thread the
     returned carry, never reuse a chunk buffer after passing it in.
     ``donate=False`` exists for the naive per-chunk baseline benchmarks
-    compare against."""
+    compare against. ``engine`` selects the fused one-hot request loop
+    (default) or the original ``"scan"`` reference (see
+    :func:`run_stream`); both are bit-exact, masked-pad semantics
+    included."""
+    if engine not in ("fused", "scan"):
+        raise ValueError(f"unknown engine {engine!r}; options: fused, scan")
     static = cfg.static_config()
-    key = (static, unroll, n_windows, donate)
+    key = (static, unroll, n_windows, donate, engine)
     fn = _STREAM_CACHE.get(key)
     if fn is not None:
         return fn
@@ -801,6 +826,14 @@ def stream_chunk_engine(cfg: StoreConfig, *, unroll: int = 1,
         _STREAM_COMPILES[0] += 1  # trace-time: once per XLA compile
 
         def shard(state, acc, p, w, wi):
+            if engine == "fused":
+                # Resumable masked mode: pads leave the carried state
+                # (PRNG key included) untouched; the PRNG stays in-loop
+                # because the carried key must advance per real request.
+                return fused_cache_scan(
+                    static, hyper, state, acc, p, w, wi,
+                    n_windows=n_windows, unroll=unroll, masked=True)
+
             def scan_fn(c, req):
                 state, acc = c
                 page, write, win_i = req
@@ -895,6 +928,7 @@ def run_stream_chunked(
     unroll: int = 1,
     n_windows: int = 1,
     window_ids: Optional[np.ndarray] = None,
+    engine: str = "fused",
 ) -> StreamStats:
     """Single-shard chunked replay: :func:`run_stream` semantics, consumed
     ``chunk`` requests at a time through the resumable chunk engine.
@@ -913,7 +947,8 @@ def run_stream_chunked(
     window_ids = np.asarray(window_ids, np.int32)
     if hyper is None:
         hyper = cfg.hyper()
-    eng = stream_chunk_engine(cfg, unroll=unroll, n_windows=n_windows)
+    eng = stream_chunk_engine(cfg, unroll=unroll, n_windows=n_windows,
+                              engine=engine)
     carry = init_stream_carry(cfg, 1, seed=seed, n_windows=n_windows)
     for start in range(0, n, chunk):
         stop = min(start + chunk, n)
